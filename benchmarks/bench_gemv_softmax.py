@@ -1,0 +1,48 @@
+"""Paper §IV-C: GEMV and softmax benchmarks (DNN-kernel workloads)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import F32, P8_0, P16_1
+from repro.core.codec import posit_encode
+from repro.core.pcsr import OperandSlots as OS
+from repro.core.dot import posit_gemv, posit_softmax
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # GEMV 4x4 .. 32x32 (paper range) + a realistic 4096
+    for n in (4, 8, 16, 32, 4096):
+        A = jnp.asarray(rng.normal(0, 1, (n, n)).astype(np.float32))
+        x = jnp.asarray(rng.normal(0, 1, (n,)).astype(np.float32))
+        base = time_fn(jax.jit(lambda A, x: A @ x), A, x)
+        emit(f"gemv/{n}/fp32", base, f"{2 * n * n / base:.1f}MFLOPS")
+        for fmt, label in ((P8_0, "p8_0"), (P16_1, "p16_1")):
+            Ac = posit_encode(A, fmt.nbits, fmt.es)
+            xc = posit_encode(x, fmt.nbits, fmt.es)
+            slots = OS(rs1=fmt, rs2=fmt, rd=F32)
+            f_f = jax.jit(lambda A, x, s=slots: posit_gemv(A, x, s, impl="fused"))
+            f_u = jax.jit(lambda A, x, s=slots: posit_gemv(A, x, s, impl="unfused"))
+            us_f, us_u = time_fn(f_f, Ac, xc), time_fn(f_u, Ac, xc)
+            emit(f"gemv/{n}/{label}/fused", us_f,
+                 f"{2 * n * n / us_f:.1f}MFLOPS vs_fp32={us_f / base:.2f}x")
+            emit(f"gemv/{n}/{label}/unfused_[7]", us_u,
+                 f"fused_speedup={us_u / us_f:.2f}x")
+
+    # softmax 8..128 classes (paper range), batch 1024 rows
+    for c in (8, 32, 128):
+        logits = jnp.asarray(rng.normal(0, 3, (1024, c)).astype(np.float32))
+        base = time_fn(jax.jit(lambda x: jax.nn.softmax(x, -1)), logits)
+        emit(f"softmax/{c}/fp32", base, "-")
+        codes = posit_encode(logits, 16, 1)
+        f = jax.jit(lambda c: posit_softmax(c, P16_1))
+        us = time_fn(f, codes)
+        emit(f"softmax/{c}/p16_1", us, f"vs_fp32={us / base:.2f}x")
+    return True
+
+
+if __name__ == "__main__":
+    run()

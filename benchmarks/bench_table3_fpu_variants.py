@@ -1,0 +1,78 @@
+"""Paper Table III / Fig. 4: cost of adding posit capabilities to the FPU.
+
+ASIC area/delay have no CPU analogue, so each variant's cost is reported as
+  * wall-time overhead vs the FP32 baseline pipeline (delay proxy)
+  * HLO op count of the lowered pipeline (area proxy — structural size of the
+    datapath), clearly labelled a proxy.
+
+Variants mirror the paper's: Baseline (FPU), +P8 (8-bit codecs), +MP
+(8+16-bit muxed), +MP+ES (dynamic exponent size from the pcsr).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.codec import posit_decode, posit_encode
+
+N = 512
+
+
+def _hlo_ops(jitted, *args) -> int:
+    txt = jitted.lower(*args).compile().as_text()
+    return sum(1 for line in txt.splitlines()
+               if "=" in line and not line.strip().startswith(("//", "ENTRY",
+                                                               "HloModule")))
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (N, N)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (N, N)).astype(np.float32))
+    w8 = posit_encode(w, 8, 0)
+    w16 = posit_encode(w, 16, 1)
+
+    variants = {}
+
+    def baseline(x, w):
+        return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    variants["fpu_baseline"] = (jax.jit(baseline), (x, w))
+
+    def p8(x, w8):
+        return jnp.matmul(x, posit_decode(w8, 8, 0),
+                          preferred_element_type=jnp.float32)
+    variants["fpu_p8"] = (jax.jit(p8), (x, w8))
+
+    def mp(x, w8, w16, sel):
+        wa = posit_decode(w8, 8, 0)
+        wb = posit_decode(w16, 16, 1)
+        return jnp.matmul(x, jnp.where(sel, wa, wb),
+                          preferred_element_type=jnp.float32)
+    variants["fpu_mp"] = (jax.jit(mp), (x, w8, w16, jnp.bool_(True)))
+
+    def mp_es(x, w8, w16, sel, es):
+        wa = posit_decode(w8, 8, es)
+        wb = posit_decode(w16, 16, es)
+        return jnp.matmul(x, jnp.where(sel, wa, wb),
+                          preferred_element_type=jnp.float32)
+    variants["fpu_mp_es"] = (jax.jit(mp_es),
+                             (x, w8, w16, jnp.bool_(True), jnp.int32(1)))
+
+    base_us = base_ops = None
+    for name, (fn, args) in variants.items():
+        us = time_fn(fn, *args)
+        ops = _hlo_ops(fn, *args)
+        if name == "fpu_baseline":
+            base_us, base_ops = us, ops
+            emit(f"table3/{name}", us, f"ops={ops}")
+        else:
+            emit(f"table3/{name}", us,
+                 f"ops={ops} time+{(us / base_us - 1) * 100:.1f}% "
+                 f"area_proxy+{(ops / base_ops - 1) * 100:.1f}%")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""Paper Table IV: GEMM throughput, ours (fused codec) vs [7] (conversion
+instructions), for FP32 baseline / P(16,1) / P(8,0), plus the scratchpad-
+memory-savings table.
+
+The paper's cycle-accurate quantity is reproduced two ways:
+  * measured: wall-time of the XLA-fused vs barrier-separated pipelines
+    (CPU timings are indicative; the *ratio* is the paper's claim)
+  * analytic: operand bytes moved through memory per GEMM — deterministic,
+    hardware-independent, and the actual mechanism behind [7]'s slowdown
+    (two extra conversion round-trips per operand).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import F32, P8_0, P16_1
+from repro.core.codec import posit_encode
+from repro.core.pcsr import OperandSlots as OS
+from repro.kernels.posit_gemm.ops import gemm
+
+SIZES = (4, 8, 12, 16, 20, 256, 1024)
+
+
+def _operands(n, fmt, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(0, 1, (n, n)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (n, n)).astype(np.float32))
+    if fmt is F32:
+        return a, b
+    return (posit_encode(a, fmt.nbits, fmt.es),
+            posit_encode(b, fmt.nbits, fmt.es))
+
+
+def _bytes_moved(n, fmt, impl) -> int:
+    """HBM traffic model: operands in + result out (+ [7]'s decode round trip:
+    read codes, write f32, read f32 again; and encode round trip on output)."""
+    el = 4 if fmt is F32 else fmt.storage_bytes
+    base = 2 * n * n * el + n * n * el
+    if impl == "unfused" and fmt is not F32:
+        base += 2 * (n * n * (el + 4 + 4))  # decode pass per operand
+        base += n * n * (4 + 4 + el)        # encode pass on result
+    return base
+
+
+def run():
+    for fmt, label in ((F32, "fp32"), (P16_1, "p16_1"), (P8_0, "p8_0")):
+        slots = OS(rs1=fmt, rs2=fmt, rd=fmt)
+        for n in SIZES:
+            a, b = _operands(n, fmt)
+            fns = {}
+            for impl in ("xla", "unfused") if fmt is not F32 else ("xla",):
+                f = jax.jit(lambda a, b, i=impl: gemm(a, b, slots, impl=i))
+                us = time_fn(f, a, b)
+                flops = 2 * n ** 3
+                fns[impl] = us
+                mflops = flops / us  # us -> MFLOPS directly
+                emit(f"table4/gemm{n}x{n}/{label}/{impl}", us, f"{mflops:.1f}MFLOPS")
+            if fmt is not F32:
+                ratio = fns["unfused"] / fns["xla"]
+                br = _bytes_moved(n, fmt, "unfused") / _bytes_moved(n, fmt, "xla")
+                emit(f"table4/gemm{n}x{n}/{label}/fused_speedup",
+                     fns["xla"], f"measured={ratio:.2f}x bytes={br:.2f}x")
+
+    # ours vs fp32 baseline at same sizes (paper: ~1.0x, pcsr config is free)
+    for n in (256, 1024):
+        af, bf = _operands(n, F32)
+        base = time_fn(jax.jit(lambda a, b: gemm(a, b, OS(rs1=F32, rs2=F32, rd=F32))), af, bf)
+        a8, b8 = _operands(n, P8_0)
+        s8 = OS(rs1=P8_0, rs2=P8_0, rd=P8_0)
+        ours = time_fn(jax.jit(lambda a, b: gemm(a, b, s8, impl="xla")), a8, b8)
+        emit(f"table4/posit_vs_fp32_overhead/{n}", ours,
+             f"{ours / base:.2f}x_of_fp32")
+
+    # scratchpad-savings table: max NxN GEMM (3 operands resident) per budget
+    for budget_kb, name in ((8, "8KB"), (64, "64KB")):
+        budget = budget_kb * 1024
+        row = {}
+        for fmt, label in ((F32, "fp32"), (P16_1, "p16_1"), (P8_0, "p8_0")):
+            el = 4 if fmt is F32 else fmt.storage_bytes
+            n = int((budget / (3 * el)) ** 0.5)
+            row[label] = n
+        emit(f"table4/max_gemm_in_{name}", 0.0,
+             f"fp32={row['fp32']} p16={row['p16_1']} p8={row['p8_0']}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1d,table4,...]
+
+Output format: ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = {
+    "fig1d": "benchmarks.bench_fig1d_accuracy",        # Fig. 1(d) accuracy
+    "table3": "benchmarks.bench_table3_fpu_variants",  # Table III / Fig. 4
+    "table4": "benchmarks.bench_table4_gemm",          # Table IV GEMM + memory
+    "gemv_softmax": "benchmarks.bench_gemv_softmax",   # §IV-C
+    "table2": "benchmarks.bench_table2_features",      # Table II SOTA baselines
+    "collectives": "benchmarks.bench_collectives",     # beyond-paper
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        mod_name = BENCHES[name]
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the paper's mechanisms in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    F32, P8_0, P16_1, OperandSlots, TransPolicy,
+    fcvt_p16_s, fcvt_p8_p16, fcvt_s_p16,
+    posit_decode, posit_dot, posit_encode,
+)
+
+# 1. The codecs (paper Fig. 2(b)): FP32 <-> posit, bit-exact, saturating.
+x = jnp.asarray(np.linspace(-3, 3, 8, dtype=np.float32))
+codes = posit_encode(x, 16, es=1)          # -> uint16 posit codes
+back = posit_decode(codes, 16, es=1)       # decode is exact
+print("fp32 :", x)
+print("p16,1:", back, f"(storage: {codes.dtype}, {codes.nbytes} bytes)")
+
+# 2. Dynamic es — one executable, es is data (the pcsr pes field).
+import jax
+enc = jax.jit(lambda v, es: posit_encode(v, 16, es))
+for es in (0, 1, 2, 3):
+    q = posit_decode(enc(x, jnp.int32(es)), 16, es)
+    print(f"es={es}: max_rel_err={float(jnp.nanmax(jnp.abs((q - x) / x))):.2e}")
+
+# 3. Table-I conversion instructions.
+p16 = fcvt_p16_s(x, es=1)                  # fcvt.p16.s
+f32 = fcvt_s_p16(p16, es=1)                # fcvt.s.p16
+p8 = fcvt_p8_p16(p16, es_in=1, es_out=0)   # fcvt.p8.p16 (cross precision+es)
+print("p16->p8 :", posit_decode(p8, 8, 0))
+
+# 4. Mixed-format GEMM through the pcsr operand slots (posit A x float B).
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.normal(0, 1, (4, 8)).astype(np.float32))
+B = jnp.asarray(rng.normal(0, 1, (8, 4)).astype(np.float32))
+Ac = posit_encode(A, 8, 0)
+y = posit_dot(Ac, B, OperandSlots(rs1=P8_0, rs2=F32, rd=F32))
+print("mixed-format GEMM max err:",
+      float(jnp.max(jnp.abs(y - posit_decode(Ac, 8, 0) @ B))))
+
+# 5. A whole-run policy (weights in p16, KV cache in p8, bf16 datapath).
+policy = TransPolicy.from_names(weights="p16_1", kv_cache="p8_0",
+                                compute_dtype="bf16")
+print("policy:", policy.describe())

@@ -1,0 +1,76 @@
+"""Serving example: batched generation with a posit8 KV cache.
+
+    PYTHONPATH=src python examples/serve_posit_kv.py
+
+Compares f32 / bf16 / posit8 KV-cache policies on the same prompts: identical
+greedy tokens (or near-identical — KV rounding may flip a borderline argmax),
+4x smaller cache than f32 — the paper's scratchpad-savings at the serving
+bottleneck.
+"""
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core.pcsr import TransPolicy
+from repro.models.registry import build_model
+
+ARCH = "internvl2-2b"   # VLM serving: patch prefix + text decode
+GEN = 24
+
+
+def cache_nbytes(cache):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
+               if hasattr(x, "size"))
+
+
+def main():
+    cfg = get_arch(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    B, PROMPT = 4, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, PROMPT)))
+    patches = jnp.asarray(
+        rng.normal(0, 1, (B, cfg.n_patches, cfg.d_model)).astype(np.float32))
+
+    results = {}
+    for name, policy in {
+        "f32-kv": TransPolicy(),
+        "bf16-kv": TransPolicy(compute_dtype="bf16"),
+        "p8-kv": TransPolicy.from_names(kv_cache="p8_0"),
+    }.items():
+        logits, cache = model.prefill(params, tokens, policy,
+                                      S_max=PROMPT + GEN + cfg.n_patches,
+                                      patch_embeds=patches)
+        decode = jax.jit(lambda p, t, c: model.decode_step(p, t, c, policy))
+        tok = jnp.argmax(logits, -1)
+        outs = [tok]
+        t0 = time.time()
+        for _ in range(GEN - 1):
+            logits, cache = decode(params, tok, cache)
+            tok = jnp.argmax(logits, -1)
+            outs.append(tok)
+        jax.block_until_ready(tok)
+        results[name] = {
+            "tokens": np.stack([np.asarray(t) for t in outs], 1).tolist(),
+            "kv_bytes": cache_nbytes(cache),
+            "tok_per_s": round(B * (GEN - 1) / (time.time() - t0), 1),
+        }
+
+    f32 = results["f32-kv"]
+    for name, r in results.items():
+        match = np.mean(np.asarray(r["tokens"]) == np.asarray(f32["tokens"]))
+        print(json.dumps({
+            "policy": name, "kv_bytes": r["kv_bytes"],
+            "kv_vs_f32": f"{r['kv_bytes'] / f32['kv_bytes']:.2f}x",
+            "greedy_token_match_vs_f32": f"{float(match):.3f}",
+            "tok_per_s": r["tok_per_s"],
+        }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Assigned-architecture registry: get_arch(name) / list_archs() / SHAPES.
+
+Shapes (assignment): train_4k, prefill_32k, decode_32k, long_500k. long_500k
+runs only for archs with a sub-quadratic path (supports_long_context);
+DESIGN.md §6 records the skips.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelCfg, ShapeCfg
+
+ARCH_IDS = (
+    "olmoe-1b-7b", "granite-moe-3b-a800m", "zamba2-7b", "yi-34b",
+    "phi3-mini-3.8b", "gemma3-4b", "qwen2.5-14b", "whisper-medium",
+    "xlstm-125m", "internvl2-2b",
+)
+
+SHAPES = (
+    ShapeCfg("train_4k", "train", 4096, 256),
+    ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    ShapeCfg("decode_32k", "decode", 32768, 128),
+    ShapeCfg("long_500k", "decode", 524288, 1),
+)
+
+
+def get_shape(name: str) -> ShapeCfg:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def get_arch(name: str) -> ModelCfg:
+    mod = importlib.import_module("repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCH_IDS
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) assignment cells; skips filtered unless requested."""
+    for a in ARCH_IDS:
+        cfg = get_arch(a)
+        for s in SHAPES:
+            skip = s.name == "long_500k" and not cfg.supports_long_context
+            if include_skipped or not skip:
+                yield cfg, s, skip

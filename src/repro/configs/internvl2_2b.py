@@ -1,0 +1,10 @@
+"""InternVL2-2B: InternViT frontend (stubbed to patch embeddings) +
+InternLM2-1.8B LM backbone [arXiv:2404.16821; hf]."""
+from repro.configs.base import ModelCfg
+
+CONFIG = ModelCfg(
+    name="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv=8, d_ff=8192, vocab=92553,
+    n_patches=256,
+    supports_long_context=False,  # full attention -> long_500k skipped
+)

@@ -1,0 +1,15 @@
+"""Whisper-medium: enc-dec, conv frontend stubbed to precomputed frame
+embeddings (B, 1500, d) [arXiv:2212.04356].
+
+long_500k is architecturally meaningless (decoder limit 448) -> skipped.
+decode_32k stresses the self-KV cache beyond the architectural limit as a
+synthetic cell (positions wrap past MAX_TGT); noted in EXPERIMENTS.md.
+"""
+from repro.configs.base import ModelCfg
+
+CONFIG = ModelCfg(
+    name="whisper-medium", family="whisper",
+    n_layers=24, d_model=1024, n_heads=16, n_kv=16, d_ff=4096, vocab=51865,
+    enc_layers=24, enc_frames=1500, max_target_positions=448,
+    supports_long_context=False,
+)

@@ -1,0 +1,13 @@
+"""xLSTM-125M: mLSTM + sLSTM blocks (7:1-style interleave) [arXiv:2405.04517].
+
+d_ff=0 per assignment: xLSTM blocks carry their own up/down projections
+(mLSTM pf=2, sLSTM gated FFN 4/3) instead of a separate transformer FFN.
+"""
+from repro.configs.base import ModelCfg
+
+CONFIG = ModelCfg(
+    name="xlstm-125m", family="xlstm",
+    n_layers=12, d_model=768, n_heads=4, n_kv=4, d_ff=0, vocab=50304,
+    slstm_every=4,
+    supports_long_context=True,  # recurrent: O(1) state per token
+)

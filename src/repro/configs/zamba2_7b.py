@@ -1,0 +1,14 @@
+"""Zamba2-7B: Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+Simplification noted in DESIGN.md: one shared attention+MLP block applied
+every `shared_attn_every` Mamba2 layers (Zamba2 alternates two shared blocks
+with per-use LoRA; weight-tying is preserved, LoRA deltas are not).
+"""
+from repro.configs.base import ModelCfg
+
+CONFIG = ModelCfg(
+    name="zamba2-7b", family="zamba",
+    n_layers=81, d_model=3584, n_heads=32, n_kv=32, d_ff=14336, vocab=32000,
+    ssm_state=64, ssm_head_dim=64, shared_attn_every=6,
+    supports_long_context=True,  # SSM path is O(1)/token; shared attn is periodic
+)

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: unified posit/IEEE-754 transprecision.
+
+Public API:
+  formats:  PositFmt, FloatFmt, get_format, P8_0..P16_3, F32, BF16
+  codec:    posit_decode, posit_encode, quantize (bit-exact, dynamic es)
+  pcsr:     OperandSlots (per-op), TransPolicy (per-run)
+  fcvt:     Table-I conversion ops (static or traced es)
+  alu:      true-posit integer add/mul (PERCIVAL-baseline)
+  dot:      posit_dot / posit_matmul_wx (fused vs unfused dataflows)
+"""
+from repro.core.types import (  # noqa: F401
+    BF16, ES_MAX, ES_MIN, F16, F32, Fmt, FloatFmt, P8_0, P8_1, P8_2, P8_3,
+    P16_0, P16_1, P16_2, P16_3, PositFmt, compute_dtype_for, get_format,
+)
+from repro.core.codec import (  # noqa: F401
+    decode, encode, posit_decode, posit_decode_to, posit_encode, quantize,
+)
+from repro.core.pcsr import (  # noqa: F401
+    FP32_POLICY, P8_SERVE, P8_WEIGHTS, P16_TRAIN, P16_WEIGHTS, ROLES,
+    OperandSlots, TransPolicy,
+)
+from repro.core.convert import (  # noqa: F401
+    fcvt_p8_p8, fcvt_p8_p16, fcvt_p8_s, fcvt_p16_p8, fcvt_p16_p16, fcvt_p16_s,
+    fcvt_s_p8, fcvt_s_p16,
+)
+from repro.core.alu import posit_add, posit_mul, posit_sub  # noqa: F401
+from repro.core.dot import (  # noqa: F401
+    posit_dot, posit_gemv, posit_matmul_wx, posit_softmax,
+)

@@ -1,0 +1,137 @@
+"""Pure-posit integer ALU — the PERCIVAL-style "parallel PAU" baseline.
+
+The paper argues *against* this design point: PERCIVAL [5] / CLARINET [6] embed
+a complete posit arithmetic unit next to the FPU (+132% LUTs / +135% FFs at FPU
+level, Table II). To quantify that trade-off in our setting we implement true
+posit arithmetic — add and multiply computed entirely in integer bit
+manipulation, never touching a float — and benchmark it against the paper's
+codec+FPU path (decode -> MXU float op -> encode).
+
+Numerics note (documented fidelity gap, DESIGN.md §2): a true PAU rounds the
+*exact* sum/product once. The paper's codec+FPU path rounds in FP32 first and
+in the posit encode second (double rounding). For all supported formats the
+product path is f32-exact (<=14-bit significands, product <=28 bits < 24? no —
+28 > 24), so the two designs can differ in the last bit; this module is the
+single-rounding reference, validated against ``ref_codec.ref_add/ref_mul``.
+
+Layout invariants (all uint32/int32, no int64):
+  * significands carry the hidden bit at bit SIGW-1 (SIGW = 6 for p8, 14 for p16)
+  * the add datapath places the hidden bit at bit 27, leaving 14 guard bits —
+    alignment shifts <= 14 are exact, larger shifts set a sticky flag handled
+    with the floor/fraction trick so RNE stays exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.codec import EsLike, _encode_fields, _es_u32, _u32, _U32
+
+_HID = 27  # hidden-bit position in the add datapath
+
+
+def _sigw(nbits: int) -> int:
+    return 6 if nbits == 8 else 14
+
+
+def _decode_fields(codes: jax.Array, nbits: int, esl: jax.Array):
+    """posit bits -> (neg, scale:int32, sig:uint32 hidden@SIGW-1, is_zero, is_nar)."""
+    n = nbits
+    c = codes.astype(_U32) & _u32((1 << n) - 1)
+    is_zero = c == 0
+    is_nar = c == _u32(1 << (n - 1))
+    neg = ((c >> _u32(n - 1)) & 1) == 1
+    absc = jnp.where(neg, (_u32(1 << n) - c) & _u32((1 << n) - 1), c)
+    y = absc << _u32(33 - n)
+    r0 = (absc >> _u32(n - 2)) & _u32(1)
+    z = jnp.where(r0 == 1, ~y, y)
+    m = jnp.minimum(lax.clz(z.astype(jnp.int32)).astype(jnp.int32), n - 1)
+    k = jnp.where(r0 == 1, m - 1, -m)
+    rem = y << _u32(m + 1)
+    e = ((rem >> _u32(24)) >> (_u32(8) - esl)).astype(jnp.int32)
+    frac_la = rem << esl
+    scale = k * (jnp.int32(1) << esl.astype(jnp.int32)) + e
+    sigw = _sigw(n)
+    sig = (_u32(1) << _u32(sigw - 1)) | (frac_la >> _u32(32 - (sigw - 1)))
+    return neg, scale, sig, is_zero, is_nar
+
+
+def posit_mul(a: jax.Array, b: jax.Array, nbits: int, es: EsLike) -> jax.Array:
+    """True posit multiply: exact product, single RNE rounding."""
+    n = nbits
+    esl = _es_u32(es)
+    na, sa, ga, za, ra = _decode_fields(a, n, esl)
+    nb, sb, gb, zb, rb = _decode_fields(b, n, esl)
+
+    neg = na ^ nb
+    scale = sa + sb
+    p = ga * gb  # <= 28 bits: [2^(2w-2), 2^(2w-1))
+    w = _sigw(n)
+    hi = p >= (_u32(1) << _u32(2 * w - 1))  # product in [2,4)
+    scale = scale + hi.astype(jnp.int32)
+    # drop the hidden bit, left-align the fraction at bit 31
+    frac = jnp.where(hi, p - (_u32(1) << _u32(2 * w - 1)), p - (_u32(1) << _u32(2 * w - 2)))
+    frac_la = jnp.where(hi, frac << _u32(32 - (2 * w - 1)), frac << _u32(32 - (2 * w - 2)))
+    sticky = jnp.zeros(p.shape, dtype=bool)
+
+    code = _encode_fields(neg, scale, frac_la, sticky, n, esl)
+    code = jnp.where(za | zb, _u32(0), code)
+    code = jnp.where(ra | rb, _u32(1 << (n - 1)), code)
+    return code.astype(jnp.uint8 if n == 8 else jnp.uint16)
+
+
+def posit_add(a: jax.Array, b: jax.Array, nbits: int, es: EsLike) -> jax.Array:
+    """True posit add: exact sum, single RNE rounding (floor/fraction sticky)."""
+    n = nbits
+    esl = _es_u32(es)
+    na, sa, ga, za, ra = _decode_fields(a, n, esl)
+    nb, sb, gb, zb, rb = _decode_fields(b, n, esl)
+    w = _sigw(n)
+
+    # promote significands: hidden bit at _HID (14 guard bits below)
+    ma = (ga << _u32(_HID - (w - 1))).astype(jnp.int32)
+    mb = (gb << _u32(_HID - (w - 1))).astype(jnp.int32)
+
+    a_big = (sa > sb) | ((sa == sb) & (ma >= mb))
+    s_hi = jnp.where(a_big, sa, sb)
+    s_lo = jnp.where(a_big, sb, sa)
+    m_hi = jnp.where(a_big, ma, mb)
+    m_lo = jnp.where(a_big, mb, ma)
+    n_hi = jnp.where(a_big, na, nb)
+    n_lo = jnp.where(a_big, nb, na)
+
+    shift = jnp.minimum(s_hi - s_lo, 31).astype(_U32)
+    lost = (m_lo.astype(_U32) & ((_u32(1) << shift) - 1)) != 0
+    m_lo_sh = (m_lo.astype(_U32) >> shift).astype(jnp.int32)
+
+    sgn_hi = jnp.where(n_hi, jnp.int32(-1), jnp.int32(1))
+    sgn_lo = jnp.where(n_lo, jnp.int32(-1), jnp.int32(1))
+    v = sgn_hi * m_hi + sgn_lo * m_lo_sh
+    # exact value = v + sgn_lo * eps, eps in (0,1) iff lost. Take floor:
+    v = v - (lost & n_lo).astype(jnp.int32)
+    neg_r = v < 0
+    mag = jnp.where(neg_r, -v, v).astype(_U32)
+    # if floor < 0 and a fraction exists, magnitude = |floor| - (1 - eps')
+    mag = mag - (lost & neg_r).astype(_U32)
+    sticky = lost
+
+    exact_zero = (mag == 0) & ~sticky
+    mag_safe = jnp.maximum(mag, _u32(1))
+    h = (31 - lax.clz(mag_safe.astype(jnp.int32))).astype(jnp.int32)  # MSB position
+    scale = s_hi + (h - _HID)
+    frac_la = (mag_safe << (_u32(31) - h.astype(_U32))) << 1
+
+    code = _encode_fields(neg_r, scale, frac_la, sticky, n, esl)
+    code = jnp.where(exact_zero, _u32(0), code)
+    code = jnp.where(za, b.astype(_U32) & _u32((1 << n) - 1), code)
+    code = jnp.where(zb & ~za, a.astype(_U32) & _u32((1 << n) - 1), code)
+    code = jnp.where(ra | rb, _u32(1 << (n - 1)), code)
+    return code.astype(jnp.uint8 if n == 8 else jnp.uint16)
+
+
+def posit_sub(a: jax.Array, b: jax.Array, nbits: int, es: EsLike) -> jax.Array:
+    """a - b via two's-complement negation of b (posit negation is exact)."""
+    n = nbits
+    nb = ((_u32(1 << n) - b.astype(_U32)) & _u32((1 << n) - 1))
+    return posit_add(a, nb.astype(b.dtype), n, es)

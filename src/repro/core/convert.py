@@ -1,0 +1,78 @@
+"""Table I — custom fcvt.* conversion ops (the paper's ISA extension, as JAX ops).
+
+The paper adds three instruction families in the F-extension encoding space
+(funct5 0x10 / 0x12 / 0x11), each with an ``es`` field that selects either a
+*static* es (encoded in the instruction) or the *dynamic* es held in pcsr.
+Here: every op takes ``es`` as a Python int (static — "encoded in the
+instruction") or a traced int32 scalar (dynamic — "read from pcsr"); the traced
+form compiles once and serves all es values.
+
+  fcvt.p8.s   / fcvt.p16.s    : FP32  -> P8/P16      -> fcvt_p8_s,  fcvt_p16_s
+  fcvt.s.p8   / fcvt.s.p16    : P8/P16 -> FP32       -> fcvt_s_p8,  fcvt_s_p16
+  fcvt.p8.p8  / fcvt.p8.p16   : posit -> posit       -> fcvt_p8_p8, fcvt_p8_p16
+  fcvt.p16.p8 / fcvt.p16.p16    (cross precision/es)   fcvt_p16_p8, fcvt_p16_p16
+
+posit->posit conversion passes through the FP32 datapath (decode is exact, so
+there is exactly one rounding — bit-identical to exact-value conversion; see
+ref_codec.ref_convert).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.codec import EsLike, posit_decode, posit_encode
+
+__all__ = [
+    "fcvt_p8_s", "fcvt_p16_s", "fcvt_s_p8", "fcvt_s_p16",
+    "fcvt_p8_p8", "fcvt_p8_p16", "fcvt_p16_p8", "fcvt_p16_p16",
+]
+
+
+# ---- fcvt.pfmt.fmt : FP32 -> posit (funct5=0x10) --------------------------------
+
+def fcvt_p8_s(x: jax.Array, es: EsLike = 0) -> jax.Array:
+    """FP32 -> P(8, es)."""
+    return posit_encode(x, 8, es)
+
+
+def fcvt_p16_s(x: jax.Array, es: EsLike = 1) -> jax.Array:
+    """FP32 -> P(16, es)."""
+    return posit_encode(x, 16, es)
+
+
+# ---- fcvt.fmt.pfmt : posit -> FP32 (funct5=0x12) --------------------------------
+
+def fcvt_s_p8(codes: jax.Array, es: EsLike = 0) -> jax.Array:
+    """P(8, es) -> FP32 (exact)."""
+    return posit_decode(codes, 8, es)
+
+
+def fcvt_s_p16(codes: jax.Array, es: EsLike = 1) -> jax.Array:
+    """P(16, es) -> FP32 (exact)."""
+    return posit_decode(codes, 16, es)
+
+
+# ---- fcvt.pfmt.pfmt : posit -> posit (funct5=0x11) ------------------------------
+
+def _pp(codes, n_in, es_in, n_out, es_out):
+    return posit_encode(posit_decode(codes, n_in, es_in), n_out, es_out)
+
+
+def fcvt_p8_p8(codes: jax.Array, es_in: EsLike, es_out: EsLike) -> jax.Array:
+    """P(8, es_in) -> P(8, es_out): dynamic-es re-rounding within one precision."""
+    return _pp(codes, 8, es_in, 8, es_out)
+
+
+def fcvt_p8_p16(codes: jax.Array, es_in: EsLike = 1, es_out: EsLike = 0) -> jax.Array:
+    """P(16, es_in) -> P(8, es_out). (rd is p8; rs1 is p16 — paper naming order.)"""
+    return _pp(codes, 16, es_in, 8, es_out)
+
+
+def fcvt_p16_p8(codes: jax.Array, es_in: EsLike = 0, es_out: EsLike = 1) -> jax.Array:
+    """P(8, es_in) -> P(16, es_out). Exact (p8 values are a subset of p16)."""
+    return _pp(codes, 8, es_in, 16, es_out)
+
+
+def fcvt_p16_p16(codes: jax.Array, es_in: EsLike, es_out: EsLike) -> jax.Array:
+    """P(16, es_in) -> P(16, es_out)."""
+    return _pp(codes, 16, es_in, 16, es_out)

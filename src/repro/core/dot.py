@@ -1,0 +1,126 @@
+"""Posit GEMM front door — the paper's Fig. 2(b) dataflow at op granularity.
+
+Two dataflows, matching the paper's SoC comparison (Table IV):
+
+* ``fused``  (ours): posit operands are decoded tile-by-tile *inside* the matmul
+  (Pallas kernel on TPU; XLA-fused jnp path elsewhere), the MXU/FPU computes in
+  float, and the result is optionally encoded on the way out. One HBM read of
+  1–2-byte posit words per operand — the codec rides along for free.
+* ``unfused`` ([7]-style, PPU-light): a *separate* conversion pass materializes
+  the full decoded f32 tensor in HBM before the matmul (and a separate encode
+  pass after). Two extra HBM round-trips per operand — the analogue of [7]'s two
+  extra conversion instructions per operation, which cost it 2.54x throughput.
+
+Operand formats come from an ``OperandSlots`` pcsr (per-slot pfmt/pprec/pes):
+float slots bypass the codec entirely (IEEE-754 compatibility), posit slots
+decode with their (possibly traced) es. Mixed posit x float GEMMs fall out.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import EsLike, posit_decode, posit_encode
+from repro.core.pcsr import OperandSlots
+from repro.core.types import Fmt, PositFmt, compute_dtype_for
+
+
+def _decode_operand(x: jax.Array, fmt: Fmt, es: Optional[EsLike], compute_dtype) -> jax.Array:
+    if isinstance(fmt, PositFmt):
+        return posit_decode(x, fmt.nbits, fmt.es if es is None else es).astype(compute_dtype)
+    return x.astype(compute_dtype)
+
+
+def _encode_result(y: jax.Array, fmt: Fmt, es: Optional[EsLike]) -> jax.Array:
+    if isinstance(fmt, PositFmt):
+        return posit_encode(y, fmt.nbits, fmt.es if es is None else es)
+    return y.astype(compute_dtype_for(fmt))
+
+
+def posit_dot(
+    a: jax.Array,
+    b: jax.Array,
+    slots: OperandSlots,
+    *,
+    es_a: Optional[EsLike] = None,
+    es_b: Optional[EsLike] = None,
+    es_out: Optional[EsLike] = None,
+    impl: str = "fused",
+    compute_dtype=None,
+    dimension_numbers=None,
+) -> jax.Array:
+    """General dot with per-operand pcsr formats.
+
+    a/b: float arrays, or uint8/uint16 posit-code arrays per ``slots``.
+    impl: "fused" (ours) | "unfused" ([7]-style baseline).
+    Accumulation is always f32 (the MXU/FPU datapath), like the paper's FP32 FPU.
+    """
+    if impl not in ("fused", "unfused"):
+        raise ValueError(f"impl must be fused|unfused, got {impl}")
+    if compute_dtype is None:
+        # lossless-decode dtype: bf16 only if *both* operands allow it
+        ca = compute_dtype_for(slots.rs1)
+        cb = compute_dtype_for(slots.rs2)
+        compute_dtype = ca if ca == cb else jnp.float32
+
+    if impl == "unfused":
+        # Materialize full decoded tensors in HBM (optimization barrier keeps XLA
+        # from re-fusing them into the matmul — this is the point of the baseline).
+        af = _decode_operand(a, slots.rs1, es_a, compute_dtype)
+        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype)
+        af = jax.lax.optimization_barrier(af)
+        bf = jax.lax.optimization_barrier(bf)
+    else:
+        af = _decode_operand(a, slots.rs1, es_a, compute_dtype)
+        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype)
+
+    if dimension_numbers is None:
+        y = jnp.matmul(af, bf, preferred_element_type=jnp.float32)
+    else:
+        y = jax.lax.dot_general(af, bf, dimension_numbers, preferred_element_type=jnp.float32)
+
+    if impl == "unfused":
+        y = jax.lax.optimization_barrier(y)
+    return _encode_result(y, slots.rd, es_out)
+
+
+def posit_matmul_wx(
+    x: jax.Array,
+    w_codes: jax.Array,
+    w_fmt: PositFmt,
+    *,
+    es: Optional[EsLike] = None,
+    compute_dtype=None,
+    out_dtype=None,
+) -> jax.Array:
+    """x @ decode(W) — the weights-only fast path used by TransLinear.
+
+    x: (..., K) float; w_codes: (K, N) posit codes. Output float (..., N).
+    For p8 weights the decode is bf16-exact, so the MXU runs at full bf16 speed.
+    """
+    if compute_dtype is None:
+        compute_dtype = compute_dtype_for(w_fmt)
+    wf = posit_decode(w_codes, w_fmt.nbits, w_fmt.es if es is None else es)
+    y = jnp.matmul(
+        x.astype(compute_dtype),
+        wf.astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(out_dtype if out_dtype is not None else x.dtype)
+
+
+# GEMV / elementwise helpers for the paper's §IV-C benchmarks --------------------
+
+def posit_gemv(A: jax.Array, x: jax.Array, slots: OperandSlots, *, impl: str = "fused"):
+    return posit_dot(A, x[..., None], slots, impl=impl)[..., 0]
+
+
+def posit_softmax(codes: jax.Array, fmt: PositFmt, *, es: Optional[EsLike] = None,
+                  axis: int = -1) -> jax.Array:
+    """softmax over posit-stored logits, result re-encoded (paper §IV-C)."""
+    x = posit_decode(codes, fmt.nbits, fmt.es if es is None else es)
+    y = jax.nn.softmax(x, axis=axis)
+    return posit_encode(y, fmt.nbits, fmt.es if es is None else es)

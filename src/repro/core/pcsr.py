@@ -1,0 +1,118 @@
+"""PCSR — the framework analogue of the paper's posit control & status register.
+
+The hardware pcsr (paper Fig. 2(c)) holds, for three input operand slots and one
+output slot:
+    pfmt  (1 bit)  — posit vs IEEE float (bypass the codec entirely)
+    pprec (1 bit)  — 8- vs 16-bit posit
+    pes   (3 bits) — exponent size
+
+Here the same runtime knobs are carried as a policy object. Two layers:
+
+* ``OperandSlots`` — the literal pcsr: formats for (rs1, rs2, rs3, rd) of a
+  single op. Used by ``repro.core.dot`` for mixed-format GEMMs.
+* ``TransPolicy`` — the systems-level extension: which format each *tensor
+  role* in a model uses (weights / activations / gradients / KV cache /
+  optimizer moments / collectives / checkpoint). This is what a training or
+  serving run is configured with.
+
+``es`` values are kept as plain ints here; ops lower them as traced scalars so
+changing es at runtime does not retrace (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.types import BF16, F32, Fmt, PositFmt, get_format
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSlots:
+    """Per-op format config: 3 input slots + 1 output slot (the literal pcsr)."""
+
+    rs1: Fmt = F32
+    rs2: Fmt = F32
+    rs3: Fmt = F32  # fused-op third operand (e.g. addend of FMA / bias)
+    rd: Fmt = F32
+
+    @classmethod
+    def uniform(cls, fmt: Fmt) -> "OperandSlots":
+        return cls(rs1=fmt, rs2=fmt, rs3=fmt, rd=fmt)
+
+    def encode_bits(self) -> int:
+        """Pack into the paper's 4x(1+1+3)-bit register layout (for display)."""
+        word = 0
+        for i, f in enumerate((self.rs1, self.rs2, self.rs3, self.rd)):
+            pfmt = 1 if isinstance(f, PositFmt) else 0
+            pprec = 1 if (isinstance(f, PositFmt) and f.nbits == 16) else 0
+            pes = f.es if isinstance(f, PositFmt) else 0
+            word |= pfmt << i
+            word |= pprec << (4 + i)
+            word |= pes << (8 + 3 * i)
+        return word
+
+
+# Tensor roles a policy can assign a storage format to.
+ROLES = (
+    "weights",        # linear-layer parameters at rest / on the FSDP wire
+    "activations",    # inter-layer activations (residual stream stays compute dtype)
+    "gradients",      # gradient transport (cross-pod all-reduce payload)
+    "kv_cache",       # attention KV cache at rest in HBM
+    "optimizer",      # Adam moments at rest
+    "collectives",    # generic collective payloads (compressed psum)
+    "checkpoint",     # on-disk format
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransPolicy:
+    """Which storage format each tensor role uses. ``None`` = native compute dtype.
+
+    This is the whole-run pcsr: e.g. P16 weights + P8 KV cache + P16 gradient
+    compression, while compute stays on the MXU in bf16/f32 (the paper's FPU).
+    """
+
+    weights: Optional[PositFmt] = None
+    activations: Optional[PositFmt] = None
+    gradients: Optional[PositFmt] = None
+    kv_cache: Optional[PositFmt] = None
+    optimizer: Optional[PositFmt] = None
+    collectives: Optional[PositFmt] = None
+    checkpoint: Optional[PositFmt] = None
+    compute_dtype: str = "f32"  # "f32" | "bf16" — the FPU-datapath dtype
+
+    def fmt_for(self, role: str) -> Optional[PositFmt]:
+        if role not in ROLES:
+            raise KeyError(f"unknown tensor role {role!r}; known: {ROLES}")
+        return getattr(self, role)
+
+    @classmethod
+    def from_names(cls, compute_dtype: str = "f32", **roles: Optional[str]) -> "TransPolicy":
+        kw = {}
+        for role, name in roles.items():
+            if name is None or name == "none":
+                kw[role] = None
+                continue
+            fmt = get_format(name)
+            if not isinstance(fmt, PositFmt):
+                raise ValueError(f"role {role} must be a posit format or none, got {name}")
+            kw[role] = fmt
+        return cls(compute_dtype=compute_dtype, **kw)
+
+    def describe(self) -> str:
+        parts = [f"compute={self.compute_dtype}"]
+        for role in ROLES:
+            f = self.fmt_for(role)
+            parts.append(f"{role}={f.name if f else '-'}")
+        return " ".join(parts)
+
+
+# Canonical policies used across examples/benchmarks -----------------------------
+FP32_POLICY = TransPolicy()  # pure IEEE path: every codec bypassed
+BF16_COMPUTE = TransPolicy(compute_dtype="bf16")
+P16_WEIGHTS = TransPolicy.from_names(weights="p16_1")
+P8_WEIGHTS = TransPolicy.from_names(weights="p8_0", compute_dtype="bf16")
+P8_SERVE = TransPolicy.from_names(weights="p8_0", kv_cache="p8_0", compute_dtype="bf16")
+P16_TRAIN = TransPolicy.from_names(
+    weights="p16_1", gradients="p16_1", optimizer="p16_1", checkpoint="p16_1"
+)

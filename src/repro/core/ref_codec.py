@@ -1,0 +1,160 @@
+"""Pure-Python scalar posit codec oracle.
+
+Deliberately slow and obviously correct: integer/Fraction arithmetic only, one
+value at a time. Everything else in the framework (vectorized JAX codec, Pallas
+kernels, the integer ALU) is validated against this module.
+
+Contract (posit standard 2022 semantics, matching the paper's hardware):
+  * P(n, es): sign | regime | exponent(es bits) | fraction; two's-complement
+    negation; 0b0..0 == 0; 0b10..0 == NaR.
+  * decode is exact (every P(n<=16, es<=3) value is an exact binary64/32 value).
+  * encode rounds to nearest-even **on the posit encoding**, with saturation:
+    |x| >= maxpos -> +-maxpos (never NaR), 0 < |x| <= minpos -> +-minpos (never 0),
+    NaN/Inf -> NaR.
+"""
+from __future__ import annotations
+
+import math
+from fractions import Fraction
+
+
+def _check(n: int, es: int) -> None:
+    assert n in (8, 16), n
+    assert 0 <= es <= 3, es
+
+
+def ref_decode(code: int, n: int, es: int):
+    """Decode an n-bit posit code -> exact Fraction (or None for NaR)."""
+    _check(n, es)
+    code &= (1 << n) - 1
+    if code == 0:
+        return Fraction(0)
+    if code == 1 << (n - 1):
+        return None  # NaR
+    sign = (code >> (n - 1)) & 1
+    body = ((1 << n) - code) & ((1 << n) - 1) if sign else code
+    # body now has sign bit 0 and n-1 meaningful bits below it.
+    r0 = (body >> (n - 2)) & 1
+    m = 0
+    i = n - 2
+    while i >= 0 and ((body >> i) & 1) == r0:
+        m += 1
+        i -= 1
+    # i is now the terminator position (or -1 if the regime fills the body).
+    k = (m - 1) if r0 == 1 else -m
+    rem_bits = max(i, 0)
+    rem = body & ((1 << i) - 1) if i > 0 else 0
+    if es <= rem_bits:
+        e = rem >> (rem_bits - es)
+        frac_bits = rem_bits - es
+        frac = rem & ((1 << frac_bits) - 1)
+    else:
+        e = rem << (es - rem_bits)  # truncated exponent field: present bits are MSBs
+        frac_bits = 0
+        frac = 0
+    scale = (k << es) + e
+    sig = Fraction((1 << frac_bits) + frac, 1 << frac_bits)  # 1.frac
+    val = sig * (Fraction(2) ** scale)
+    return -val if sign else val
+
+
+def ref_decode_float(code: int, n: int, es: int) -> float:
+    """Decode to a Python float (exact for all supported formats); NaR -> nan."""
+    v = ref_decode(code, n, es)
+    if v is None:
+        return math.nan
+    return float(v)
+
+
+def ref_encode_exact(x: Fraction, n: int, es: int) -> int:
+    """Encode an exact rational value -> n-bit posit code with RNE + saturation."""
+    _check(n, es)
+    if x == 0:
+        return 0
+    sign = x < 0
+    a = -x if sign else x
+    smax = (n - 2) << es
+    maxpos = Fraction(2) ** smax
+    minpos = Fraction(2) ** (-smax)
+    if a >= maxpos:
+        body = (1 << (n - 1)) - 1
+    elif a <= minpos:
+        body = 1
+    else:
+        # normalize: a = (1 + frac) * 2^scale, frac in [0, 1)
+        scale = 0
+        while a >= 2:
+            a /= 2
+            scale += 1
+        while a < 1:
+            a *= 2
+            scale -= 1
+        frac = a - 1  # Fraction in [0,1)
+        k = scale >> es
+        e = scale - (k << es)
+        r_len = (k + 2) if k >= 0 else (1 - k)
+        t = (n - 1) - r_len
+        assert t >= 0, (n, es, scale, k)
+        reg = (((1 << (k + 1)) - 1) << 1) if k >= 0 else 1
+        fb = t - es  # fraction bits that fit
+        if fb >= 0:
+            scaled = frac * (1 << fb)
+            fpart = int(scaled)  # floor
+            rem = scaled - fpart
+            tail = (e << fb) | fpart
+            # guard bit = next fraction bit; sticky = anything below it
+            rem2 = rem * 2
+            g = int(rem2)
+            sticky = (rem2 - g) != 0
+        else:
+            cut = -fb
+            tail = e >> cut
+            g = (e >> (cut - 1)) & 1
+            sticky = (e & ((1 << (cut - 1)) - 1)) != 0 or frac != 0
+        body = (reg << max(t, 0)) | tail
+        if g and (sticky or (body & 1)):
+            body += 1
+        body = min(body, (1 << (n - 1)) - 1)
+    code = ((1 << n) - body) & ((1 << n) - 1) if sign else body
+    return code
+
+
+def ref_encode(x: float, n: int, es: int) -> int:
+    """Encode a Python float (e.g. an exact f32 value) -> n-bit posit code."""
+    _check(n, es)
+    if math.isnan(x) or math.isinf(x):
+        return 1 << (n - 1)  # NaR
+    if x == 0:
+        return 0
+    return ref_encode_exact(Fraction(x), n, es)
+
+
+# ---- exact posit arithmetic reference (for the ALU / PAU baseline) -------------
+
+def ref_add(code_a: int, code_b: int, n: int, es: int) -> int:
+    """True posit addition: exact sum, single posit rounding (quire-free PAU)."""
+    va, vb = ref_decode(code_a, n, es), ref_decode(code_b, n, es)
+    if va is None or vb is None:
+        return 1 << (n - 1)
+    return ref_encode_exact(va + vb, n, es)
+
+
+def ref_mul(code_a: int, code_b: int, n: int, es: int) -> int:
+    """True posit multiplication: exact product, single posit rounding."""
+    va, vb = ref_decode(code_a, n, es), ref_decode(code_b, n, es)
+    if va is None or vb is None:
+        return 1 << (n - 1)
+    return ref_encode_exact(va * vb, n, es)
+
+
+def ref_convert(code: int, n_in: int, es_in: int, n_out: int, es_out: int) -> int:
+    """posit -> posit conversion through the exact value (single rounding).
+
+    Matches the paper's fcvt.pfmt.pfmt instructions, which pass through the FPU's
+    FP32 datapath: for all supported (n, es) the decode is f32-exact, so
+    exact-value conversion and through-FP32 conversion agree bit-for-bit.
+    """
+    v = ref_decode(code, n_in, es_in)
+    if v is None:
+        return 1 << (n_out - 1)
+    return ref_encode_exact(v, n_out, es_out)

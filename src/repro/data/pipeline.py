@@ -1,0 +1,72 @@
+"""Deterministic, sharded, checkpointable synthetic LM data pipeline.
+
+Production posture without external data: every batch is a pure function of
+(seed, step, shard), so
+  * restarts resume exactly (the cursor is one int in the checkpoint),
+  * any host can regenerate any shard (elastic re-sharding / straggler
+    work-stealing need no data movement),
+  * skipping a step for straggler mitigation is deterministic cluster-wide.
+
+The token stream is a Zipf-ish unigram mixture with induced bigram structure so
+losses actually fall during the example training runs (pure uniform noise has
+no learnable signal).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLMPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1
+    shard: int = 0
+
+    def __post_init__(self):
+        assert self.global_batch % self.n_shards == 0
+        self.local_batch = self.global_batch // self.n_shards
+        # fixed "language model" defining the synthetic distribution
+        rng = np.random.default_rng(self.seed ^ 0x5EED)
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        self._unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self._shift = int(rng.integers(1, max(self.vocab - 1, 2)))
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for (step, shard): tokens/labels (B_local, S)."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.seed), step), self.shard)
+        k1, k2 = jax.random.split(key)
+        u = jax.random.choice(
+            k1, self.vocab, (self.local_batch, self.seq_len),
+            p=jnp.asarray(self._unigram, jnp.float32))
+        # induced structure: with p=0.5 the next token is (prev + shift) % V,
+        # where prev is the *realized* previous token (true bigram chain)
+        follow = jax.random.bernoulli(k2, 0.5, u.shape)
+
+        def step(prev, uf):
+            ui, fi = uf
+            t = jnp.where(fi, (prev + self._shift) % self.vocab, ui)
+            return t, t
+
+        _, toks = jax.lax.scan(
+            step, u[:, 0], (u.T, follow.T))
+        tokens = toks.T
+        labels = jnp.concatenate(
+            [tokens[:, 1:], tokens[:, :1]], axis=1)  # next-token targets
+        return {"tokens": tokens.astype(jnp.int32),
+                "labels": labels.astype(jnp.int32)}
+
+    # ---- checkpointable cursor ----
+    def state_dict(self, step: int) -> dict:
+        return {"step": step, "seed": self.seed, "n_shards": self.n_shards}
+
+    @staticmethod
+    def resume_step(state: dict) -> int:
+        return int(state["step"])

@@ -1,0 +1,3 @@
+from repro.distributed.collectives import (  # noqa: F401
+    compressed_psum, make_grad_sync,
+)

@@ -1,0 +1,3 @@
+from repro.ft.runtime import (  # noqa: F401
+    FaultTolerantLoop, PreemptionSignal, StragglerMonitor, with_retries,
+)

@@ -1,0 +1,25 @@
+"""Front door for posit-KV decode attention: pallas on TPU, XLA oracle on CPU."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.posit_attention.posit_attention import posit_decode_attention
+from repro.kernels.posit_attention.ref import posit_decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_codes, v_codes, lengths, es, *, kv_bits,
+                     scale=None, impl="auto", interpret=None, block_s=512):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        return posit_decode_attention(
+            q, k_codes, v_codes, lengths, es,
+            kv_bits=kv_bits, scale=scale, block_s=block_s, interpret=interpret)
+    return posit_decode_attention_ref(
+        q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale)

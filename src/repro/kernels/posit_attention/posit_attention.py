@@ -1,0 +1,143 @@
+"""Decode-step attention over a posit-compressed KV cache (Pallas, flash-style).
+
+The paper's memory-savings result (Table IV: P8 fits a 20x20 GEMM where FP32
+fits 12x12) applied to the dominant inference bottleneck: the KV cache lives in
+HBM as p8/p16 codes (2–4x fewer bytes than bf16/f32), and each K/V tile is
+decoded *in VMEM* right before use — decode-step attention is purely
+HBM-bandwidth-bound, so cutting payload bytes cuts step latency ~linearly.
+
+One query token per (batch, head): online-softmax accumulation over S tiles.
+
+  grid = (B * Hq, S // bs)            k innermost (arbitrary)
+  q:    (B*Hq, d)        float        block (1, d)
+  kv:   (B*Hkv, S, d)    posit codes  block (1, bs, d), GQA-mapped index
+  out:  (B*Hq, d)        float        block (1, d)
+  scratch: m, l (SMEM scalars), acc (VMEM (1, d) f32)
+
+Scalar prefetch: es (1,) int32 + lengths (B,) int32 (valid cache length per
+batch row; masked with -inf before the running max).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.codec import posit_decode
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    es_ref, len_ref,            # scalar prefetch
+    q_ref, k_ref, v_ref, o_ref, # blocks
+    m_ref, l_ref, acc_ref,      # scratch
+    *, kv_bits: int, heads_per_kv: int, hq: int, block_s: int, n_s: int,
+    scale: float,
+):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[0, 0] = _NEG_INF
+        l_ref[0, 0] = 0.0
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bh = pl.program_id(0)
+    b = bh // hq
+    length = len_ref[b]
+
+    q = q_ref[...].astype(jnp.float32)                      # (1, d)
+    k = posit_decode(k_ref[0], kv_bits, es_ref[0]).astype(jnp.float32)  # (bs, d)
+    v = posit_decode(v_ref[0], kv_bits, es_ref[0]).astype(jnp.float32)  # (bs, d)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bs)
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    scores = jnp.where(pos < length, scores, _NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                              # (1, bs)
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _emit():
+        o_ref[...] = (acc_ref[...] / l_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kv_bits", "block_s", "interpret", "scale"),
+)
+def posit_decode_attention(
+    q: jax.Array,          # (B, Hq, d) float
+    k_codes: jax.Array,    # (B, Hkv, S, d) uint8/uint16 posit codes
+    v_codes: jax.Array,    # (B, Hkv, S, d)
+    lengths: jax.Array,    # (B,) int32 — valid KV length per batch row
+    es,                    # int32 scalar — pcsr pes for the KV cache
+    *,
+    kv_bits: int,
+    scale: float | None = None,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, d = q.shape
+    Bk, Hkv, S, dk = k_codes.shape
+    assert (B, d) == (Bk, dk) and Hq % Hkv == 0, (q.shape, k_codes.shape)
+    heads_per_kv = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    bs = min(block_s, S)
+    S_p = -(-S // bs) * bs
+    if S_p != S:  # pad; padded rows are masked off via `lengths`
+        pad = [(0, 0), (0, 0), (0, S_p - S), (0, 0)]
+        k_codes = jnp.pad(k_codes, pad)
+        v_codes = jnp.pad(v_codes, pad)
+    n_s = S_p // bs
+
+    q2 = q.reshape(B * Hq, d)
+    k2 = k_codes.reshape(B * Hkv, S_p, d)
+    v2 = v_codes.reshape(B * Hkv, S_p, d)
+
+    def kv_index(bh, s, *_scalars):
+        b = bh // Hq
+        h = bh % Hq
+        return (b * Hkv + h // heads_per_kv, s, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        kv_bits=kv_bits, heads_per_kv=heads_per_kv, hq=Hq,
+        block_s=bs, n_s=n_s, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B * Hq, n_s),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda bh, s, *_: (bh, 0)),
+                pl.BlockSpec((1, bs, d), kv_index),
+                pl.BlockSpec((1, bs, d), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda bh, s, *_: (bh, 0)),
+            scratch_shapes=[
+                pltpu.SMEM((1, 1), jnp.float32),
+                pltpu.SMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray([es], jnp.int32), jnp.asarray(lengths, jnp.int32), q2, k2, v2)
+    return out.reshape(B, Hq, d)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for posit-KV decode attention (no tiling, full softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import posit_decode
+
+
+def posit_decode_attention_ref(
+    q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
+    lengths: jax.Array, es, *, kv_bits: int, scale: float | None = None,
+) -> jax.Array:
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k_codes.shape
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k = posit_decode(k_codes, kv_bits, es).astype(jnp.float32)
+    v = posit_decode(v_codes, kv_bits, es).astype(jnp.float32)
+    k = jnp.repeat(k, g, axis=1)  # (B, Hq, S, d)
+    v = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k) * scale
+    pos = jnp.arange(S)[None, None, :]
+    scores = jnp.where(pos < lengths[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, v)
+    return out.astype(q.dtype)

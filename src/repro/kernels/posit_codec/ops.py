@@ -1,0 +1,33 @@
+"""Front door for the streaming codec: pallas on TPU, plain XLA elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.posit_codec import ref
+from repro.kernels.posit_codec.posit_codec import decode_kernel, encode_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode(codes, es, *, nbits: int, out_dtype_name="float32", impl="auto",
+           interpret=None):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        return decode_kernel(codes, es, nbits=nbits, out_dtype_name=out_dtype_name,
+                             interpret=interpret)
+    return ref.decode_ref(codes, es, nbits=nbits, out_dtype_name=out_dtype_name)
+
+
+def encode(x, es, *, nbits: int, impl="auto", interpret=None):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        return encode_kernel(x, es, nbits=nbits, interpret=interpret)
+    return ref.encode_ref(x, es, nbits=nbits)

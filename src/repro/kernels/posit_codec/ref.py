@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the streaming codec kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.codec import posit_decode, posit_encode
+
+
+def decode_ref(codes, es, *, nbits: int, out_dtype_name: str = "float32"):
+    return posit_decode(codes, nbits, es).astype(jnp.dtype(out_dtype_name))
+
+
+def encode_ref(x, es, *, nbits: int):
+    return posit_encode(x.astype(jnp.float32), nbits, es)

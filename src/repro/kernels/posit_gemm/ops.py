@@ -1,0 +1,56 @@
+"""Jitted front door for the fused posit GEMM.
+
+``impl``:
+  "pallas"     — the TPU kernel (interpret=True on CPU: same semantics, Python exec)
+  "xla"        — XLA-fused path (repro.core.dot); what models use on CPU and what
+                 the dry-run lowers — numerically identical contract
+  "auto"       — pallas on TPU, xla elsewhere
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dot import posit_dot
+from repro.core.pcsr import OperandSlots
+from repro.kernels.posit_gemm.posit_gemm import posit_gemm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    slots: OperandSlots,
+    *,
+    es_a=None, es_b=None, es_out=None,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    **block_kw,
+) -> jax.Array:
+    """O = decode(A) @ decode(B) -> encode, formats per the pcsr operand slots."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    def _es(x, fmt):
+        if x is not None:
+            return x
+        return fmt.es if hasattr(fmt, "es") else 0
+    if impl == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        es = jnp.asarray(
+            [_es(es_a, slots.rs1), _es(es_b, slots.rs2), _es(es_out, slots.rd)],
+            dtype=jnp.int32,
+        )
+        return posit_gemm(
+            a, b, es,
+            a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+            interpret=interpret, **block_kw,
+        )
+    if impl == "xla":
+        return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out, impl="fused")
+    if impl == "unfused":
+        return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out, impl="unfused")
+    raise ValueError(f"unknown impl {impl!r}")

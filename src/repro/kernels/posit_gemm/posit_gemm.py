@@ -1,0 +1,140 @@
+"""Fused posit GEMM Pallas kernel — the paper's codec-at-the-FPU-boundary, tiled.
+
+Dataflow per (i, j, k) grid step (paper Fig. 2(b) on the TPU memory hierarchy):
+
+    HBM --BlockSpec--> VMEM:  A tile (bm x bk)   posit codes or float
+                              B tile (bk x bn)   posit codes or float
+    VMEM:   [input decoder]   posit -> bf16/f32  (skipped for float operands)
+    MXU:    acc(f32) += A' @ B'                  (the "FPU datapath")
+    VMEM:   [output encoder]  f32 -> posit       (skipped for float rd; last k)
+    VMEM --BlockSpec--> HBM:  O tile (bm x bn)
+
+Posit operands move through HBM as 1–2-byte codes, so a p8 x p8 GEMM reads 4x
+fewer HBM bytes than f32 (the paper's scratchpad-savings, Table IV) and the
+decode rides in VMEM next to the MXU (the paper's lightweight-codec claim).
+
+``es`` for (rs1, rs2, rd) arrives as a scalar-prefetch vector — the pcsr: one
+compiled kernel serves every exponent size at runtime.
+
+Grid is (m, n, k) with k innermost/arbitrary; a VMEM f32 scratch accumulates
+across k tiles (revisited output pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.types import Fmt, PositFmt, compute_dtype_for
+
+
+def _gemm_kernel(
+    es_ref,  # scalar prefetch: (3,) int32 = es for rs1, rs2, rd
+    a_ref, b_ref, o_ref, acc_ref,
+    *, a_fmt: Fmt, b_fmt: Fmt, out_fmt: Fmt, compute_dtype, n_k: int,
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    if isinstance(a_fmt, PositFmt):
+        a = posit_decode(a, a_fmt.nbits, es_ref[0]).astype(compute_dtype)
+    else:
+        a = a.astype(compute_dtype)
+    b = b_ref[...]
+    if isinstance(b_fmt, PositFmt):
+        b = posit_decode(b, b_fmt.nbits, es_ref[1]).astype(compute_dtype)
+    else:
+        b = b.astype(compute_dtype)
+
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _emit():
+        r = acc_ref[...]
+        if isinstance(out_fmt, PositFmt):
+            o_ref[...] = posit_encode(r, out_fmt.nbits, es_ref[2])
+        else:
+            o_ref[...] = r.astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, mults: tuple) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)  # 0-codes decode to 0.0 -> contribute nothing
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "a_fmt", "b_fmt", "out_fmt", "block_m", "block_n", "block_k",
+        "compute_dtype_name", "interpret",
+    ),
+)
+def posit_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    es: jax.Array,  # (3,) int32: es for a, b, out (ignored for float slots)
+    *,
+    a_fmt: Fmt,
+    b_fmt: Fmt,
+    out_fmt: Fmt,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    compute_dtype_name: Optional[str] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """O = decode(A) @ decode(B), encoded per out_fmt. A: (M, K), B: (K, N)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    if compute_dtype_name is None:
+        ca, cb = compute_dtype_for(a_fmt), compute_dtype_for(b_fmt)
+        compute_dtype = ca if ca == cb else jnp.float32
+    else:
+        compute_dtype = jnp.dtype(compute_dtype_name)
+
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b, (bk, bn))
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    grid = (Mp // bm, Np // bn, Kp // bk)
+
+    if isinstance(out_fmt, PositFmt):
+        out_dtype = jnp.uint8 if out_fmt.nbits == 8 else jnp.uint16
+    else:
+        out_dtype = out_fmt.dtype
+
+    kernel = functools.partial(
+        _gemm_kernel,
+        a_fmt=a_fmt, b_fmt=b_fmt, out_fmt=out_fmt,
+        compute_dtype=compute_dtype, n_k=grid[2],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(es, jnp.int32), a_p, b_p)
+    return out[:M, :N]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused posit GEMM kernel (untiled, same math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.types import Fmt, PositFmt, compute_dtype_for
+
+
+def posit_gemm_ref(
+    a: jax.Array, b: jax.Array, es,  # (3,) int32
+    *, a_fmt: Fmt, b_fmt: Fmt, out_fmt: Fmt, compute_dtype_name=None,
+) -> jax.Array:
+    if compute_dtype_name is None:
+        ca, cb = compute_dtype_for(a_fmt), compute_dtype_for(b_fmt)
+        compute_dtype = ca if ca == cb else jnp.float32
+    else:
+        compute_dtype = jnp.dtype(compute_dtype_name)
+    es = jnp.asarray(es, jnp.int32)
+    af = (posit_decode(a, a_fmt.nbits, es[0]) if isinstance(a_fmt, PositFmt) else a)
+    bf = (posit_decode(b, b_fmt.nbits, es[1]) if isinstance(b_fmt, PositFmt) else b)
+    y = jnp.dot(
+        af.astype(compute_dtype), bf.astype(compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    if isinstance(out_fmt, PositFmt):
+        return posit_encode(y, out_fmt.nbits, es[2])
+    return y.astype(out_fmt.dtype)

@@ -1,0 +1,17 @@
+"""Front door for the posit softmax kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.posit_softmax.posit_softmax import posit_softmax_kernel
+from repro.kernels.posit_softmax.ref import posit_softmax_ref
+
+
+def softmax(codes, es, *, nbits, impl="auto", interpret=None):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return posit_softmax_kernel(codes, es, nbits=nbits, interpret=interpret)
+    return posit_softmax_ref(codes, es, nbits=nbits)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the posit softmax kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import posit_decode, posit_encode
+
+
+def posit_softmax_ref(codes, es, *, nbits: int):
+    x = posit_decode(codes, nbits, es)
+    y = jax.nn.softmax(x, axis=-1)
+    return posit_encode(y, nbits, es)

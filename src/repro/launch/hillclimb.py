@@ -1,0 +1,102 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: measure (probe) a cell under a named variant.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell olmoe_train --variant bf16
+
+Variants are (policy, cfg-override, step-options) bundles; each probe reports
+scan-aware flops/bytes/collective bytes per device plus the roofline terms, so
+every hypothesis->change->measure cycle in EXPERIMENTS.md §Perf is one command.
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_arch, get_shape
+from repro.core.pcsr import TransPolicy
+from repro.launch import costprobe
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops
+
+CELLS = {
+    "olmoe_train": ("olmoe-1b-7b", "train_4k"),
+    "zamba_train": ("zamba2-7b", "train_4k"),
+    "qwen_decode": ("qwen2.5-14b", "decode_32k"),
+    "yi_train": ("yi-34b", "train_4k"),
+    "gemma3_decode": ("gemma3-4b", "decode_32k"),
+}
+
+VARIANTS = {
+    # paper-faithful baseline: FP32 datapath, no posit storage
+    "baseline": dict(policy=TransPolicy(), cfg_override={}),
+    # TPU-native datapath (paper's FPU=fp32 -> MXU=bf16; DESIGN.md §2)
+    "bf16": dict(policy=TransPolicy(compute_dtype="bf16"), cfg_override={}),
+    # the paper's technique at the serving bottleneck: posit8 KV cache
+    "p8_kv": dict(policy=TransPolicy.from_names(kv_cache="p8_0",
+                                                compute_dtype="bf16"),
+                  cfg_override={}),
+    "p8_kv_f32": dict(policy=TransPolicy.from_names(kv_cache="p8_0"),
+                      cfg_override={}),
+    # p16 weights at rest (FSDP wire + HBM)
+    "p16_weights": dict(policy=TransPolicy.from_names(weights="p16_1",
+                                                      compute_dtype="bf16"),
+                        cfg_override={}),
+    # SSD chunk-size sweep (zamba memory term ∝ chunk length)
+    "chunk128": dict(policy=TransPolicy(), cfg_override={"ssm_chunk": 128}),
+    "chunk64": dict(policy=TransPolicy(), cfg_override={"ssm_chunk": 64}),
+    "chunk128_bf16": dict(policy=TransPolicy(compute_dtype="bf16"),
+                          cfg_override={"ssm_chunk": 128}),
+}
+
+
+def run_variant(cell: str, variant: str) -> dict:
+    arch, shape_name = CELLS[cell]
+    v = VARIANTS[variant]
+    cfg = get_arch(arch)
+    if v["cfg_override"]:
+        cfg = dataclasses.replace(cfg, **v["cfg_override"])
+
+    # monkey-patch costprobe's binding so probe_cell sees the override
+    orig = costprobe.get_arch
+    costprobe.get_arch = lambda name: cfg if name == arch else orig(name)
+    try:
+        res = costprobe.probe_cell(arch, shape_name, policy=v["policy"])
+    finally:
+        costprobe.get_arch = orig
+
+    shape = get_shape(shape_name)
+    chips = res["n_chips"]
+    t_c = res["flops_per_device"] / PEAK_FLOPS
+    t_m = res["bytes_per_device"] / HBM_BW
+    t_x = res["coll_per_device"] / ICI_BW
+    mf = model_flops(cfg, shape)
+    res.update({
+        "variant": variant, "cell": cell,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": max({"compute": t_c, "memory": t_m, "collective": t_x},
+                        key=lambda k: {"compute": t_c, "memory": t_m,
+                                       "collective": t_x}[k]),
+        "model_flops": mf,
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / max(t_c, t_m, t_x)
+        if max(t_c, t_m, t_x) else 0.0,
+    })
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--out-dir", default="experiments/hillclimb")
+    args = ap.parse_args(argv)
+    res = run_variant(args.cell, args.variant)
+    print(json.dumps({k: v for k, v in res.items()
+                      if not isinstance(v, (list, dict))}, indent=1))
+    os.makedirs(args.out_dir, exist_ok=True)
+    with open(os.path.join(args.out_dir,
+                           f"{args.cell}__{args.variant}.json"), "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Roofline analysis from dry-run JSON artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (per device, TPU v5e targets):
+    compute    = HLO_FLOPs_per_device / 197e12          (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9           (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9     (one ICI link, conservative)
+
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per training step
+(3x forward 2ND for fwd+bwd), and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs_per_device * chips), which exposes remat/dispatch
+waste. For inference kinds the model term is 2*N*D_tokens (no backward).
+
+    PYTHONPATH=src python -m repro.launch.roofline --in-dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_arch, get_shape
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # B/s per chip
+ICI_BW = 50e9           # B/s per link (conservative single-link)
+
+
+def param_count(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts, embedding included once."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    att = d * (H * hd) + 2 * d * (Hkv * hd) + (H * hd) * d
+    if cfg.family == "moe":
+        per_expert = 3 * d * cfg.d_ff
+        mlp_total = cfg.n_experts * per_expert + d * cfg.n_experts
+        mlp_active = cfg.top_k * per_expert + d * cfg.n_experts
+        block_t, block_a = att + mlp_total, att + mlp_active
+        total = L * block_t + V * d * (1 if cfg.tie_embeddings else 2)
+        active = L * block_a + V * d * (1 if cfg.tie_embeddings else 2)
+        return float(total), float(active)
+    if cfg.family == "zamba":
+        di = 2 * d
+        ssm = d * (2 * di + 2 * cfg.ssm_state + di // cfg.ssm_head_dim) + di * d
+        shared = att + 3 * d * cfg.d_ff
+        n_shared = max(1, cfg.n_layers // max(cfg.shared_attn_every, 1))
+        total = L * ssm + shared + V * d * 2
+        # shared block runs n_shared times: count FLOPs-active accordingly
+        active = L * ssm + n_shared * shared + V * d * 2
+        return float(total), float(active)
+    if cfg.family == "xlstm":
+        di = int(d * 2.0)
+        mlstm = d * 2 * di + 3 * di * di + 2 * di * cfg.n_heads + di * d
+        slstm = d * 4 * d + d * d // cfg.n_heads * 4 + 2 * d * int(d * 4 / 3)
+        n_s = sum(1 for i in range(L) if cfg.slstm_every and i % cfg.slstm_every == 1)
+        total = (L - n_s) * mlstm + n_s * slstm + V * d * 2
+        return float(total), float(total)
+    if cfg.family == "whisper":
+        enc = cfg.enc_layers * (att + 2 * d * cfg.d_ff)
+        dec = L * (2 * att + 2 * d * cfg.d_ff)
+        total = enc + dec + V * d
+        return float(total), float(total)
+    mlp = 3 * d * cfg.d_ff
+    total = L * (att + mlp) + V * d * (1 if cfg.tie_embeddings else 2)
+    return float(total), float(total)
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*tokens for train, 2*N_active*tokens for inference."""
+    _, active = param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def analyse(rec: dict, probe: dict | None = None) -> dict:
+    """probe: matching scan-aware cost probe (launch.costprobe) — preferred
+    over the raw compiled numbers, which count while-loop bodies once."""
+    if rec.get("skipped") or rec.get("error"):
+        return rec
+    cfg = get_arch(rec["arch"])
+    shape = get_shape(rec["shape"])
+    chips = rec["n_chips"]
+    if probe and not probe.get("error"):
+        fl = probe["flops_per_device"]
+        by = probe["bytes_per_device"]
+        coll = probe["coll_per_device"]
+    else:
+        fl = rec["flops_per_device"]
+        by = rec["bytes_per_device"]
+        coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+
+    t_compute = fl / PEAK_FLOPS
+    t_memory = by / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = fl * chips
+    out = dict(rec)
+    out.pop("collectives", None)
+    out.update({
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": (mf / hlo_global) if hlo_global else 0.0,
+        "collective_bytes": coll,
+        "probe_corrected": bool(probe and not probe.get("error")),
+        "roofline_fraction": (
+            max(terms.values()) and
+            (mf / chips / PEAK_FLOPS) / max(terms.values())),
+    })
+    return out
+
+
+def fmt_row(a: dict) -> str:
+    if a.get("skipped"):
+        return (f"| {a['arch']} | {a['shape']} | — | — | — | — | skipped | "
+                f"{a['skipped']} |")
+    if a.get("error"):
+        return f"| {a['arch']} | {a['shape']} | ERROR: {a['error'][:60]} |"
+    return ("| {arch} | {shape} | {t_compute_s:.4f} | {t_memory_s:.4f} | "
+            "{t_collective_s:.4f} | {useful_ratio:.2f} | {dominant} | "
+            "{roofline_fraction:.2f} |").format(**a)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in-dir", default="experiments/dryrun")
+    ap.add_argument("--probe-dir", default="experiments/probe")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(args.in_dir, f"*__{args.mesh}.json"))):
+        if os.path.basename(fn).startswith("SUMMARY"):
+            continue
+        with open(fn) as f:
+            rec = json.load(f)
+        probe = None
+        pfn = os.path.join(
+            args.probe_dir,
+            f"{rec.get('arch')}__{rec.get('shape')}__{args.mesh}.json")
+        if os.path.exists(pfn):
+            with open(pfn) as f:
+                probe = json.load(f)
+        rows.append(analyse(rec, probe))
+    print("| arch | shape | t_compute | t_memory | t_collective | useful "
+          "| dominant | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in rows:
+        print(fmt_row(a))
+    n_probe = sum(1 for a in rows if a.get("probe_corrected"))
+    print(f"\n({n_probe}/{len(rows)} cells probe-corrected; times in seconds "
+          "per step on 256 chips)")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Sharding rules: parameter pytrees, batches, and serving caches -> PartitionSpecs.
+
+Scheme (DESIGN.md §5):
+  * FSDP: the *input* feature dim of every weight matrix shards over "data"
+  * TP (Megatron pairing): column-parallel out-dims over "model"
+    (wq/wk/wv, gate/up, in_proj, lm_head), row-parallel in-dims over "model"
+    (wo, down, out_proj) with the complementary dim on "data"
+  * EP: expert-count dim of MoE weights over "model"
+  * DP: batch dims over ("pod", "data")
+  * pod axis: parameters replicated across pods (gradient sync crosses pods)
+
+Every rule degrades gracefully: an axis is only used when the dim divides the
+axis size, otherwise that dim stays unsharded (e.g. granite's vocab 49155).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.launch.mesh import batch_axes
+
+
+def _div(dim: int, mesh, axis) -> Optional[str]:
+    """axis name if it divides dim, else None."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def _matmul_spec(path: str, shape, mesh) -> P:
+    """Spec for a (possibly layer-stacked, possibly posit-coded) weight."""
+    core = shape[-2:] if len(shape) >= 2 else shape
+    col_parallel = re.search(
+        r"(wq|wk|wv|gate|up|in_proj|wx|ffn_up|lm_head|patch_proj|frame_proj"
+        r"|wi|wf)/(w|w_codes)$", path) is not None
+    row_parallel = re.search(
+        r"(wo|down|out_proj|ffn_down)/(w|w_codes)$", path) is not None
+    if col_parallel:
+        spec = (_div(core[0], mesh, "data"), _div(core[1], mesh, "model"))
+    elif row_parallel:
+        spec = (_div(core[0], mesh, "model"), _div(core[1], mesh, "data"))
+    else:  # e.g. router, generic 2D
+        spec = (_div(core[0], mesh, "data"), _div(core[1], mesh, "model"))
+    lead = (None,) * (len(shape) - 2)
+    return P(*lead, *spec)
+
+
+def param_spec(path: str, shape, mesh) -> P:
+    # optimizer-state leaves mirror their parameter's sharding: strip the
+    # moment suffix ("…/w/m", "…/w/v", "…/w/em", "…/w/ev" -> "…/w")
+    m = re.match(r"^(?:mu/)?(.*)/(m|v|em|ev)$", path)
+    if m:
+        path = m.group(1)
+    nd = len(shape)
+    # --- embeddings ---------------------------------------------------------
+    if path.endswith("embed/table"):
+        return P(_div(shape[0], mesh, "model"), _div(shape[1], mesh, "data"))
+    if "pos_embed" in path:
+        return P(*(None,) * nd)
+    # --- MoE experts (maybe stacked: (L, E, a, b)) ---------------------------
+    if re.search(r"w_(gate|up)(_codes)?$", path):
+        lead = (None,) * (nd - 3)
+        return P(*lead, _div(shape[-3], mesh, "model"),
+                 _div(shape[-2], mesh, "data"), None)
+    if re.search(r"w_down(_codes)?$", path):
+        lead = (None,) * (nd - 3)
+        return P(*lead, _div(shape[-3], mesh, "model"), None,
+                 _div(shape[-1], mesh, "data"))
+    # --- ssm conv ------------------------------------------------------------
+    if "conv_w" in path:
+        return P(*(None,) * (nd - 1), _div(shape[-1], mesh, "model"))
+    # --- biases: shard col-parallel outputs over model -----------------------
+    if path.endswith("/b"):
+        if re.search(r"(wq|wk|wv|gate|up|in_proj|wx|ffn_up)/b$", path):
+            return P(*(None,) * (nd - 1), _div(shape[-1], mesh, "model"))
+        return P(*(None,) * nd)
+    # --- slstm recurrent kernel / per-head vectors / norms -------------------
+    if nd >= 2 and path.endswith("/w") or path.endswith("_codes"):
+        return _matmul_spec(path, shape, mesh)
+    return P(*(None,) * nd)
+
+
+def tree_param_specs(params_shape: Any, mesh) -> Any:
+    """Pytree of PartitionSpecs matching a params (or ShapeDtypeStruct) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        specs.append(param_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(tree_specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- batches -----
+
+def batch_specs(cfg: ModelCfg, shape: ShapeCfg, mesh) -> dict:
+    dp = batch_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    bspec = dp if shape.global_batch % n_dp == 0 and shape.global_batch >= n_dp \
+        else None
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.family == "whisper":
+        out["frames"] = P(bspec, None, None)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = P(bspec, None, None)
+    return out
+
+
+def decode_token_spec(cfg: ModelCfg, shape: ShapeCfg, mesh) -> P:
+    dp = batch_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    return P(dp) if shape.global_batch % n_dp == 0 and shape.global_batch >= n_dp \
+        else P(None)
+
+
+# ------------------------------------------------------------------ caches ----
+
+def _kv_spec(B: int, Hkv: int, S: int, hd: int, mesh, dp) -> P:
+    """KV cache (B, Hkv, S, hd): batch over dp + model on heads (else head_dim);
+    long-context B=1 falls back to sequence over data + model on heads/hd."""
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if B % n_dp == 0 and B >= n_dp:
+        if _div(Hkv, mesh, "model"):
+            return P(dp, "model", None, None)
+        # few KV heads: shard the *sequence* over model. Sharding head_dim
+        # instead puts the contraction dim on "model" and costs a per-layer
+        # all-reduce of the full (B,Hkv,g,T) score tensor (~0.7 GB/layer at
+        # decode_32k); with T sharded the only psum is the (B,Hkv,g,hd)
+        # output (~3 MB) plus scalar softmax reductions. (§Perf iteration)
+        return P(dp, None, _div(S, mesh, "model"), None)
+    seq = _div(S, mesh, "data")
+    if _div(Hkv, mesh, "model"):
+        return P(None, "model", seq, None)
+    return P(None, None, seq, _div(hd, mesh, "model"))
+
+
+# base (unstacked) rank of each cache leaf kind; any extra leading dims are
+# layer-stack dims (vmapped init) and stay unsharded
+_CACHE_RANKS = {"k": 4, "v": 4, "h": 4, "conv": 3, "C": 4, "n": 3, "m": 2,
+                "c": 3, "len": 1}
+
+
+def cache_specs(cache_shape: Any, cfg: ModelCfg, mesh) -> Any:
+    """Specs for a serving-cache pytree (built with jax.eval_shape)."""
+    dp = batch_axes(mesh)
+
+    def base_spec(kind: str, s) -> tuple:
+        bdp = _first_div(s[0], mesh, dp)
+        if kind in ("k", "v"):
+            return tuple(_kv_spec(s[0], s[1], s[2], s[3], mesh, dp))
+        if kind == "h":        # ssm state (B, nh, p, N)
+            if bdp:
+                return (bdp, _div(s[1], mesh, "model"), None, None)
+            return (None, _div(s[1], mesh, "model"), _div(s[2], mesh, "data"),
+                    None)
+        if kind == "conv":     # (B, W-1, channels)
+            return (bdp, None, _div(s[-1], mesh, "model"))
+        if kind == "C":        # mlstm matrix state (B, nh, hd, hd)
+            return (bdp, _div(s[1], mesh, "model"), None, None)
+        if kind in ("n", "m", "c"):
+            return (bdp,) + (None,) * (len(s) - 1)
+        return (None,) * len(s)
+
+    def leaf_spec(path: str, leaf):
+        s = leaf.shape
+        kind = path.rsplit("/", 1)[-1]
+        if kind in ("n", "m", "c"):  # small per-head states, never stacked
+            return P(_first_div(s[0], mesh, dp), *(None,) * (len(s) - 1))
+        if kind not in _CACHE_RANKS or _CACHE_RANKS[kind] > len(s):
+            return P(*(None,) * len(s))
+        base = _CACHE_RANKS[kind]
+        lead = len(s) - base
+        return P(*(None,) * lead, *base_spec(kind, s[lead:]))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        specs.append(leaf_spec(path, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _first_div(dim: int, mesh, dp) -> Optional[tuple]:
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    return dp if dim % n_dp == 0 and dim >= n_dp else None

@@ -1,0 +1,188 @@
+"""Step builders: the jittable train / prefill / decode functions per
+(arch x shape), plus the batch/cache abstract specs the dry-run lowers with.
+
+Two gradient-sync modes (DESIGN.md §5):
+  * "gspmd"  (paper-faithful baseline): one jit, GSPMD inserts every
+    collective, cross-pod gradient reduction in f32.
+  * "posit_pod" (beyond-paper): jax.shard_map manual over the "pod" axis only
+    ("data"/"model" stay auto/GSPMD inside); per-pod gradients are posit-
+    encoded, all-gathered over the pod links as 1–2-byte codes, decoded and
+    summed locally, with f32 error-feedback residuals.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.core.pcsr import TransPolicy
+from repro.core.types import PositFmt
+from repro.models.registry import Model, build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_warmup
+
+
+# ------------------------------------------------------------- batch specs ----
+
+def abstract_batch(cfg: ModelCfg, shape: ShapeCfg) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.family == "whisper":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def abstract_cache(model: Model, cfg: ModelCfg, shape: ShapeCfg,
+                   policy: TransPolicy):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "whisper":
+        params = abstract_params(model)
+        batch = {"frames": jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), jnp.float32)}
+        return jax.eval_shape(
+            lambda p, b: model.init_cache(p, b, policy, S), params, batch)
+    return jax.eval_shape(lambda: model.init_cache(B, S, policy))
+
+
+# -------------------------------------------------------------- train step ----
+
+def make_train_step(model: Model, policy: TransPolicy, opt_cfg: AdamWConfig,
+                    *, warmup: int = 100, total_steps: int = 10_000,
+                    grad_sync: str = "gspmd",
+                    grad_fmt: Optional[PositFmt] = None,
+                    mesh=None, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch, step) -> (p, o, metrics).
+
+    microbatches > 1: gradient accumulation over sequential microbatches
+    (peak activation memory scales ~1/microbatches; grads accumulate in one
+    extra params-sized f32 buffer).
+    """
+
+    def loss_and_grads(params, batch):
+        def loss_fn(p, mb):
+            return model.loss(p, mb, policy)
+
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            return x.reshape(microbatches, x.shape[0] // microbatches,
+                             *x.shape[1:])
+        mbs = jax.tree.map(split, batch)
+
+        def micro(carry, mb):
+            loss_a, metrics_a, grads_a = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            grads_a = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grads_a, grads)
+            metrics_a = jax.tree.map(lambda a, m: a + m, metrics_a, metrics)
+            return (loss_a + loss, metrics_a, grads_a), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = {"ce": jnp.float32(0.0), "aux": jnp.float32(0.0)}
+        (loss, metrics, grads), _ = jax.lax.scan(
+            micro, (jnp.float32(0.0), zero_m, zero_g), mbs)
+        inv = 1.0 / microbatches
+        return (loss * inv,
+                jax.tree.map(lambda m: m * inv, metrics),
+                jax.tree.map(lambda g: g * inv, grads))
+
+    def apply_update(params, opt_state, grads, step, loss, metrics):
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_warmup(step, warmup=warmup, total=total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg,
+                                         lr_scale=lr)
+        out = {"loss": loss, "gnorm": gnorm, **metrics}
+        return params, opt_state, out
+
+    if grad_sync == "gspmd":
+        def train_step(params, opt_state, batch, step):
+            loss, metrics, grads = loss_and_grads(params, batch)
+            return apply_update(params, opt_state, grads, step, loss, metrics)
+        return train_step
+
+    if grad_sync == "posit_pod":
+        assert mesh is not None and "pod" in mesh.axis_names
+        assert grad_fmt is not None
+        n_pods = mesh.shape["pod"]
+
+        def per_pod(params, opt_state, batch, step):
+            # inside: manual over "pod" (per-pod shard of the batch),
+            # auto/GSPMD over "data"/"model".
+            from repro.distributed.collectives import compressed_allreduce
+
+            loss, metrics, grads = loss_and_grads(params, batch)
+
+            def sync_leaf(g):
+                # two-hop posit-compressed all-reduce on the pod links:
+                # pow2 prescale + dynamic es + FTZ (see collectives.py)
+                return compressed_allreduce(
+                    g.astype(jnp.float32) / n_pods, grad_fmt, "pod"
+                ).astype(g.dtype)
+
+            grads = jax.tree.map(sync_leaf, grads)
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+            return apply_update(params, opt_state, grads, step, loss, metrics)
+
+        def train_step(params, opt_state, batch, step):
+            return jax.shard_map(
+                per_pod,
+                mesh=mesh,
+                in_specs=(P(), P(), P("pod"), P()),
+                out_specs=(P(), P(), P()),
+                axis_names={"pod"},
+                check_vma=False,
+            )(params, opt_state, batch, step)
+        return train_step
+
+    raise ValueError(grad_sync)
+
+
+def make_opt_state(model: Model, opt_cfg: AdamWConfig):
+    params = abstract_params(model)
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+
+
+# -------------------------------------------------------------- serve steps ---
+
+def make_prefill_step(model: Model, cfg: ModelCfg, policy: TransPolicy,
+                      shape: ShapeCfg):
+    if cfg.family == "whisper":
+        def prefill_step(params, batch):
+            cache = model.init_cache(params, batch, policy, shape.seq_len)
+            logits, cache2 = model.decode_step(
+                params, batch["tokens"][:, 0], cache, policy)
+            return logits, cache2
+        return prefill_step
+
+    def prefill_step(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["patch_embeds"] = batch["patch_embeds"]
+        return model.prefill(params, batch["tokens"], policy,
+                             S_max=shape.seq_len, **kw)
+    return prefill_step
+
+
+def make_decode_step(model: Model, cfg: ModelCfg, policy: TransPolicy):
+    def decode_step(params, token_t, cache):
+        return model.decode_step(params, token_t, cache, policy)
+    return decode_step

@@ -1,0 +1,73 @@
+"""Generate SUMMARY_{single,multi}.md tables from dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.summarize --in-dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+V5E_HBM_GB = 16.0
+
+
+def load(in_dir: str, mode: str):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(in_dir, f"*__{mode}.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt(rows, mode):
+    out = [f"# Dry-run summary — {mode} mesh",
+           "",
+           "| arch | shape | compile_s | args GB/dev | temp GB/dev | fits 16GB "
+           "| GFLOP/dev | coll MB/dev | top collective |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_fail = n_skip = 0
+    for r in rows:
+        if r.get("skipped"):
+            n_skip += 1
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — "
+                       f"| skipped: {r['skipped']} |")
+            continue
+        if r.get("error"):
+            n_fail += 1
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | "
+                       f"| {r['error'][:80]} |")
+            continue
+        n_ok += 1
+        m = r["memory"]
+        args_gb = m["argument_bytes"] / 1e9
+        temp_gb = m["temp_bytes"] / 1e9
+        tot = args_gb + temp_gb
+        coll = r.get("collectives", {})
+        coll_b = sum(v["bytes"] for v in coll.values())
+        top = max(coll, key=lambda k: coll[k]["bytes"]) if coll else "-"
+        fits = "yes" if tot <= V5E_HBM_GB else f"NO ({tot:.1f})"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} "
+            f"| {args_gb:.2f} | {temp_gb:.2f} | {fits} "
+            f"| {r['flops_per_device'] / 1e9:.0f} | {coll_b / 1e6:.0f} | {top} |")
+    out.insert(1, f"\n{n_ok} compiled, {n_fail} failed, {n_skip} skipped.\n")
+    return "\n".join(out) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in-dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+    for mode in ("single", "multi"):
+        rows = load(args.in_dir, mode)
+        if not rows:
+            continue
+        path = os.path.join(args.in_dir, f"SUMMARY_{mode}.md")
+        with open(path, "w") as f:
+            f.write(fmt(rows, mode))
+        print(f"wrote {path} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Training driver — CPU-runnable at reduced scale, production flags for pods.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --reduced \
+        --steps 100 --batch 8 --seq 128 --policy p16-train --ckpt-dir /tmp/ck
+
+Wires together every substrate: config -> model -> policy -> data pipeline ->
+AdamW (posit moments optional) -> FT loop (async checkpoints, preemption,
+straggler monitor, auto-resume) -> metrics log.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core.pcsr import TransPolicy
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.ft.runtime import FaultTolerantLoop, PreemptionSignal
+from repro.launch.steps import make_train_step
+from repro.models.registry import build_model
+from repro.optim import AdamWConfig, adamw_init
+
+
+def _parse_policy(s: str) -> TransPolicy:
+    from repro.launch.dryrun import _parse_policy as pp
+    return pp(s)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--policy", default="none")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    policy = _parse_policy(args.policy)
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, moment_fmt=policy.optimizer)
+
+    pipe = SyntheticLMPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                               global_batch=args.batch, seed=args.seed)
+    params = model.init(jax.random.key(args.seed))
+    opt_state = adamw_init(params, opt_cfg)
+
+    step_fn_raw = make_train_step(model, policy, opt_cfg,
+                                  warmup=max(args.steps // 10, 1),
+                                  total_steps=args.steps)
+    jitted = jax.jit(step_fn_raw, donate_argnums=(0, 1))
+
+    def make_batch(step):
+        b = pipe.batch_at(step)
+        if cfg.family == "whisper":
+            k = jax.random.fold_in(jax.random.key(args.seed ^ 0xF0), step)
+            b["frames"] = jax.random.normal(
+                k, (args.batch, cfg.enc_frames, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            k = jax.random.fold_in(jax.random.key(args.seed ^ 0xF1), step)
+            b["patch_embeds"] = jax.random.normal(
+                k, (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        return b
+
+    history = []
+
+    def step_fn(state, step):
+        p, o = state["params"], state["opt"]
+        p, o, metrics = jitted(p, o, make_batch(step), jnp.asarray(step))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            history.append(m)
+            print(json.dumps(m), flush=True)
+        return {"params": p, "opt": o}
+
+    state = {"params": params, "opt": opt_state}
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2,
+                                fmt=policy.checkpoint)
+        loop = FaultTolerantLoop(ckpt=mgr, save_every=args.save_every,
+                                 preemption=PreemptionSignal(install_sigterm=True))
+        state, start = loop.resume(state)
+        if start:
+            print(f"[resume] from step {start}")
+        t0 = time.time()
+        state, nxt = loop.run(state, step_fn, start_step=start,
+                              num_steps=args.steps - start)
+        mgr.wait()
+        mgr.close()
+        print(json.dumps({"done": nxt, "wall_s": round(time.time() - t0, 1),
+                          **loop.stats}))
+    else:
+        t0 = time.time()
+        for step in range(args.steps):
+            state = step_fn(state, step)
+        print(json.dumps({"done": args.steps,
+                          "wall_s": round(time.time() - t0, 1)}))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f)
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pure-JAX model substrate (params = pytrees of arrays; no flax).
+
+Every linear layer routes through ``layers.apply_linear``, which consults the
+run's TransPolicy: float weights compute natively; posit-stored weights decode
+at the matmul boundary (serving) or quantize with a straight-through estimator
+(training) — the paper's codec-at-the-datapath placement, model-wide.
+"""

@@ -1,0 +1,293 @@
+"""Attention: GQA/MQA/MHA, causal / bidirectional / sliding-window / cross,
+training (full-sequence) and serving (KV-cache prefill + decode) paths.
+
+KV-cache transprecision (the paper's memory-savings claim at the serving
+bottleneck): when ``policy.kv_cache`` is a posit format, the cache is stored as
+uint8/16 codes; new K/V are encoded on write and tiles are decoded at the
+attention boundary (Pallas kernel on TPU, identical-contract XLA path on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.pcsr import TransPolicy
+from repro.models.layers import apply_linear, apply_rope, init_linear
+from repro.models.unroll import scan_or_unroll, unrolled
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True
+    window: int = 0          # >0: sliding-window (local) attention
+    is_cross: bool = False   # cross-attention (kv from encoder; no rope/causal)
+
+
+def init_attention(key, cfg: AttnCfg) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    return {
+        "wq": init_linear(kq, d, H * hd, bias=cfg.qkv_bias),
+        "wk": init_linear(kk, d, Hkv * hd, bias=cfg.qkv_bias),
+        "wv": init_linear(kv, d, Hkv * hd, bias=cfg.qkv_bias),
+        "wo": init_linear(ko, H * hd, d, scale=(H * hd) ** -0.5),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+Q_CHUNK = 512  # query-block size for memory-efficient attention
+
+
+def _sdpa_block(qg, k, v, scale, *, offset, causal, window):
+    """One query block. qg: (B,Lq,Hkv,g,hd); k/v: (B,T,Hkv,hd).
+
+    offset: absolute position of the block's first query. window may be a
+    traced scalar (0 = unbounded). Returns (B, Lq, Hkv, g, hd).
+    """
+    B, Lq = qg.shape[:2]
+    T = k.shape[1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if causal or window is not None:
+        qp = jnp.arange(Lq)[:, None] + offset
+        kp = jnp.arange(T)[None, :]
+        m = jnp.ones((Lq, T), bool)
+        if causal:
+            m &= kp <= qp
+        if window is not None:
+            weff = jnp.where(window > 0, window, T + 1)
+            m &= kp > qp - weff
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+
+
+def _sdpa(q, k, v, scale, *, causal=True, window=None, q_chunk=Q_CHUNK):
+    """Memory-efficient SDPA: scan over query blocks so only a
+    (B, H, q_chunk, T) score slab is ever live (the XLA-path stand-in for the
+    Pallas flash kernel on TPU). q: (B,S,H,hd), k/v: (B,T,Hkv,hd)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, S, Hkv, g, hd)
+    if unrolled():
+        # cost probes: one full-S block so every attention FLOP is HLO-visible
+        out = _sdpa_block(qg, k, v, scale, offset=0, causal=causal,
+                          window=window)
+        return out.reshape(B, S, H, hd)
+    if S <= q_chunk:
+        out = _sdpa_block(qg, k, v, scale, offset=0, causal=causal,
+                          window=window)
+        return out.reshape(B, S, H, hd)
+    nc = -(-S // q_chunk)
+    Sp = nc * q_chunk
+    if Sp != S:
+        qg = jnp.pad(qg, ((0, 0), (0, Sp - S), (0, 0), (0, 0), (0, 0)))
+    qb = qg.reshape(B, nc, q_chunk, Hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, idx_qb):
+        i, qblk = idx_qb
+        out = _sdpa_block(qblk, k, v, scale, offset=i * q_chunk,
+                          causal=causal, window=window)
+        return None, out
+
+    # remat: without it lax.scan saves every chunk's (B,H,Lq,T) score slab for
+    # the backward pass — exactly the S^2 buffer the chunking is here to avoid
+    body = jax.checkpoint(body)
+    _, outs = scan_or_unroll(body, None, (jnp.arange(nc), qb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+def make_mask(S: int, T: int, *, causal: bool, window: int,
+              offset: int = 0) -> Optional[jax.Array]:
+    """(S, T) bool; query position i corresponds to absolute position i+offset."""
+    if not causal and window <= 0:
+        return None
+    qp = jnp.arange(S)[:, None] + offset
+    kp = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    return m
+
+
+def apply_attention(params: dict, cfg: AttnCfg, x: jax.Array,
+                    policy: TransPolicy, *,
+                    xattn_kv: Optional[jax.Array] = None,
+                    positions: Optional[jax.Array] = None) -> jax.Array:
+    """Training / prefill full-sequence attention. x: (B, S, D)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = _split_heads(apply_linear(params["wq"], x, policy), H, hd)
+    kv_src = xattn_kv if cfg.is_cross else x
+    k = _split_heads(apply_linear(params["wk"], kv_src, policy), Hkv, hd)
+    v = _split_heads(apply_linear(params["wv"], kv_src, policy), Hkv, hd)
+    if cfg.use_rope and not cfg.is_cross:
+        if positions is None:
+            positions = jnp.arange(S)[None]
+        q = apply_rope(q, positions, cfg.rope_base)
+        k = apply_rope(k, positions, cfg.rope_base)
+    out = _sdpa(q, k, v, hd ** -0.5,
+                causal=cfg.causal and not cfg.is_cross,
+                window=cfg.window if (cfg.window and not cfg.is_cross) else None)
+    return apply_linear(params["wo"], out.reshape(B, S, H * hd), policy)
+
+
+def apply_attention_dynwin(params: dict, cfg: AttnCfg, x: jax.Array,
+                           policy: TransPolicy, *, window, rope_base,
+                           positions: Optional[jax.Array] = None) -> jax.Array:
+    """apply_attention with window / rope_base as *traced* per-layer scalars.
+
+    Lets heterogeneous layer patterns (gemma3 5-local:1-global) run under one
+    lax.scan body: window==0 means unbounded (full causal).
+    """
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = _split_heads(apply_linear(params["wq"], x, policy), H, hd)
+    k = _split_heads(apply_linear(params["wk"], x, policy), Hkv, hd)
+    v = _split_heads(apply_linear(params["wv"], x, policy), Hkv, hd)
+    if cfg.use_rope:
+        if positions is None:
+            positions = jnp.arange(S)[None]
+        q = apply_rope(q, positions, rope_base)
+        k = apply_rope(k, positions, rope_base)
+    out = _sdpa(q, k, v, hd ** -0.5, causal=True, window=window)
+    return apply_linear(params["wo"], out.reshape(B, S, H * hd), policy)
+
+
+# ------------------------------------------------------------- KV cache -------
+
+def init_kv_cache(B: int, S_max: int, cfg: AttnCfg, policy: TransPolicy) -> dict:
+    """Cache layout (B, Hkv, S_max, hd); posit codes if policy.kv_cache set."""
+    fmt = policy.kv_cache
+    if fmt is not None:
+        dt = jnp.uint8 if fmt.nbits == 8 else jnp.uint16
+    else:
+        dt = jnp.float32 if policy.compute_dtype == "f32" else jnp.bfloat16
+    shape = (B, cfg.n_kv, S_max, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "len": jnp.zeros((B,), jnp.int32)}
+
+
+def _store(cache_arr, new, pos, policy):
+    """Write (B, Hkv, s, hd) `new` at sequence offset pos (scalar or (B,))."""
+    fmt = policy.kv_cache
+    if fmt is not None:
+        new = posit_encode(new.astype(jnp.float32), fmt.nbits, fmt.es)
+    else:
+        new = new.astype(cache_arr.dtype)
+    return jax.lax.dynamic_update_slice(
+        cache_arr, new, (0, 0, pos, 0))
+
+
+def _load(cache_arr, policy):
+    fmt = policy.kv_cache
+    if fmt is not None:
+        return posit_decode(cache_arr, fmt.nbits, fmt.es)
+    return cache_arr.astype(jnp.float32)
+
+
+def prefill_attention(params: dict, cfg: AttnCfg, x: jax.Array, cache: dict,
+                      policy: TransPolicy,
+                      xattn_kv: Optional[jax.Array] = None) -> tuple:
+    """Full-sequence attention that also fills the KV cache. x: (B, S, D)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = _split_heads(apply_linear(params["wq"], x, policy), H, hd)
+    kv_src = xattn_kv if cfg.is_cross else x
+    k = _split_heads(apply_linear(params["wk"], kv_src, policy), Hkv, hd)
+    v = _split_heads(apply_linear(params["wv"], kv_src, policy), Hkv, hd)
+    if cfg.use_rope and not cfg.is_cross:
+        pos = jnp.arange(S)[None]
+        q = apply_rope(q, pos, cfg.rope_base)
+        k = apply_rope(k, pos, cfg.rope_base)
+    T = k.shape[1]
+    out = _sdpa(q, k, v, hd ** -0.5,
+                causal=cfg.causal and not cfg.is_cross,
+                window=cfg.window if (cfg.window and not cfg.is_cross) else None)
+    y = apply_linear(params["wo"], out.reshape(B, S, H * hd), policy)
+    cache = dict(cache)
+    kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)  # (B,Hkv,T,hd)
+    Sc = cache["k"].shape[2]
+    if T > Sc:
+        # rolling window buffer (gemma3 local layers): keep the last Sc
+        # positions, placed at their (pos % Sc) slots so decode can continue
+        kt = jnp.roll(kt[:, :, T - Sc:], shift=T % Sc, axis=2)
+        vt = jnp.roll(vt[:, :, T - Sc:], shift=T % Sc, axis=2)
+    cache["k"] = _store(cache["k"], kt, 0, policy)
+    cache["v"] = _store(cache["v"], vt, 0, policy)
+    cache["len"] = jnp.full_like(cache["len"], min(T, Sc))
+    return y, cache
+
+
+def decode_attention_step(params: dict, cfg: AttnCfg, x_t: jax.Array,
+                          cache: dict, pos, policy: TransPolicy,
+                          *, rolling: bool = False,
+                          abs_pos=None) -> tuple:
+    """One decode step. x_t: (B, 1, D); pos: scalar int32 *cache write index*.
+
+    rolling=True: the cache is a circular window buffer (gemma3 local layers):
+    every slot written so far is valid and the window bound is implicit in the
+    buffer size. ``abs_pos`` is the absolute sequence position for RoPE when it
+    differs from the write index (defaults to pos).
+    """
+    B, _, _ = x_t.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = _split_heads(apply_linear(params["wq"], x_t, policy), H, hd)   # (B,1,H,hd)
+    if cfg.is_cross:
+        # cross-attention reads the (already prefilled) encoder cache only
+        k = _load(cache["k"], policy)   # (B,Hkv,T,hd)
+        v = _load(cache["v"], policy)
+        new_cache = cache
+    else:
+        kn = _split_heads(apply_linear(params["wk"], x_t, policy), Hkv, hd)
+        vn = _split_heads(apply_linear(params["wv"], x_t, policy), Hkv, hd)
+        if cfg.use_rope:
+            p1 = jnp.full((1, 1), pos if abs_pos is None else abs_pos, jnp.int32)
+            q = apply_rope(q, p1, cfg.rope_base)
+            kn = apply_rope(kn, p1, cfg.rope_base)
+        new_cache = dict(cache)
+        new_cache["k"] = _store(cache["k"], kn.transpose(0, 2, 1, 3), pos, policy)
+        new_cache["v"] = _store(cache["v"], vn.transpose(0, 2, 1, 3), pos, policy)
+        new_cache["len"] = cache["len"] + 1
+        k = _load(new_cache["k"], policy)
+        v = _load(new_cache["v"], policy)
+
+    S_max = k.shape[2]
+    qf = q.reshape(B, Hkv, H // Hkv, hd).astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qf, k)
+    t = jnp.arange(S_max)[None, None, None, :]
+    if cfg.is_cross:
+        valid = t < cache["len"][:, None, None, None]
+    elif rolling:
+        # circular buffer: every slot written so far is valid (window implicit)
+        ap = pos if abs_pos is None else abs_pos
+        valid = t < jnp.minimum(ap + 1, S_max)
+    else:
+        valid = t <= pos
+        if cfg.window > 0:
+            valid &= t > pos - cfg.window
+    scores = jnp.where(valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v).reshape(B, 1, H * hd)
+    y = apply_linear(params["wo"], out.astype(x_t.dtype), policy)
+    return y, new_cache

@@ -1,0 +1,188 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed per the
+assignment: ``input_specs()`` provides precomputed (B, frames, d_model) frame
+embeddings in place of the conv1d+mel frontend).
+
+Encoder: bidirectional attention + GELU MLP, pre-LayerNorm, sinusoidal pos.
+Decoder: causal self-attention + cross-attention + GELU MLP, learned pos,
+tied embedding read-out. Serving: encoder runs once; each decoder layer keeps
+a self KV cache (posit-compressible) and a prefilled cross KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.core.pcsr import TransPolicy
+from repro.models import attention as attn
+from repro.models.attention import AttnCfg
+from repro.models.shardhooks import maybe_shard
+from repro.models.unroll import scan_or_unroll
+from repro.models.layers import (apply_embedding, apply_gelu_mlp,
+                                 apply_layernorm, apply_linear,
+                                 embedding_logits, init_embedding,
+                                 init_gelu_mlp, init_layernorm, init_linear,
+                                 sinusoidal_positions)
+
+MAX_TGT = 448  # whisper's architectural decoder length
+
+
+def _enc_attn_cfg(cfg: ModelCfg) -> AttnCfg:
+    return AttnCfg(d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                   head_dim=cfg.hd, qkv_bias=True, causal=False, use_rope=False)
+
+
+def _dec_self_cfg(cfg: ModelCfg) -> AttnCfg:
+    return AttnCfg(d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                   head_dim=cfg.hd, qkv_bias=True, causal=True, use_rope=False)
+
+
+def _dec_cross_cfg(cfg: ModelCfg) -> AttnCfg:
+    return AttnCfg(d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                   head_dim=cfg.hd, qkv_bias=True, causal=False,
+                   use_rope=False, is_cross=True)
+
+
+def init_encdec(key, cfg: ModelCfg) -> dict:
+    keys = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_layernorm(cfg.d_model),
+                "attn": attn.init_attention(k1, _enc_attn_cfg(cfg)),
+                "ln2": init_layernorm(cfg.d_model),
+                "mlp": init_gelu_mlp(k2, cfg.d_model, cfg.d_ff)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": init_layernorm(cfg.d_model),
+                "self": attn.init_attention(k1, _dec_self_cfg(cfg)),
+                "ln2": init_layernorm(cfg.d_model),
+                "cross": attn.init_attention(k2, _dec_cross_cfg(cfg)),
+                "ln3": init_layernorm(cfg.d_model),
+                "mlp": init_gelu_mlp(k3, cfg.d_model, cfg.d_ff)}
+
+    ek = jax.random.split(keys[0], cfg.enc_layers)
+    dk = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "frame_proj": init_linear(keys[2], cfg.d_model, cfg.d_model, bias=True),
+        "enc_blocks": jax.vmap(enc_layer)(ek),
+        "enc_ln": init_layernorm(cfg.d_model),
+        "embed": init_embedding(keys[3], cfg.vocab, cfg.d_model),
+        "pos_embed": jax.random.normal(keys[4], (MAX_TGT, cfg.d_model),
+                                       jnp.float32) * 0.01,
+        "dec_blocks": jax.vmap(dec_layer)(dk),
+        "dec_ln": init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelCfg,
+           policy: TransPolicy, *, remat: bool = True) -> jax.Array:
+    """frames: (B, T_enc, D) stub embeddings -> encoder states (B, T_enc, D)."""
+    T = frames.shape[1]
+    x = apply_linear(params["frame_proj"], frames, policy)
+    x = x + sinusoidal_positions(T, cfg.d_model)[None].astype(x.dtype)
+    ecfg = _enc_attn_cfg(cfg)
+
+    def body(x, p):
+        x = maybe_shard(x, "residual")
+        h = apply_layernorm(p["ln1"], x)
+        x = x + attn.apply_attention(p["attn"], ecfg, h, policy)
+        h = apply_layernorm(p["ln2"], x)
+        return x + apply_gelu_mlp(p["mlp"], h, policy), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = scan_or_unroll(fn, x, params["enc_blocks"])
+    return apply_layernorm(params["enc_ln"], x)
+
+
+def decode_train(params: dict, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ModelCfg, policy: TransPolicy, *,
+                 remat: bool = True) -> jax.Array:
+    """tokens: (B, S) -> hidden (B, S, D) (positions wrap past MAX_TGT)."""
+    B, S = tokens.shape
+    x = apply_embedding(params["embed"], tokens)
+    pos_idx = jnp.arange(S) % MAX_TGT
+    x = x + params["pos_embed"][pos_idx][None].astype(x.dtype)
+    scfg, ccfg = _dec_self_cfg(cfg), _dec_cross_cfg(cfg)
+
+    def body(x, p):
+        x = maybe_shard(x, "residual")
+        h = apply_layernorm(p["ln1"], x)
+        x = x + attn.apply_attention(p["self"], scfg, h, policy)
+        h = apply_layernorm(p["ln2"], x)
+        x = x + attn.apply_attention(p["cross"], ccfg, h, policy,
+                                     xattn_kv=enc_out)
+        h = apply_layernorm(p["ln3"], x)
+        return x + apply_gelu_mlp(p["mlp"], h, policy), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = scan_or_unroll(fn, x, params["dec_blocks"])
+    return apply_layernorm(params["dec_ln"], x)
+
+
+def encdec_loss(params: dict, batch: dict, cfg: ModelCfg,
+                policy: TransPolicy) -> tuple[jax.Array, dict]:
+    enc_out = encode(params, batch["frames"], cfg, policy)
+    h = decode_train(params, batch["tokens"], enc_out, cfg, policy)
+    logits = embedding_logits(params["embed"], h)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(lp, batch["labels"][..., None], axis=-1)[..., 0]
+    ce = -jnp.mean(ll)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+# ----------------------------------------------------------------- serving ----
+
+def init_dec_cache(params: dict, frames: jax.Array, cfg: ModelCfg,
+                   policy: TransPolicy, S_max: int) -> dict:
+    """Run the encoder and prefill every layer's cross KV cache."""
+    B = frames.shape[0]
+    enc_out = encode(params, frames, cfg, policy, remat=False)
+    T = enc_out.shape[1]
+    scfg, ccfg = _dec_self_cfg(cfg), _dec_cross_cfg(cfg)
+
+    def per_layer(p):
+        c = attn.init_kv_cache(B, T, ccfg, policy)
+        k = apply_linear(p["cross"]["wk"], enc_out, policy) \
+            .reshape(B, T, cfg.n_kv, cfg.hd)
+        v = apply_linear(p["cross"]["wv"], enc_out, policy) \
+            .reshape(B, T, cfg.n_kv, cfg.hd)
+        c["k"] = attn._store(c["k"], k.transpose(0, 2, 1, 3), 0, policy)
+        c["v"] = attn._store(c["v"], v.transpose(0, 2, 1, 3), 0, policy)
+        c["len"] = jnp.full((B,), T, jnp.int32)
+        return c
+
+    cross = jax.vmap(per_layer)(params["dec_blocks"])
+    self_kv = jax.vmap(
+        lambda _: attn.init_kv_cache(B, S_max, scfg, policy)
+    )(jnp.arange(cfg.n_layers))
+    return {"cross": cross, "self": self_kv, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
+                policy: TransPolicy) -> tuple[jax.Array, dict]:
+    B = token_t.shape[0]
+    pos = cache["pos"]
+    x = apply_embedding(params["embed"], token_t[:, None])
+    x = x + params["pos_embed"][(pos % MAX_TGT)][None, None].astype(x.dtype)
+    scfg, ccfg = _dec_self_cfg(cfg), _dec_cross_cfg(cfg)
+
+    def body(x_carry, layer):
+        p, cself, ccross = layer
+        h = apply_layernorm(p["ln1"], x_carry)
+        a, c2 = attn.decode_attention_step(p["self"], scfg, h, cself, pos, policy)
+        x2 = x_carry + a
+        h = apply_layernorm(p["ln2"], x2)
+        a2, _ = attn.decode_attention_step(p["cross"], ccfg, h, ccross, pos, policy)
+        x2 = x2 + a2
+        h = apply_layernorm(p["ln3"], x2)
+        return x2 + apply_gelu_mlp(p["mlp"], h, policy), c2
+
+    x, new_self = scan_or_unroll(
+        body, x, (params["dec_blocks"], cache["self"], cache["cross"]))
+    h = apply_layernorm(params["dec_ln"], x)
+    logits = embedding_logits(params["embed"], h)[:, 0]
+    return logits, {"cross": cache["cross"], "self": new_self, "pos": pos + 1}

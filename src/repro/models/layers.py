@@ -1,0 +1,168 @@
+"""Parameter init + core layer ops (linear, norm, rotary, MLP).
+
+Parameter convention: params are nested dicts of jnp arrays. Posit-stored
+weights appear as ``{"w_codes": uintN, ...}`` after ``quantize_params``; float
+weights as ``{"w": floatN}``. The TransPolicy (static) says how to interpret
+them — mirroring how the paper's pcsr, not the register file, carries format.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.pcsr import TransPolicy
+from repro.core.types import PositFmt, compute_dtype_for
+
+
+def _compute_dtype(policy: TransPolicy):
+    return jnp.float32 if policy.compute_dtype == "f32" else jnp.bfloat16
+
+
+# ------------------------------------------------------------------ linear ----
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: Optional[float] = None, dtype=jnp.float32) -> dict:
+    if scale is None:
+        scale = d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def quantize_linear(p: dict, fmt: PositFmt) -> dict:
+    """Convert a float linear param dict to posit storage (serving path)."""
+    q = {"w_codes": posit_encode(p["w"].astype(jnp.float32), fmt.nbits, fmt.es)}
+    if "b" in p:
+        q["b"] = p["b"]  # biases stay float: O(d) storage, numerically sensitive
+    return q
+
+
+def effective_weight(p: dict, policy: TransPolicy, es=None) -> jax.Array:
+    """The weight as seen by the matmul datapath.
+
+    * posit codes       -> decode (exact; bf16 target for p8)
+    * float + posit pol -> straight-through quantize (training: master weights
+                           stay f32, forward sees posit-rounded values)
+    * float, no policy  -> as-is (IEEE bypass)
+    """
+    if "w_codes" in p:
+        fmt = policy.weights
+        assert fmt is not None, "posit-coded params need policy.weights"
+        return posit_decode(p["w_codes"], fmt.nbits, fmt.es if es is None else es)
+    w = p["w"]
+    fmt = policy.weights
+    if fmt is not None:
+        wf = w.astype(jnp.float32)
+        e = fmt.es if es is None else es
+        qw = posit_decode(posit_encode(wf, fmt.nbits, e), fmt.nbits, e)
+        w = w + jax.lax.stop_gradient(qw - wf).astype(w.dtype)
+    return w
+
+
+def apply_linear(p: dict, x: jax.Array, policy: TransPolicy, es=None) -> jax.Array:
+    cd = _compute_dtype(policy)
+    w = effective_weight(p, policy, es).astype(cd)
+    y = jnp.matmul(x.astype(cd), w, preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- norms ----
+
+def init_rmsnorm(d: int) -> dict:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def apply_rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * p["g"]).astype(x.dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rotary -----
+
+def rope_freqs(head_dim: int, base: float = 10000.0) -> jax.Array:
+    return 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, base)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# -------------------------------------------------------------------- MLPs ----
+
+def init_swiglu(key, d: int, f: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, f),
+        "up": init_linear(k2, d, f),
+        "down": init_linear(k3, f, d, scale=f ** -0.5),
+    }
+
+
+def apply_swiglu(p: dict, x: jax.Array, policy: TransPolicy) -> jax.Array:
+    g = apply_linear(p["gate"], x, policy)
+    u = apply_linear(p["up"], x, policy)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return apply_linear(p["down"], h, policy)
+
+
+def init_gelu_mlp(key, d: int, f: int, *, bias: bool = True) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": init_linear(k1, d, f, bias=bias),
+        "down": init_linear(k2, f, d, bias=bias, scale=f ** -0.5),
+    }
+
+
+def apply_gelu_mlp(p: dict, x: jax.Array, policy: TransPolicy) -> jax.Array:
+    h = jax.nn.gelu(apply_linear(p["up"], x, policy).astype(jnp.float32))
+    return apply_linear(p["down"], h.astype(x.dtype), policy)
+
+
+# -------------------------------------------------------------- embeddings ----
+
+def init_embedding(key, vocab: int, d: int) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)}
+
+
+def apply_embedding(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def embedding_logits(p: dict, h: jax.Array) -> jax.Array:
+    """Tied read-out: h @ table.T."""
+    return jnp.matmul(
+        h.astype(jnp.float32), p["table"].T, preferred_element_type=jnp.float32)

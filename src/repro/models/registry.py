@@ -1,0 +1,70 @@
+"""Model registry: one uniform interface over all families.
+
+  model = build_model(cfg)
+  params = model.init(key)
+  loss, metrics = model.loss(params, batch, policy)
+  logits, cache = model.prefill(params, ..., policy) / model.decode_step(...)
+
+The VLM family reuses the decoder-only path with a stubbed patch-embedding
+prefix (assignment: modality frontends are stubs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.core.pcsr import TransPolicy
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelCfg
+    init: Callable
+    loss: Callable            # (params, batch, policy) -> (loss, metrics)
+    forward: Callable         # (params, batch, policy) -> hidden
+    init_cache: Callable      # serving
+    prefill: Callable
+    decode_step: Callable
+
+
+def build_model(cfg: ModelCfg) -> Model:
+    if cfg.family == "whisper":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss=lambda p, b, pol: encdec.encdec_loss(p, b, cfg, pol),
+            forward=lambda p, b, pol: encdec.decode_train(
+                p, b["tokens"], encdec.encode(p, b["frames"], cfg, pol), cfg, pol),
+            init_cache=lambda p, b, pol, S_max: encdec.init_dec_cache(
+                p, b["frames"], cfg, pol, S_max),
+            prefill=None,
+            decode_step=lambda p, tok, cache, pol: encdec.decode_step(
+                p, tok, cache, cfg, pol),
+        )
+
+    lm_family = cfg.family if cfg.family != "vlm" else "dense"
+
+    def loss(p, b, pol):
+        return transformer.lm_loss(p, b, cfg, pol)
+
+    def fwd(p, b, pol):
+        h, _ = transformer.forward(p, b["tokens"], cfg, pol,
+                                   patch_embeds=b.get("patch_embeds"))
+        return h
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        loss=loss,
+        forward=fwd,
+        init_cache=lambda B, S_max, pol: transformer.init_cache(cfg, B, S_max, pol),
+        prefill=lambda p, tokens, pol, **kw: transformer.prefill(
+            p, tokens, cfg, pol, **kw),
+        decode_step=lambda p, tok, cache, pol: transformer.decode_step(
+            p, tok, cache, cfg, pol),
+    )

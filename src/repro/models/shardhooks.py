@@ -1,0 +1,41 @@
+"""Activation-sharding hook: the launcher injects sequence-parallel / TP
+constraints without the model code depending on a mesh.
+
+Model code calls ``maybe_shard(x, kind)``; by default a no-op (single-device
+training, smoke tests). The dry-run/production launcher installs a hook that
+applies ``jax.lax.with_sharding_constraint`` with the run's mesh axes:
+
+  kind="residual"  — the inter-block stream (B, S, D): batch over dp axes and
+                     S over "model" (Megatron-style sequence parallelism: the
+                     remat-saved layer checkpoints shrink by the TP degree)
+  kind="logits"    — (B, S, V): vocab over "model"
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+_HOOK: Optional[Callable] = None
+
+
+def set_activation_sharding(hook: Optional[Callable]) -> None:
+    global _HOOK
+    _HOOK = hook
+
+
+def maybe_shard(x, kind: str):
+    return _HOOK(x, kind) if _HOOK is not None else x
+
+
+class activation_sharding:
+    """Context manager used by launchers around trace/lower time."""
+
+    def __init__(self, hook):
+        self.hook = hook
+
+    def __enter__(self):
+        set_activation_sharding(self.hook)
+        return self
+
+    def __exit__(self, *exc):
+        set_activation_sharding(None)
+        return False

@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD) block — chunked-parallel training form + O(1) decode step.
+
+The recurrence  h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t ⊗ x_t),
+                y_t = C_t · h_t + D ∘ x_t
+is evaluated chunk-parallel for training (intra-chunk attention-like matmuls,
+inter-chunk state carry over a *static python loop* so every FLOP is visible
+in the lowered HLO — keeps the roofline honest, unlike a lax.scan while-loop),
+and as a single elementwise state update for decode.
+
+Recurrent state stays f32 regardless of the posit policy (DESIGN.md §6: no
+quire in this design, so re-rounding the carried state every step would
+accumulate error; weights/activations still follow the policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pcsr import TransPolicy
+from repro.models.layers import apply_linear, init_linear
+from repro.models.unroll import scan_or_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64       # p
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(key, cfg: SSMCfg) -> dict:
+    """Projections are separate (not one fused in_proj): each output then
+    carries its own TP sharding and the z/x/B/C/dt splits never slice across
+    shard boundaries (a fused 2*di+2N+nh projection forces GSPMD to reshard
+    at every misaligned slice — measured 4x collective blowup on zamba2)."""
+    kz, kx, kb_, kc_, kt, kcv, ko = jax.random.split(key, 7)
+    di, N, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        "z_proj": init_linear(kz, cfg.d_model, di),
+        "x_proj": init_linear(kx, cfg.d_model, di),
+        "B_proj": init_linear(kb_, cfg.d_model, N),
+        "C_proj": init_linear(kc_, cfg.d_model, N),
+        "dt_proj": init_linear(kt, cfg.d_model, nh),
+        # depthwise causal convs: conv(concat) == concat(convs), kept separate
+        "conv_x": {"w": jax.random.normal(kcv, (cfg.conv_width, di),
+                                          jnp.float32) * 0.2,
+                   "b": jnp.zeros((di,), jnp.float32)},
+        "conv_B": {"w": jnp.full((cfg.conv_width, N), 0.25, jnp.float32),
+                   "b": jnp.zeros((N,), jnp.float32)},
+        "conv_C": {"w": jnp.full((cfg.conv_width, N), 0.25, jnp.float32),
+                   "b": jnp.zeros((N,), jnp.float32)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_g": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ko, di, cfg.d_model, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. xbc: (B, S, Ch); w: (W, Ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(W):  # static, tiny
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _gated_rmsnorm(x, z, g, eps=1e-6):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(var + eps) * g
+
+
+def apply_ssm(p: dict, cfg: SSMCfg, x: jax.Array, policy: TransPolicy) -> jax.Array:
+    """Training / prefill. x: (B, S, D) with S a multiple of... any S (padded)."""
+    B, S, _ = x.shape
+    di, N, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    L = min(cfg.chunk, S)
+    n_chunks = -(-S // L)
+    Sp = n_chunks * L
+
+    z = apply_linear(p["z_proj"], x, policy)
+    xs_r = _causal_conv(apply_linear(p["x_proj"], x, policy),
+                        p["conv_x"]["w"], p["conv_x"]["b"])
+    Bm = _causal_conv(apply_linear(p["B_proj"], x, policy),
+                      p["conv_B"]["w"], p["conv_B"]["b"])     # (B, S, N)
+    Cm = _causal_conv(apply_linear(p["C_proj"], x, policy),
+                      p["conv_C"]["w"], p["conv_C"]["b"])     # (B, S, N)
+    xs = xs_r.reshape(B, S, nh, hp)
+    dt = apply_linear(p["dt_proj"], x, policy)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, S, nh)
+    A = -jnp.exp(p["A_log"])                       # (nh,) negative
+
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        xs = jnp.pad(xs, pad)
+        Bm, Cm = (jnp.pad(a, ((0, 0), (0, Sp - S), (0, 0))) for a in (Bm, Cm))
+        dt = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0)))
+
+    xs = xs.reshape(B, n_chunks, L, nh, hp).astype(jnp.float32)
+    Bc = Bm.reshape(B, n_chunks, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, n_chunks, L, N).astype(jnp.float32)
+    dtc = dt.reshape(B, n_chunks, L, nh)
+
+    dA = dtc * A                                   # (B, nc, L, nh) log-decay
+    seg = jnp.cumsum(dA, axis=2)                   # within-chunk cumulative
+    total = seg[:, :, -1, :]                       # (B, nc, nh)
+
+    def chunk_body(h, inputs):
+        xc, bc, cc, dtk, segc, tot = inputs
+        # intra-chunk: scores[s,t] = (C_s·B_t) * exp(seg_s - seg_t) * dt_t, t<=s
+        # (mask inside the exponent: exp of the masked positive diffs would be
+        # inf and poison the backward pass via 0*inf)
+        scores = jnp.einsum("bsn,btn->bst", cc, bc)[:, :, :, None]
+        logdecay = segc[:, :, None, :] - segc[:, None, :, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        decay = jnp.exp(jnp.where(causal, logdecay, -1e30))
+        w = scores * decay * dtk[:, None, :, :]
+        y_intra = jnp.einsum("bsth,bthp->bshp", w, xc)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bsn,bhpn,bsh->bshp", cc, h, jnp.exp(segc))
+        # state update: h' = exp(total) h + sum_t exp(total - seg_t) dt_t B_t x_t
+        carry_w = jnp.exp(tot[:, None, :] - segc) * dtk   # (B, L, nh)
+        h = h * jnp.exp(tot)[:, :, None, None] + jnp.einsum(
+            "btn,bthp,bth->bhpn", bc, xc, carry_w)
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((B, nh, hp, N), jnp.float32)
+    xs_c = (xs.transpose(1, 0, 2, 3, 4), Bc.transpose(1, 0, 2, 3),
+            Cc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+            seg.transpose(1, 0, 2, 3), total.transpose(1, 0, 2))
+    _, ys = scan_or_unroll(jax.checkpoint(chunk_body), h0, xs_c)
+
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, nh, hp)[:, :S]
+    y = y + xs.reshape(B, Sp, nh, hp)[:, :S] * p["D"][None, None, :, None]
+    y = _gated_rmsnorm(y.reshape(B, S, di), z, p["norm_g"])
+    return apply_linear(p["out_proj"], y.astype(x.dtype), policy)
+
+
+# ------------------------------------------------------------- decode step ----
+
+def init_ssm_state(B: int, cfg: SSMCfg) -> dict:
+    return {
+        "h": jnp.zeros((B, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.d_inner), jnp.float32),
+        "convBC": jnp.zeros((B, cfg.conv_width - 1, 2 * cfg.d_state),
+                            jnp.float32),
+    }
+
+
+def decode_ssm_step(p: dict, cfg: SSMCfg, x_t: jax.Array, state: dict,
+                    policy: TransPolicy) -> tuple[jax.Array, dict]:
+    """x_t: (B, 1, D) -> (B, 1, D); O(1) state update."""
+    B = x_t.shape[0]
+    di, N, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z = apply_linear(p["z_proj"], x_t, policy)
+    x_in = apply_linear(p["x_proj"], x_t, policy)[:, 0].astype(jnp.float32)
+    bc_in = jnp.concatenate(
+        [apply_linear(p["B_proj"], x_t, policy)[:, 0],
+         apply_linear(p["C_proj"], x_t, policy)[:, 0]], -1).astype(jnp.float32)
+    hist = jnp.concatenate([state["conv"], x_in[:, None, :]], axis=1)
+    histBC = jnp.concatenate([state["convBC"], bc_in[:, None, :]], axis=1)
+    wBC = jnp.concatenate([p["conv_B"]["w"], p["conv_C"]["w"]], -1)
+    bBC = jnp.concatenate([p["conv_B"]["b"], p["conv_C"]["b"]], -1)
+    xt = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, p["conv_x"]["w"])
+                     + p["conv_x"]["b"]).reshape(B, nh, hp)
+    bct = jax.nn.silu(jnp.einsum("bwc,wc->bc", histBC, wBC) + bBC)
+    Bt, Ct = bct[:, :N], bct[:, N:]
+    dtt = jax.nn.softplus(
+        apply_linear(p["dt_proj"], x_t, policy)[:, 0].astype(jnp.float32)
+        + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtt * A)                                    # (B, nh)
+    h = state["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bt, xt, dtt)
+    y = jnp.einsum("bhpn,bn->bhp", h, Ct) + xt * p["D"][None, :, None]
+    y = _gated_rmsnorm(y.reshape(B, 1, di), z, p["norm_g"])
+    out = apply_linear(p["out_proj"], y.astype(x_t.dtype), policy)
+    new_state = {"h": h, "conv": hist[:, 1:], "convBC": histBC[:, 1:]}
+    return out, new_state

@@ -1,0 +1,516 @@
+"""Decoder-only LM assembly for the dense / moe / gemma3 / zamba / xlstm
+families: init, forward (train), sequence-chunked loss, and the serving path
+(cache init / prefill / decode_step).
+
+Layer stacks are built as *segments*: maximal homogeneous runs of layers whose
+params are stacked and applied with lax.scan (remat-wrapped) — one HLO body per
+segment regardless of depth. Heterogeneous patterns (gemma3 local/global rope
+and window, xlstm mLSTM/sLSTM, zamba shared-attention interleave) become
+per-layer scalar arrays fed as scan xs, or segment boundaries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.core.pcsr import TransPolicy
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import AttnCfg
+from repro.models.shardhooks import maybe_shard
+from repro.models.unroll import scan_or_unroll, unrolled
+from repro.models.layers import (apply_embedding, apply_linear, apply_rmsnorm,
+                                 apply_swiglu, embedding_logits, init_embedding,
+                                 init_linear, init_rmsnorm, init_swiglu)
+
+LOSS_CHUNK = 1024  # sequence-chunked CE to bound peak logits memory
+
+
+# ---------------------------------------------------------------------------
+# layer-pattern metadata
+# ---------------------------------------------------------------------------
+
+def attn_cfg(cfg: ModelCfg, *, window: int = 0, rope_base: float | None = None,
+             causal: bool = True, is_cross: bool = False,
+             use_rope: bool = True) -> AttnCfg:
+    return AttnCfg(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.hd, qkv_bias=cfg.qkv_bias,
+        rope_base=cfg.rope_base if rope_base is None else rope_base,
+        causal=causal, window=window, is_cross=is_cross, use_rope=use_rope,
+    )
+
+
+def gemma3_layer_meta(cfg: ModelCfg):
+    """Per-layer (window, rope_base) arrays: local_ratio local per 1 global.
+
+    Built in numpy so the pattern stays concrete under jit tracing (prefill
+    reads individual entries as python scalars).
+    """
+    import numpy as np
+
+    period = cfg.local_ratio + 1
+    is_global = np.asarray(
+        [(i % period) == cfg.local_ratio for i in range(cfg.n_layers)])
+    window = np.where(is_global, 0, cfg.window).astype(np.int32)
+    rope = np.where(is_global, cfg.global_rope_base, cfg.rope_base) \
+        .astype(np.float32)
+    return window, rope
+
+
+def _stack_init(fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelCfg) -> dict:
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": init_embedding(keys[0], cfg.vocab, cfg.d_model)}
+    acfg = attn_cfg(cfg)
+
+    if cfg.family in ("dense", "moe", "gemma3", "vlm"):
+        def one(k):
+            ks = jax.random.split(k, 4)
+            p = {
+                "ln1": init_rmsnorm(cfg.d_model),
+                "attn": attn.init_attention(ks[0], acfg),
+                "ln2": init_rmsnorm(cfg.d_model),
+            }
+            if cfg.family == "moe":
+                p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                            cfg.n_experts)
+            else:
+                p["mlp"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff)
+            return p
+        params["blocks"] = _stack_init(one, keys[1], cfg.n_layers)
+
+    elif cfg.family == "zamba":
+        scfg = _zamba_ssm_cfg(cfg)
+        def one(k):
+            return {"ln": init_rmsnorm(cfg.d_model),
+                    "ssm": ssm_mod.init_ssm(k, scfg)}
+        params["blocks"] = _stack_init(one, keys[1], cfg.n_layers)
+        ks = jax.random.split(keys[2], 3)
+        params["shared"] = {
+            "ln1": init_rmsnorm(cfg.d_model),
+            "attn": attn.init_attention(ks[0], acfg),
+            "ln2": init_rmsnorm(cfg.d_model),
+            "mlp": init_swiglu(ks[1], cfg.d_model, cfg.d_ff),
+        }
+
+    elif cfg.family == "xlstm":
+        xcfg = _xlstm_cfg(cfg)
+        mo, so = [], []
+        for i in range(cfg.n_layers):
+            (so if _is_slstm(cfg, i) else mo).append(i)
+        km = jax.random.split(keys[1], max(len(mo), 1))
+        ksl = jax.random.split(keys[2], max(len(so), 1))
+        params["mlstm"] = jax.vmap(
+            lambda k: {"ln": init_rmsnorm(cfg.d_model),
+                       "blk": xlstm_mod.init_mlstm(k, xcfg)})(km[:len(mo)]) \
+            if mo else {}
+        params["slstm"] = jax.vmap(
+            lambda k: {"ln": init_rmsnorm(cfg.d_model),
+                       "blk": xlstm_mod.init_slstm(k, xcfg)})(ksl[:len(so)]) \
+            if so else {}
+    else:
+        raise ValueError(cfg.family)
+
+    params["final_norm"] = init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(keys[3], cfg.d_model, cfg.vocab)
+    if cfg.family == "vlm" or cfg.n_patches:
+        params["patch_proj"] = init_linear(keys[4], cfg.d_model, cfg.d_model)
+    return params
+
+
+def _zamba_ssm_cfg(cfg: ModelCfg) -> ssm_mod.SSMCfg:
+    return ssm_mod.SSMCfg(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                          head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+
+
+def _xlstm_cfg(cfg: ModelCfg) -> xlstm_mod.XLSTMCfg:
+    return xlstm_mod.XLSTMCfg(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                              chunk=cfg.xlstm_chunk)
+
+
+def _is_slstm(cfg: ModelCfg, i: int) -> bool:
+    return cfg.slstm_every > 0 and (i % cfg.slstm_every == 1)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / no cache)
+# ---------------------------------------------------------------------------
+
+def _gemma3_is_global(cfg: ModelCfg, i: int) -> bool:
+    return (i % (cfg.local_ratio + 1)) == cfg.local_ratio
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelCfg,
+            policy: TransPolicy, *, patch_embeds: Optional[jax.Array] = None,
+            remat: bool = True) -> tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) -> hidden (B, S_total, D), aux loss. (vlm: patches prefix)."""
+    x = apply_embedding(params["embed"], tokens)
+    if patch_embeds is not None:
+        pe = apply_linear(params["patch_proj"], patch_embeds, policy)
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    aux_total = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "moe", "gemma3", "vlm"):
+        acfg = attn_cfg(cfg)
+        if cfg.family == "gemma3":
+            win_arr, rope_arr = gemma3_layer_meta(cfg)
+        else:
+            win_arr = jnp.zeros((cfg.n_layers,), jnp.int32)
+            rope_arr = jnp.full((cfg.n_layers,), cfg.rope_base, jnp.float32)
+
+        def body(carry, layer):
+            x, aux = carry
+            x = maybe_shard(x, "residual")
+            p, win, rope = layer
+            h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
+            a = attn.apply_attention_dynwin(p["attn"], acfg, h, policy,
+                                            window=win, rope_base=rope)
+            x = x + a
+            h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if "moe" in p:
+                y, aux_l = moe_mod.apply_moe(
+                    p["moe"], h, top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor, policy=policy)
+            else:
+                y, aux_l = apply_swiglu(p["mlp"], h, policy), 0.0
+            return (x + y, aux + aux_l), None
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = scan_or_unroll(
+            fn, (x, aux_total),
+            (params["blocks"], jnp.asarray(win_arr), jnp.asarray(rope_arr)))
+
+    elif cfg.family == "zamba":
+        scfg = _zamba_ssm_cfg(cfg)
+        acfg = attn_cfg(cfg)
+
+        def ssm_body(x, p):
+            x = maybe_shard(x, "residual")
+            h = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+            return x + ssm_mod.apply_ssm(p["ssm"], scfg, h, policy), None
+
+        fn = jax.checkpoint(ssm_body) if remat else ssm_body
+
+        def shared_body(x, sp):
+            h = apply_rmsnorm(sp["ln1"], x, cfg.norm_eps)
+            x = x + attn.apply_attention(sp["attn"], acfg, h, policy)
+            h = apply_rmsnorm(sp["ln2"], x, cfg.norm_eps)
+            return x + apply_swiglu(sp["mlp"], h, policy)
+
+        if remat:
+            shared_body = jax.checkpoint(shared_body)
+        sp = params["shared"]
+        for seg_start, seg_len, use_shared in _zamba_segments(cfg):
+            seg = jax.tree.map(lambda a: a[seg_start:seg_start + seg_len],
+                               params["blocks"])
+            x, _ = scan_or_unroll(fn, x, seg)
+            if use_shared:
+                x = shared_body(x, sp)
+
+    elif cfg.family == "xlstm":
+        xcfg = _xlstm_cfg(cfg)
+
+        def m_body(x, p):
+            x = maybe_shard(x, "residual")
+            h = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+            return x + xlstm_mod.apply_mlstm(p["blk"], xcfg, h, policy)
+
+        def s_body(x, p):
+            h = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+            return x + xlstm_mod.apply_slstm(p["blk"], xcfg, h, policy)
+
+        if remat:
+            m_body, s_body = jax.checkpoint(m_body), jax.checkpoint(s_body)
+        mi = si = 0
+        for i in range(cfg.n_layers):
+            if _is_slstm(cfg, i):
+                x = s_body(x, jax.tree.map(lambda a: a[si], params["slstm"]))
+                si += 1
+            else:
+                x = m_body(x, jax.tree.map(lambda a: a[mi], params["mlstm"]))
+                mi += 1
+    else:
+        raise ValueError(cfg.family)
+
+    return apply_rmsnorm(params["final_norm"], x, cfg.norm_eps), aux_total
+
+
+def _zamba_segments(cfg: ModelCfg):
+    """Yield (start, len, apply_shared_after) covering all n_layers."""
+    if not cfg.shared_attn_every:
+        return [(0, cfg.n_layers, False)]
+    segs = []
+    start = 0
+    while start < cfg.n_layers:
+        ln = min(cfg.shared_attn_every, cfg.n_layers - start)
+        segs.append((start, ln, ln == cfg.shared_attn_every))
+        start += ln
+    return segs
+
+
+def logits_fn(params: dict, h: jax.Array, cfg: ModelCfg,
+              policy: TransPolicy) -> jax.Array:
+    if cfg.tie_embeddings:
+        return embedding_logits(params["embed"], h)
+    return apply_linear(params["lm_head"], h, policy).astype(jnp.float32)
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelCfg, policy: TransPolicy,
+            *, aux_weight: float = 0.01) -> tuple[jax.Array, dict]:
+    """Sequence-chunked cross-entropy. batch: tokens (B,S), labels (B,S)."""
+    h, aux = forward(params, batch["tokens"], cfg, policy,
+                     patch_embeds=batch.get("patch_embeds"))
+    if "patch_embeds" in batch and batch["patch_embeds"] is not None:
+        h = h[:, batch["patch_embeds"].shape[1]:]  # loss over text positions only
+    labels = batch["labels"]
+    B, S, D = h.shape
+    n_chunks = max(1, S // LOSS_CHUNK)
+    Sc = S // n_chunks
+
+    def chunk_loss(carry, hc_lc):
+        hc, lc = hc_lc
+        lg = logits_fn(params, hc, cfg, policy)
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        ll = jnp.take_along_axis(lp, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(ll), None
+
+    hs = h[:, :n_chunks * Sc].reshape(B, n_chunks, Sc, D).transpose(1, 0, 2, 3)
+    ls = labels[:, :n_chunks * Sc].reshape(B, n_chunks, Sc).transpose(1, 0, 2)
+    total, _ = scan_or_unroll(jax.checkpoint(chunk_loss), jnp.float32(0.0), (hs, ls))
+    ce = -total / (B * n_chunks * Sc)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelCfg, B: int, S_max: int, policy: TransPolicy) -> dict:
+    acfg = attn_cfg(cfg)
+    cache: dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "gemma3", "vlm"):
+        def one_cache(i):
+            # gemma3 local layers only need a window-sized cache
+            if cfg.family == "gemma3":
+                period = cfg.local_ratio + 1
+                is_global = (i % period) == cfg.local_ratio
+                s = S_max if is_global else min(S_max, cfg.window)
+            else:
+                s = S_max
+            return attn.init_kv_cache(B, s, acfg, policy)
+        if cfg.family == "gemma3":
+            cache["kv"] = [one_cache(i) for i in range(cfg.n_layers)]
+        else:
+            cache["kv"] = jax.vmap(
+                lambda _: attn.init_kv_cache(B, S_max, acfg, policy)
+            )(jnp.arange(cfg.n_layers))
+    elif cfg.family == "zamba":
+        scfg = _zamba_ssm_cfg(cfg)
+        cache["ssm"] = jax.vmap(
+            lambda _: ssm_mod.init_ssm_state(B, scfg))(jnp.arange(cfg.n_layers))
+        n_shared = sum(1 for *_x, s in _zamba_segments(cfg) if s)
+        cache["shared_kv"] = [
+            attn.init_kv_cache(B, S_max, acfg, policy) for _ in range(n_shared)]
+    elif cfg.family == "xlstm":
+        xcfg = _xlstm_cfg(cfg)
+        cache["mlstm"] = [xlstm_mod.init_mlstm_state(B, xcfg)
+                          for i in range(cfg.n_layers) if not _is_slstm(cfg, i)]
+        cache["slstm"] = [xlstm_mod.init_slstm_state(B, xcfg)
+                          for i in range(cfg.n_layers) if _is_slstm(cfg, i)]
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
+                policy: TransPolicy) -> tuple[jax.Array, dict]:
+    """One token for the whole batch. token_t: (B,) int32 -> logits (B, V)."""
+    pos = cache["pos"]
+    x = apply_embedding(params["embed"], token_t[:, None])
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe", "gemma3", "vlm"):
+        acfg = attn_cfg(cfg)
+        if cfg.family == "gemma3":
+            kvs = []
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["blocks"])
+                is_global = _gemma3_is_global(cfg, i)
+                a_i = attn_cfg(
+                    cfg, window=0 if is_global else cfg.window,
+                    rope_base=cfg.global_rope_base if is_global else cfg.rope_base)
+                h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
+                # local layers use a rolling window cache position
+                c = cache["kv"][i]
+                p_eff = pos if is_global else pos % c["k"].shape[2]
+                a, c2 = attn.decode_attention_step(
+                    p["attn"], a_i, h, c, p_eff, policy,
+                    rolling=not is_global, abs_pos=pos)
+                kvs.append(c2)
+                x = x + a
+                h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
+                x = x + apply_swiglu(p["mlp"], h, policy)
+            new_cache["kv"] = kvs
+        else:
+            def body(x_carry, layer):
+                p, c = layer
+                h = apply_rmsnorm(p["ln1"], x_carry, cfg.norm_eps)
+                a, c2 = attn.decode_attention_step(p["attn"], acfg, h, c, pos,
+                                                   policy)
+                x2 = x_carry + a
+                h = apply_rmsnorm(p["ln2"], x2, cfg.norm_eps)
+                if "moe" in p:
+                    y, _ = moe_mod.apply_moe(
+                        p["moe"], h, top_k=cfg.top_k,
+                        capacity_factor=cfg.capacity_factor, policy=policy)
+                else:
+                    y = apply_swiglu(p["mlp"], h, policy)
+                return x2 + y, c2
+            x, new_kv = scan_or_unroll(body, x, (params["blocks"], cache["kv"]))
+            new_cache["kv"] = new_kv
+
+    elif cfg.family == "zamba":
+        scfg = _zamba_ssm_cfg(cfg)
+        acfg = attn_cfg(cfg)
+
+        def body(x_carry, layer):
+            p, st = layer
+            h = apply_rmsnorm(p["ln"], x_carry, cfg.norm_eps)
+            y, st2 = ssm_mod.decode_ssm_step(p["ssm"], scfg, h, st, policy)
+            return x_carry + y, st2
+
+        sp = params["shared"]
+        new_states, shared_kvs = [], []
+        shared_i = 0
+        for seg_start, seg_len, use_shared in _zamba_segments(cfg):
+            seg_p = jax.tree.map(lambda a: a[seg_start:seg_start + seg_len],
+                                 params["blocks"])
+            seg_s = jax.tree.map(lambda a: a[seg_start:seg_start + seg_len],
+                                 cache["ssm"])
+            x, st2 = scan_or_unroll(body, x, (seg_p, seg_s))
+            new_states.append(st2)
+            if use_shared:
+                h = apply_rmsnorm(sp["ln1"], x, cfg.norm_eps)
+                a, c2 = attn.decode_attention_step(
+                    sp["attn"], acfg, h, cache["shared_kv"][shared_i], pos, policy)
+                shared_kvs.append(c2)
+                x = x + a
+                h = apply_rmsnorm(sp["ln2"], x, cfg.norm_eps)
+                x = x + apply_swiglu(sp["mlp"], h, policy)
+                shared_i += 1
+        new_cache["ssm"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+        new_cache["shared_kv"] = shared_kvs
+
+    elif cfg.family == "xlstm":
+        xcfg = _xlstm_cfg(cfg)
+        mi = si = 0
+        new_m, new_s = [], []
+        for i in range(cfg.n_layers):
+            if _is_slstm(cfg, i):
+                p = jax.tree.map(lambda a: a[si], params["slstm"])
+                h = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+                y, st = xlstm_mod.decode_slstm_step(
+                    p["blk"], xcfg, h, cache["slstm"][si], policy)
+                new_s.append(st)
+                si += 1
+            else:
+                p = jax.tree.map(lambda a: a[mi], params["mlstm"])
+                h = apply_rmsnorm(p["ln"], x, cfg.norm_eps)
+                y, st = xlstm_mod.decode_mlstm_step(
+                    p["blk"], xcfg, h, cache["mlstm"][mi], policy)
+                new_m.append(st)
+                mi += 1
+            x = x + y
+        new_cache["mlstm"], new_cache["slstm"] = new_m, new_s
+
+    h = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, h, cfg, policy)[:, 0]
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelCfg,
+            policy: TransPolicy, *, S_max: Optional[int] = None,
+            patch_embeds: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """Run the full prompt, build the cache, return last-position logits.
+
+    Implemented as forward() + cache build from the same K/V projections would
+    duplicate compute; for clarity and dry-run fidelity we run the attention
+    prefill path per layer (full-sequence SDPA that also writes the cache).
+    """
+    B, S = tokens.shape
+    S_max = S_max or S
+    cache = init_cache(cfg, B, S_max, policy)
+    x = apply_embedding(params["embed"], tokens)
+    if patch_embeds is not None:
+        pe = apply_linear(params["patch_proj"], patch_embeds, policy)
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+
+    if cfg.family in ("dense", "moe", "gemma3", "vlm"):
+        acfg = attn_cfg(cfg)
+        if cfg.family == "gemma3":
+            win_arr, rope_arr = gemma3_layer_meta(cfg)
+            kvs = []
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["blocks"])
+                a_i = attn_cfg(cfg, window=int(win_arr[i]),
+                               rope_base=float(rope_arr[i]))
+                h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
+                a, c2 = attn.prefill_attention(p["attn"], a_i, h,
+                                               cache["kv"][i], policy)
+                kvs.append(c2)
+                x = x + a
+                h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
+                x = x + apply_swiglu(p["mlp"], h, policy)
+            cache["kv"] = kvs
+        else:
+            def body(x_carry, layer):
+                p, c = layer
+                x_carry = maybe_shard(x_carry, "residual")
+                h = apply_rmsnorm(p["ln1"], x_carry, cfg.norm_eps)
+                a, c2 = attn.prefill_attention(p["attn"], acfg, h, c, policy)
+                x2 = x_carry + a
+                h = apply_rmsnorm(p["ln2"], x2, cfg.norm_eps)
+                if "moe" in p:
+                    y, _ = moe_mod.apply_moe(
+                        p["moe"], h, top_k=cfg.top_k,
+                        capacity_factor=cfg.capacity_factor, policy=policy)
+                else:
+                    y = apply_swiglu(p["mlp"], h, policy)
+                return x2 + y, c2
+            x, new_kv = scan_or_unroll(
+                jax.checkpoint(body), x, (params["blocks"], cache["kv"]))
+            cache["kv"] = new_kv
+    else:
+        # recurrent families: run the training forward then seed states by a
+        # single decode over the last token (states carry no prompt history
+        # here — full recurrent prefill is exercised via forward(); this path
+        # is used by serving examples with short prompts)
+        h, _ = forward(params, tokens, cfg, policy, remat=False)
+        hN = apply_rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+        logits = logits_fn(params, hN, cfg, policy)[:, 0]
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, cache
+
+    h = apply_rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = logits_fn(params, h, cfg, policy)[:, 0]
+    cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    return logits, cache

@@ -1,0 +1,59 @@
+"""Scan-vs-unroll switch for cost probing.
+
+XLA's HLO cost analysis counts a while-loop body ONCE, so any scanned stack
+(layers, microbatches, loss chunks) under-reports FLOPs/bytes/collectives by
+its trip count. For the roofline's cost probes the launcher flips UNROLL on:
+every scan_or_unroll site becomes a python loop, making the lowered HLO an
+explicit straight-line program whose op counts are exact. Production/lowering
+paths keep scans (compact HLO); only reduced-depth probe configs are unrolled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+def set_unroll(v: bool) -> None:
+    global _UNROLL
+    _UNROLL = v
+
+
+def unrolled() -> bool:
+    return _UNROLL
+
+
+class unroll_mode:
+    def __init__(self, on: bool = True):
+        self.on = on
+
+    def __enter__(self):
+        self.prev = _UNROLL
+        set_unroll(self.on)
+        return self
+
+    def __exit__(self, *exc):
+        set_unroll(self.prev)
+        return False
+
+
+def scan_or_unroll(f, init, xs, length=None):
+    """lax.scan, or an equivalent python loop when UNROLL is on."""
+    if not _UNROLL:
+        return jax.lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+        get = lambda i: None
+    else:
+        n = jax.tree.leaves(xs)[0].shape[0]
+        get = lambda i: jax.tree.map(lambda a: a[i], xs)
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, get(i))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

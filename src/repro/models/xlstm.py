@@ -1,0 +1,248 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential scan — elementwise, so the while-loop FLOPs are negligible).
+
+mLSTM recurrence (per head, stabilized exponential gating):
+    C_t = f_t C_{t-1} + i_t (v_t ⊗ k_t),   n_t = f_t n_{t-1} + i_t k_t
+    y_t = (C_t q_t) / max(|n_t · q_t|, 1)
+evaluated chunk-parallel with log-gate cumsums (TFLA-style) over a static
+python chunk loop. Decode is the O(1) recurrence. States stay f32 (DESIGN §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pcsr import TransPolicy
+from repro.models.layers import (apply_linear, apply_rmsnorm, init_linear,
+                                 init_rmsnorm)
+from repro.models.unroll import scan_or_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMCfg:
+    d_model: int
+    n_heads: int
+    chunk: int = 256
+    proj_factor: float = 2.0  # mLSTM up-projection
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# --------------------------------------------------------------- mLSTM --------
+
+def init_mlstm(key, cfg: XLSTMCfg) -> dict:
+    ku, kq, kk, kv, ki, kf, ko, kd = jax.random.split(key, 8)
+    d, di = cfg.d_model, cfg.d_inner
+    return {
+        "up": init_linear(ku, d, 2 * di),       # -> [x_inner, gate z]
+        "wq": init_linear(kq, di, di),
+        "wk": init_linear(kk, di, di),
+        "wv": init_linear(kv, di, di),
+        "wi": init_linear(ki, di, cfg.n_heads),
+        "wf": init_linear(kf, di, cfg.n_heads),
+        "norm": init_rmsnorm(di),
+        "down": init_linear(kd, di, d, scale=di ** -0.5),
+    }
+
+
+def apply_mlstm(p: dict, cfg: XLSTMCfg, x: jax.Array, policy: TransPolicy) -> jax.Array:
+    B, S, _ = x.shape
+    nh, hd, di = cfg.n_heads, cfg.head_dim, cfg.d_inner
+    L = min(cfg.chunk, S)
+    n_chunks = -(-S // L)
+    Sp = n_chunks * L
+
+    ug = apply_linear(p["up"], x, policy)
+    xi, z = ug[..., :di], ug[..., di:]
+    q = apply_linear(p["wq"], xi, policy).reshape(B, S, nh, hd)
+    k = apply_linear(p["wk"], xi, policy).reshape(B, S, nh, hd) * (hd ** -0.5)
+    v = apply_linear(p["wv"], xi, policy).reshape(B, S, nh, hd)
+    ig = apply_linear(p["wi"], xi, policy).astype(jnp.float32)      # (B,S,nh) log-space
+    fg = jax.nn.log_sigmoid(apply_linear(p["wf"], xi, policy).astype(jnp.float32))
+
+    if Sp != S:
+        pad4 = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, pad4) for a in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, Sp - S), (0, 0)), constant_values=-1e30)
+        fg = jnp.pad(fg, ((0, 0), (0, Sp - S), (0, 0)))
+
+    qc = q.reshape(B, n_chunks, L, nh, hd).astype(jnp.float32)
+    kc = k.reshape(B, n_chunks, L, nh, hd).astype(jnp.float32)
+    vc = v.reshape(B, n_chunks, L, nh, hd).astype(jnp.float32)
+    igc = ig.reshape(B, n_chunks, L, nh)
+    fgc = fg.reshape(B, n_chunks, L, nh)
+    seg = jnp.cumsum(fgc, axis=2)                  # within-chunk log decay
+    total = seg[:, :, -1, :]
+
+    def chunk_body(carry, inputs):
+        C, n, m = carry
+        qq, kk_, vv, ii, ss, tt = inputs
+        # stabilizer for this chunk: max over intra log-weights and carry
+        log_intra = ss[:, :, None, :] - ss[:, None, :, :] + ii[:, None, :, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        log_intra = jnp.where(causal, log_intra, -1e30)
+        m_intra = jnp.max(log_intra, axis=2)               # (B, L, nh)
+        m_carry = m[:, None, :] + ss                       # (B, L, nh)
+        m_t = jnp.maximum(m_intra, m_carry)
+        w = jnp.exp(log_intra - m_t[:, :, None, :])        # (B, L, L, nh)
+        scores = jnp.einsum("bshd,bthd->bsth", qq, kk_)    # (B, L, L, nh)
+        wq = w * scores
+        y_intra = jnp.einsum("bsth,bthd->bshd", wq, vv)
+        n_intra = jnp.sum(wq, axis=2)                      # (B, L, nh)
+        # carried-state contribution
+        carry_scale = jnp.exp(m_carry - m_t)               # (B, L, nh)
+        y_carry = jnp.einsum("bshd,bhed->bshe", qq, C) * carry_scale[..., None]
+        n_carry = jnp.einsum("bshd,bhd->bsh", qq, n) * carry_scale
+        n_den = jnp.abs(n_intra + n_carry)
+        # normalizer floor "1" lives in absolute units -> exp(-m_t) here
+        y = (y_intra + y_carry) / jnp.maximum(n_den, jnp.exp(-m_t))[..., None]
+        # state update (log-stabilized)
+        m_new = jnp.maximum(m + tt, jnp.max(ii + tt[:, None, :] - ss, axis=1))
+        carry_w = jnp.exp(ii + tt[:, None, :] - ss - m_new[:, None, :])  # (B,L,nh)
+        decay = jnp.exp(m + tt - m_new)                         # (B, nh)
+        C = C * decay[:, :, None, None] + jnp.einsum(
+            "bthd,bthe,bth->bhde", vv, kk_, carry_w)
+        n = n * decay[:, :, None] + jnp.einsum("bthd,bth->bhd", kk_, carry_w)
+        return (C, n, m_new), y
+
+    init = (jnp.zeros((B, nh, hd, hd), jnp.float32),   # (v ⊗ k) memory
+            jnp.zeros((B, nh, hd), jnp.float32),
+            jnp.full((B, nh), -1e30, jnp.float32))     # stabilizer (log)
+    xs_c = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+            vc.transpose(1, 0, 2, 3, 4), igc.transpose(1, 0, 2, 3),
+            seg.transpose(1, 0, 2, 3), total.transpose(1, 0, 2))
+    _, ys = scan_or_unroll(jax.checkpoint(chunk_body), init, xs_c)
+
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, nh, hd)[:, :S] \
+        .reshape(B, S, di)
+    y = apply_rmsnorm(p["norm"], y.astype(x.dtype))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return apply_linear(p["down"], y, policy)
+
+
+def init_mlstm_state(B: int, cfg: XLSTMCfg) -> dict:
+    nh, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((B, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, nh, hd), jnp.float32),
+        "m": jnp.full((B, nh), -1e30, jnp.float32),
+    }
+
+
+def decode_mlstm_step(p: dict, cfg: XLSTMCfg, x_t: jax.Array, state: dict,
+                      policy: TransPolicy) -> tuple[jax.Array, dict]:
+    B = x_t.shape[0]
+    nh, hd, di = cfg.n_heads, cfg.head_dim, cfg.d_inner
+    ug = apply_linear(p["up"], x_t, policy)
+    xi, z = ug[..., :di], ug[..., di:]
+    q = apply_linear(p["wq"], xi, policy).reshape(B, nh, hd).astype(jnp.float32)
+    k = (apply_linear(p["wk"], xi, policy).reshape(B, nh, hd) * (hd ** -0.5)) \
+        .astype(jnp.float32)
+    v = apply_linear(p["wv"], xi, policy).reshape(B, nh, hd).astype(jnp.float32)
+    ig = apply_linear(p["wi"], xi, policy).astype(jnp.float32).reshape(B, nh)
+    fg = jax.nn.log_sigmoid(apply_linear(p["wf"], xi, policy).astype(jnp.float32)) \
+        .reshape(B, nh)
+    m_new = jnp.maximum(state["m"] + fg, ig)
+    decay = jnp.exp(state["m"] + fg - m_new)
+    inw = jnp.exp(ig - m_new)
+    C = state["C"] * decay[:, :, None, None] + jnp.einsum(
+        "bhd,bhe,bh->bhde", v, k, inw)
+    n = state["n"] * decay[:, :, None] + k * inw[:, :, None]
+    y = jnp.einsum("bhde,bhe->bhd", C, q.reshape(B, nh, hd))
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.reshape(B, nh, hd)))
+    y = y / jnp.maximum(den, jnp.exp(-m_new))[:, :, None]
+    y = apply_rmsnorm(p["norm"], y.reshape(B, 1, di).astype(x_t.dtype))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype)
+    return apply_linear(p["down"], y, policy), {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------- sLSTM --------
+
+def init_slstm(key, cfg: XLSTMCfg) -> dict:
+    kx, kr, kf, kd = jax.random.split(key, 4)
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    f = int(d * 4 / 3 / 8) * 8
+    return {
+        # input projections for (z, i, f, o) gates
+        "wx": init_linear(kx, d, 4 * d),
+        "r": jax.random.normal(kr, (nh, dh, 4 * dh), jnp.float32) * dh ** -0.5,
+        "norm": init_rmsnorm(d),
+        "ffn_up": init_linear(kf, d, 2 * f),
+        "ffn_down": init_linear(kd, f, d, scale=f ** -0.5),
+    }
+
+
+def apply_slstm(p: dict, cfg: XLSTMCfg, x: jax.Array, policy: TransPolicy) -> jax.Array:
+    """Sequential scalar-memory recurrence (lax.scan; elementwise body)."""
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    gates_x = apply_linear(p["wx"], x, policy).astype(jnp.float32)  # (B,S,4d)
+
+    def step(carry, gx):
+        c, n, m, h = carry                      # each (B, nh, dh) / m: (B,nh,dh)
+        rec = jnp.einsum("bhd,hde->bhe", h, p["r"]).reshape(B, nh, 4 * dh)
+        g = gx.reshape(B, nh, 4 * dh) + rec
+        zt = jnp.tanh(g[..., :dh])
+        it = g[..., dh:2 * dh]                  # log-space input gate
+        ft = jax.nn.log_sigmoid(g[..., 2 * dh:3 * dh])
+        ot = jax.nn.sigmoid(g[..., 3 * dh:])
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    z0 = jnp.zeros((B, nh, dh), jnp.float32)
+    init = (z0, z0, jnp.full((B, nh, dh), -1e30), z0)
+    _, hs = jax.lax.scan(step, init, gates_x.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = apply_rmsnorm(p["norm"], x + y)
+    u = apply_linear(p["ffn_up"], y, policy)
+    f = u.shape[-1] // 2
+    h = jax.nn.gelu(u[..., :f].astype(jnp.float32)).astype(x.dtype) * u[..., f:]
+    return apply_linear(p["ffn_down"], h, policy)
+
+
+def init_slstm_state(B: int, cfg: XLSTMCfg) -> dict:
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((B, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((B, nh, dh), -1e30), "h": z}
+
+
+def decode_slstm_step(p: dict, cfg: XLSTMCfg, x_t: jax.Array, state: dict,
+                      policy: TransPolicy) -> tuple[jax.Array, dict]:
+    B, _, d = x_t.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    gx = apply_linear(p["wx"], x_t, policy).astype(jnp.float32)[:, 0]
+    rec = jnp.einsum("bhd,hde->bhe", state["h"], p["r"]).reshape(B, nh, 4 * dh)
+    g = gx.reshape(B, nh, 4 * dh) + rec
+    zt = jnp.tanh(g[..., :dh])
+    it = g[..., dh:2 * dh]
+    ft = jax.nn.log_sigmoid(g[..., 2 * dh:3 * dh])
+    ot = jax.nn.sigmoid(g[..., 3 * dh:])
+    m_new = jnp.maximum(ft + state["m"], it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(ft + state["m"] - m_new)
+    c_new = f_s * state["c"] + i_s * zt
+    n_new = f_s * state["n"] + i_s
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    y = apply_rmsnorm(p["norm"], x_t + h_new.reshape(B, 1, d).astype(x_t.dtype))
+    u = apply_linear(p["ffn_up"], y, policy)
+    f = u.shape[-1] // 2
+    h = jax.nn.gelu(u[..., :f].astype(jnp.float32)).astype(x_t.dtype) * u[..., f:]
+    out = apply_linear(p["ffn_down"], h, policy)
+    return out, {"c": c_new, "n": n_new, "m": m_new, "h": h_new}

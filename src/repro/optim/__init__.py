@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+)
+from repro.optim.schedule import cosine_warmup  # noqa: F401

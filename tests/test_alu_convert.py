@@ -1,0 +1,124 @@
+"""Tests: true-posit integer ALU (PERCIVAL baseline) and Table-I fcvt ops."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alu, convert, ref_codec
+from repro.core.codec import posit_decode, posit_encode
+
+
+# --------------------------------------------------------------------- ALU ----
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_alu_add_p8_sampled_vs_oracle(es):
+    rng = np.random.default_rng(es)
+    a = rng.integers(0, 256, 4000).astype(np.uint8)
+    b = rng.integers(0, 256, 4000).astype(np.uint8)
+    got = np.asarray(alu.posit_add(jnp.asarray(a), jnp.asarray(b), 8, es))
+    want = np.array([ref_codec.ref_add(int(x), int(y), 8, es) for x, y in zip(a, b)])
+    assert (got == want).all(), (a[got != want][:5], b[got != want][:5])
+
+
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_alu_mul_p8_sampled_vs_oracle(es):
+    rng = np.random.default_rng(10 + es)
+    a = rng.integers(0, 256, 4000).astype(np.uint8)
+    b = rng.integers(0, 256, 4000).astype(np.uint8)
+    got = np.asarray(alu.posit_mul(jnp.asarray(a), jnp.asarray(b), 8, es))
+    want = np.array([ref_codec.ref_mul(int(x), int(y), 8, es) for x, y in zip(a, b)])
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("op", ["add", "mul"])
+@pytest.mark.parametrize("es", [0, 1, 3])
+def test_alu_p16_sampled_vs_oracle(op, es):
+    rng = np.random.default_rng(99)
+    a = rng.integers(0, 65536, 2500).astype(np.uint16)
+    b = rng.integers(0, 65536, 2500).astype(np.uint16)
+    fn = alu.posit_add if op == "add" else alu.posit_mul
+    ref = ref_codec.ref_add if op == "add" else ref_codec.ref_mul
+    got = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), 16, es))
+    want = np.array([ref(int(x), int(y), 16, es) for x, y in zip(a, b)])
+    assert (got == want).all(), (a[got != want][:5], b[got != want][:5])
+
+
+def test_alu_edge_cases():
+    # 0 + x == x; NaR propagates; x - x == 0
+    for n, es in [(8, 0), (16, 1)]:
+        dt = np.uint8 if n == 8 else np.uint16
+        nar = dt(1 << (n - 1))
+        rng = np.random.default_rng(5)
+        x = rng.integers(0, 1 << n, 64).astype(dt)
+        zero = np.zeros(64, dtype=dt)
+        assert (np.asarray(alu.posit_add(jnp.asarray(zero), jnp.asarray(x), n, es)) == x).all()
+        got = np.asarray(alu.posit_add(jnp.asarray(np.full(64, nar)), jnp.asarray(x), n, es))
+        assert (got == nar).all()
+        x_no_nar = np.where(x == nar, dt(0), x)
+        got = np.asarray(alu.posit_sub(jnp.asarray(x_no_nar), jnp.asarray(x_no_nar), n, es))
+        assert (got == 0).all()
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255), st.sampled_from([0, 1, 2]))
+def test_alu_add_commutative(a, b, es):
+    r1 = int(np.asarray(alu.posit_add(jnp.uint8(a), jnp.uint8(b), 8, es)))
+    r2 = int(np.asarray(alu.posit_add(jnp.uint8(b), jnp.uint8(a), 8, es)))
+    assert r1 == r2
+
+
+# ------------------------------------------------------------------- fcvt -----
+def test_fcvt_roundtrip_f32():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 4, 512).astype(np.float32))
+    # p16 -> f32 -> p16 is identity on p16-representable values
+    p = convert.fcvt_p16_s(x, es=1)
+    f = convert.fcvt_s_p16(p, es=1)
+    p2 = convert.fcvt_p16_s(f, es=1)
+    assert (np.asarray(p) == np.asarray(p2)).all()
+
+
+def test_fcvt_p8_to_p16_exact():
+    """Every p8 value is exactly representable in p16 with the same es."""
+    for es in (0, 1, 2):
+        codes8 = jnp.asarray(np.arange(256, dtype=np.uint8))
+        up = convert.fcvt_p16_p8(codes8, es_in=es, es_out=es)
+        back = convert.fcvt_p8_p16(up, es_in=es, es_out=es)
+        v8 = np.asarray(posit_decode(codes8, 8, es))
+        v16 = np.asarray(posit_decode(up, 16, es))
+        ok = (v8 == v16) | (np.isnan(v8) & np.isnan(v16))
+        assert ok.all()
+        assert (np.asarray(back) == np.asarray(codes8)).all()
+
+
+def test_fcvt_cross_es_matches_oracle():
+    rng = np.random.default_rng(1)
+    codes = rng.integers(0, 65536, 2000).astype(np.uint16)
+    got = np.asarray(convert.fcvt_p16_p16(jnp.asarray(codes), es_in=3, es_out=0))
+    want = np.array([ref_codec.ref_convert(int(c), 16, 3, 16, 0) for c in codes])
+    assert (got == want).all()
+
+
+def test_fcvt_p16_to_p8_matches_oracle():
+    rng = np.random.default_rng(2)
+    codes = rng.integers(0, 65536, 2000).astype(np.uint16)
+    got = np.asarray(convert.fcvt_p8_p16(jnp.asarray(codes), es_in=1, es_out=0))
+    want = np.array([ref_codec.ref_convert(int(c), 16, 1, 8, 0) for c in codes])
+    assert (got == want).all()
+
+
+def test_fcvt_dynamic_es_no_retrace():
+    calls = []
+
+    @jax.jit
+    def cvt(c, es_in, es_out):
+        calls.append(1)
+        return convert.fcvt_p16_p16(c, es_in, es_out)
+
+    codes = jnp.asarray(np.arange(0, 65536, 7, dtype=np.uint16))
+    for ei in (0, 1, 2, 3):
+        for eo in (0, 1, 2, 3):
+            out = np.asarray(cvt(codes, jnp.int32(ei), jnp.int32(eo)))
+            want = np.asarray(convert.fcvt_p16_p16(codes, ei, eo))
+            assert (out == want).all(), (ei, eo)
+    assert len(calls) == 1

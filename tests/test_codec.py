@@ -1,0 +1,241 @@
+"""Bit-exactness tests for the vectorized posit codec vs the pure-Python oracle."""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, ref_codec
+from repro.core.types import PositFmt
+
+ALL_ES = (0, 1, 2, 3)
+
+
+def _ref_decode_all(n, es):
+    return np.array(
+        [ref_codec.ref_decode_float(c, n, es) for c in range(1 << n)], dtype=np.float64
+    )
+
+
+# ---------------------------------------------------------------- exhaustive p8
+@pytest.mark.parametrize("es", ALL_ES)
+def test_p8_decode_exhaustive(es):
+    codes = np.arange(256, dtype=np.uint8)
+    got = np.asarray(codec.posit_decode(jnp.asarray(codes), 8, es), dtype=np.float64)
+    want = _ref_decode_all(8, es)
+    ok = (got == want) | (np.isnan(got) & np.isnan(want))
+    assert ok.all(), np.where(~ok)
+
+
+@pytest.mark.parametrize("es", ALL_ES)
+def test_p8_roundtrip_exhaustive(es):
+    """encode(decode(p)) == p for every code (posits are fixed points of RT)."""
+    codes = np.arange(256, dtype=np.uint8)
+    dec = codec.posit_decode(jnp.asarray(codes), 8, es)
+    enc = np.asarray(codec.posit_encode(dec, 8, es))
+    assert (enc == codes).all(), np.where(enc != codes)
+
+
+# --------------------------------------------------------------- exhaustive p16
+@pytest.mark.parametrize("es", ALL_ES)
+def test_p16_decode_exhaustive(es):
+    codes = np.arange(65536, dtype=np.uint16)
+    got = np.asarray(codec.posit_decode(jnp.asarray(codes), 16, es), dtype=np.float64)
+    want = _ref_decode_all(16, es)
+    ok = (got == want) | (np.isnan(got) & np.isnan(want))
+    assert ok.all(), np.where(~ok)
+
+
+@pytest.mark.parametrize("es", ALL_ES)
+def test_p16_roundtrip_exhaustive(es):
+    codes = np.arange(65536, dtype=np.uint16)
+    dec = codec.posit_decode(jnp.asarray(codes), 16, es)
+    enc = np.asarray(codec.posit_encode(dec, 16, es))
+    assert (enc == codes).all(), np.where(enc != codes)
+
+
+# ------------------------------------------------------------------ encode RNE
+@pytest.mark.parametrize("n,es", [(8, 0), (8, 2), (16, 1), (16, 3)])
+def test_encode_random_floats_vs_oracle(n, es):
+    rng = np.random.default_rng(42)
+    xs = np.concatenate([
+        rng.normal(0, 1, 2000),
+        rng.normal(0, 1e12, 400),      # saturation region
+        rng.normal(0, 1e-12, 400),     # sub-minpos region
+        rng.uniform(-2, 2, 1000),
+        np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, -1.0]),
+        np.float32(2.0) ** rng.integers(-40, 40, 300),  # exact powers of two
+    ]).astype(np.float32)
+    got = np.asarray(codec.posit_encode(jnp.asarray(xs), n, es))
+    want = np.array([ref_codec.ref_encode(float(x), n, es) for x in xs])
+    assert (got == want).all(), xs[got != want][:10]
+
+
+@pytest.mark.parametrize("n,es", [(8, 0), (16, 1)])
+def test_encode_ties_round_to_even(n, es):
+    """Exact midpoints between adjacent posits round to the even code.
+
+    The arithmetic midpoint equals the encoding-level tie only inside uniform
+    lattice segments (same regime+exponent), so pairs straddling a spacing
+    change are excluded; the f32-representability of the midpoint is also
+    checked (always true in uniform segments for n<=16).
+    """
+    codes = np.arange(2, (1 << (n - 1)) - 2, dtype=np.uint64)
+    prev = np.array([ref_codec.ref_decode(int(c) - 1, n, es) for c in codes])
+    lo = np.array([ref_codec.ref_decode(int(c), n, es) for c in codes])
+    hi = np.array([ref_codec.ref_decode(int(c) + 1, n, es) for c in codes])
+    uniform = np.array([(h - l) == (l - p) for p, l, h in zip(prev, lo, hi)])
+    mids32 = np.array([float((a + b) / 2) for a, b in zip(lo, hi)], dtype=np.float32)
+    exact = np.array(
+        [(a + b) / 2 == m for a, b, m in zip(lo, hi, [float(x) for x in mids32])]
+    )
+    sel = uniform & exact
+    assert sel.sum() > len(codes) // 4  # the test must actually cover something
+    want = np.array([ref_codec.ref_encode(float(m), n, es) for m in mids32])
+    got = np.asarray(codec.posit_encode(jnp.asarray(mids32), n, es)).astype(np.uint64)
+    assert (got[sel] == want[sel]).all()
+    # and the chosen code is the even one of each adjacent pair
+    assert (got[sel] % 2 == 0).all()
+
+
+def test_saturation_semantics():
+    """|x|>=maxpos -> maxpos (not NaR); 0<|x|<minpos -> minpos (not 0)."""
+    for n, es in [(8, 0), (8, 3), (16, 1)]:
+        fmt = PositFmt(n, es)
+        xs = jnp.asarray(
+            [fmt.maxpos * 4, -fmt.maxpos * 4, fmt.minpos / 4, -fmt.minpos / 4,
+             float(np.finfo(np.float32).max), float(np.finfo(np.float32).tiny) / 8],
+            dtype=jnp.float32,
+        )
+        got = np.asarray(codec.posit_encode(xs, n, es)).astype(np.int64)
+        want = np.array([
+            fmt.maxpos_code, (1 << n) - fmt.maxpos_code,
+            1, (1 << n) - 1,
+            fmt.maxpos_code, 1,
+        ])
+        assert (got == want).all(), (n, es, got, want)
+
+
+def test_specials():
+    for n in (8, 16):
+        got = np.asarray(codec.posit_encode(
+            jnp.asarray([np.nan, np.inf, -np.inf, 0.0, -0.0], dtype=jnp.float32), n, 1))
+        nar = 1 << (n - 1)
+        assert list(got.astype(np.int64)) == [nar, nar, nar, 0, 0]
+        dec = np.asarray(codec.posit_decode(jnp.asarray([0, nar], dtype=np.uint16 if n == 16 else np.uint8), n, 1))
+        assert dec[0] == 0.0 and math.isnan(dec[1])
+
+
+# ----------------------------------------------------------------- dynamic es
+def test_dynamic_es_single_executable():
+    """One jitted executable serves every es (the pcsr property)."""
+    traces = []
+
+    @jax.jit
+    def enc(x, es):
+        traces.append(1)
+        return codec.posit_encode(x, 16, es)
+
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.normal(0, 10, 512).astype(np.float32))
+    outs = [np.asarray(enc(xs, jnp.int32(es))) for es in ALL_ES]
+    assert len(traces) == 1, "dynamic es must not retrace"
+    for es, out in zip(ALL_ES, outs):
+        want = np.asarray(codec.posit_encode(xs, 16, es))
+        assert (out == want).all()
+
+
+def test_es_out_of_range_clamped():
+    xs = jnp.asarray(np.linspace(-4, 4, 64, dtype=np.float32))
+    hi = np.asarray(codec.posit_encode(xs, 8, 17))
+    want = np.asarray(codec.posit_encode(xs, 8, 3))
+    assert (hi == want).all()
+
+
+# ----------------------------------------------------------- hypothesis props
+@settings(max_examples=200, deadline=None)
+@given(
+    st.integers(0, 65535), st.integers(0, 65535),
+    st.sampled_from(ALL_ES),
+)
+def test_monotonicity_code_order_is_value_order(ca, cb, es):
+    """Signed two's-complement code order == numeric order (posit superpower)."""
+    n = 16
+    nar = 1 << (n - 1)
+    if ca == nar or cb == nar:
+        return
+    va = ref_codec.ref_decode(ca, n, es)
+    vb = ref_codec.ref_decode(cb, n, es)
+    sa = ca - (1 << n) if ca >= nar else ca  # signed view
+    sb = cb - (1 << n) if cb >= nar else cb
+    assert (sa < sb) == (va < vb)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 255), st.sampled_from(ALL_ES))
+def test_negation_symmetry(code, es):
+    """decode(twos_complement(c)) == -decode(c)."""
+    n = 8
+    if code == (1 << (n - 1)):
+        return
+    v = ref_codec.ref_decode(code, n, es)
+    nc = ((1 << n) - code) & ((1 << n) - 1)
+    assert ref_codec.ref_decode(nc, n, es) == -v
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.floats(width=32, allow_nan=False, allow_infinity=False),
+    st.sampled_from([(8, 0), (8, 2), (16, 1), (16, 3)]),
+)
+def test_encode_matches_oracle_hypothesis(x, nes):
+    n, es = nes
+    got = int(np.asarray(codec.posit_encode(jnp.float32(x), n, es)))
+    want = ref_codec.ref_encode(float(np.float32(x)), n, es)
+    assert got == want, (x, got, want)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.floats(-1e6, 1e6, width=32, allow_nan=False),
+    st.sampled_from([(8, 1), (16, 2)]),
+)
+def test_quantize_idempotent(x, nes):
+    n, es = nes
+    fmt = PositFmt(n, es)
+    q1 = codec.quantize(jnp.float32(x), fmt)
+    q2 = codec.quantize(q1, fmt)
+    assert (np.asarray(q1) == np.asarray(q2)) or (np.isnan(q1) and np.isnan(q2))
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.floats(-1e4, 1e4, width=32, allow_nan=False), st.sampled_from(ALL_ES))
+def test_rounding_is_nearest(x, es):
+    """|x - q(x)| must be <= the distance to both posit neighbours of q(x).
+
+    Holds only inside the non-saturating range: below minpos the standard's
+    never-round-to-zero rule deliberately picks minpos over the nearer 0
+    (checked separately in test_saturation_semantics).
+    """
+    n = 16
+    x = float(np.float32(x))
+    fmt = PositFmt(n, es)
+    if x == 0 or not (fmt.minpos <= abs(x) <= fmt.maxpos):
+        return
+    code = int(np.asarray(codec.posit_encode(jnp.float32(x), n, es)))
+    if code == (1 << (n - 1)):
+        return
+    v = ref_codec.ref_decode(code, n, es)
+    # signed neighbours in code space
+    s = code - (1 << n) if code >= (1 << (n - 1)) else code
+    for nb in (s - 1, s + 1):
+        nbc = nb & ((1 << n) - 1)
+        if nbc == (1 << (n - 1)):
+            continue
+        w = ref_codec.ref_decode(nbc, n, es)
+        from fractions import Fraction
+        xf = Fraction(x)
+        # allow ties (RNE picks one of two equidistant)
+        assert abs(xf - v) <= abs(xf - w), (x, es, code, float(v), float(w))

@@ -1,0 +1,102 @@
+"""Tests: posit_dot fused/unfused dataflows + pcsr operand-slot semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BF16, F32, OperandSlots, P8_0, P16_1, TransPolicy,
+    posit_decode, posit_dot, posit_encode, posit_gemv, posit_softmax,
+)
+from repro.core.pcsr import OperandSlots as OS
+
+
+def _mk(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (m, k)).astype(np.float32)
+    b = rng.normal(0, 1, (k, n)).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def test_float_slots_bypass_codec():
+    """pfmt=float must be bit-identical to a plain matmul (IEEE compatibility)."""
+    a, b = _mk(16, 32, 8)
+    y = posit_dot(a, b, OS.uniform(F32))
+    want = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    assert (np.asarray(y) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("fmt", [P8_0, P16_1])
+def test_fused_equals_unfused_numerics(fmt):
+    """[7]'s dataflow and ours differ in *performance*, never in value."""
+    a, b = _mk(12, 24, 10, seed=1)
+    ac = posit_encode(a, fmt.nbits, fmt.es)
+    bc = posit_encode(b, fmt.nbits, fmt.es)
+    slots = OS(rs1=fmt, rs2=fmt, rd=fmt)
+    y_f = posit_dot(ac, bc, slots, impl="fused")
+    y_u = posit_dot(ac, bc, slots, impl="unfused")
+    assert (np.asarray(y_f) == np.asarray(y_u)).all()
+
+
+def test_posit_dot_matches_manual_pipeline():
+    a, b = _mk(8, 16, 8, seed=2)
+    ac = posit_encode(a, 16, 1)
+    bc = posit_encode(b, 16, 1)
+    y = posit_dot(ac, bc, OS(rs1=P16_1, rs2=P16_1, rd=F32))
+    want = jnp.matmul(
+        posit_decode(ac, 16, 1), posit_decode(bc, 16, 1),
+        preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=0, atol=0)
+
+
+def test_mixed_format_gemm():
+    """posit A x float B — per-operand pfmt (the paper's inter-format ops)."""
+    a, b = _mk(8, 16, 8, seed=3)
+    ac = posit_encode(a, 8, 0)
+    y = posit_dot(ac, b, OS(rs1=P8_0, rs2=F32, rd=F32))
+    want = jnp.matmul(
+        posit_decode(ac, 8, 0).astype(jnp.float32), b,
+        preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+
+
+def test_posit_output_encoding():
+    a, b = _mk(8, 16, 8, seed=4)
+    y = posit_dot(a, b, OS(rs1=F32, rs2=F32, rd=P16_1))
+    assert y.dtype == jnp.uint16
+    want = posit_encode(jnp.matmul(a, b), 16, 1)
+    assert (np.asarray(y) == np.asarray(want)).all()
+
+
+def test_gemv_and_softmax():
+    rng = np.random.default_rng(5)
+    A = jnp.asarray(rng.normal(0, 1, (16, 16)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, (16,)).astype(np.float32))
+    Ac = posit_encode(A, 8, 0)
+    xc = posit_encode(x, 8, 0)
+    y = posit_gemv(Ac, xc, OS(rs1=P8_0, rs2=P8_0, rd=F32))
+    want = posit_decode(Ac, 8, 0) @ posit_decode(xc, 8, 0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+
+    logits = posit_encode(jnp.asarray(rng.normal(0, 2, (4, 128)).astype(np.float32)), 16, 1)
+    sm = posit_softmax(logits, P16_1)
+    vals = posit_decode(sm, 16, 1)
+    np.testing.assert_allclose(np.asarray(vals.sum(-1)), 1.0, atol=0.02)
+
+
+def test_pcsr_encode_bits_layout():
+    slots = OperandSlots(rs1=P8_0, rs2=P16_1, rs3=F32, rd=P8_0)
+    word = slots.encode_bits()
+    assert word & 0b0001          # rs1 posit
+    assert word & 0b0010          # rs2 posit
+    assert not (word & 0b0100)    # rs3 float
+    assert word & 0b1000          # rd posit
+    assert (word >> 4) & 0b0010   # rs2 is 16-bit
+    assert ((word >> (8 + 3)) & 0b111) == 1  # rs2 es == 1
+
+
+def test_policy_from_names():
+    p = TransPolicy.from_names(weights="p8_0", kv_cache="p8_0", compute_dtype="bf16")
+    assert p.weights.nbits == 8 and p.kv_cache.es == 0 and p.gradients is None
+    assert "weights=p8_0" in p.describe()
+    with pytest.raises(KeyError):
+        p.fmt_for("nonexistent_role")

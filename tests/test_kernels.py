@@ -1,0 +1,195 @@
+"""Pallas kernel validation (interpret=True) against pure-jnp oracles.
+
+Sweeps shapes / posit precisions / es values per kernel; single-k-tile GEMM
+cases assert bit-exact posit outputs, multi-tile cases compare decoded values
+(tile-order FP accumulation may differ in the last ulp before posit rounding).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import F32, BF16, P8_0, P8_2, P16_1, P16_2
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.pcsr import OperandSlots as OS
+from repro.kernels.posit_gemm.posit_gemm import posit_gemm
+from repro.kernels.posit_gemm.ref import posit_gemm_ref
+from repro.kernels.posit_codec.posit_codec import decode_kernel, encode_kernel
+from repro.kernels.posit_codec import ref as codec_ref
+from repro.kernels.posit_attention.posit_attention import posit_decode_attention
+from repro.kernels.posit_attention.ref import posit_decode_attention_ref
+from repro.kernels.posit_softmax.posit_softmax import posit_softmax_kernel
+from repro.kernels.posit_softmax.ref import posit_softmax_ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# ------------------------------------------------------------------ GEMM ------
+@pytest.mark.parametrize("fmt,es", [(P8_0, 0), (P8_2, 2), (P16_1, 1), (P16_2, 3)])
+def test_gemm_posit_x_posit_single_ktile_bitexact(fmt, es):
+    a = _rand((32, 48), 1)
+    b = _rand((48, 24), 2)
+    ac, bc = posit_encode(a, fmt.nbits, es), posit_encode(b, fmt.nbits, es)
+    esv = jnp.asarray([es, es, es], jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    got = posit_gemm(ac, bc, esv, interpret=True, block_m=32, block_n=24,
+                     block_k=64, **kw)
+    want = posit_gemm_ref(ac, bc, esv, **kw)
+    assert got.dtype == want.dtype
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize(
+    "M,K,N,bm,bn,bk",
+    [(128, 256, 64, 64, 64, 64),   # multi-tile every dim
+     (100, 130, 50, 64, 64, 64),   # ragged/padded
+     (8, 8, 8, 128, 128, 128),     # tiny, single tile padded
+     (256, 512, 128, 128, 128, 256)],
+)
+def test_gemm_posit16_shapes_sweep(M, K, N, bm, bn, bk):
+    fmt = P16_1
+    a, b = _rand((M, K), 3), _rand((K, N), 4)
+    ac, bc = posit_encode(a, 16, 1), posit_encode(b, 16, 1)
+    esv = jnp.asarray([1, 1, 1], jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    got = posit_gemm(ac, bc, esv, interpret=True, block_m=bm, block_n=bn,
+                     block_k=bk, **kw)
+    want = posit_gemm_ref(ac, bc, esv, **kw)
+    gv = np.asarray(posit_decode(got, 16, 1))
+    wv = np.asarray(posit_decode(want, 16, 1))
+    # accumulation order may differ across k tiles: the f32 reorder noise can
+    # flip one posit rounding -> allow one p16 ulp at tapered-precision
+    # magnitudes (2^-9 rel) plus an absolute floor of f32 dot-product noise
+    np.testing.assert_allclose(gv, wv, rtol=2 ** -9, atol=K * 2e-6)
+
+
+@pytest.mark.parametrize("out_fmt", [F32, BF16])
+def test_gemm_float_output(out_fmt):
+    a, b = _rand((64, 64), 5), _rand((64, 64), 6)
+    ac = posit_encode(a, 8, 0)
+    esv = jnp.asarray([0, 0, 0], jnp.int32)
+    kw = dict(a_fmt=P8_0, b_fmt=F32, out_fmt=out_fmt)
+    got = posit_gemm(ac, b, esv, interpret=True, block_m=64, block_n=64,
+                     block_k=64, **kw)
+    want = posit_gemm_ref(ac, b, esv, **kw)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_float_x_float_bypass():
+    """All-float slots: kernel must equal a plain f32 matmul (IEEE path)."""
+    a, b = _rand((64, 96), 7), _rand((96, 32), 8)
+    esv = jnp.asarray([0, 0, 0], jnp.int32)
+    got = posit_gemm(a, b, esv, interpret=True, a_fmt=F32, b_fmt=F32,
+                     out_fmt=F32, block_m=64, block_n=32, block_k=96)
+    want = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_gemm_dynamic_es_matches_static():
+    a, b = _rand((32, 64), 9), _rand((64, 32), 10)
+    ac, bc = posit_encode(a, 16, 2), posit_encode(b, 16, 0)
+    kw = dict(a_fmt=P16_2, b_fmt=P16_1, out_fmt=P16_1,
+              interpret=True, block_m=32, block_n=32, block_k=64)
+    got = posit_gemm(ac, bc, jnp.asarray([2, 0, 3], jnp.int32), **kw)
+    want = posit_gemm_ref(ac, bc, jnp.asarray([2, 0, 3], jnp.int32),
+                          a_fmt=P16_2, b_fmt=P16_1, out_fmt=P16_1)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# ----------------------------------------------------------- streaming codec --
+@pytest.mark.parametrize("nbits,es", [(8, 0), (8, 3), (16, 1)])
+@pytest.mark.parametrize("shape", [(1000,), (17, 300), (4, 5, 333)])
+def test_codec_kernel_decode(nbits, es, shape):
+    rng = np.random.default_rng(0)
+    dt = np.uint8 if nbits == 8 else np.uint16
+    codes = jnp.asarray(rng.integers(0, 1 << nbits, shape).astype(dt))
+    got = decode_kernel(codes, es, nbits=nbits, interpret=True)
+    want = codec_ref.decode_ref(codes, es, nbits=nbits)
+    g, w = np.asarray(got), np.asarray(want)
+    assert ((g == w) | (np.isnan(g) & np.isnan(w))).all()
+    assert got.shape == shape
+
+
+@pytest.mark.parametrize("nbits,es", [(8, 1), (16, 2)])
+def test_codec_kernel_encode(nbits, es):
+    x = _rand((33, 257), 11, scale=10.0)
+    got = encode_kernel(x, es, nbits=nbits, interpret=True)
+    want = codec_ref.encode_ref(x, es, nbits=nbits)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert got.shape == x.shape
+
+
+def test_codec_kernel_roundtrip_bf16_exact_for_p8():
+    """p8 -> bf16 decode is exact (DESIGN.md: full-MXU-speed claim)."""
+    codes = jnp.asarray(np.arange(256, dtype=np.uint8))
+    f32 = decode_kernel(codes, 2, nbits=8, interpret=True)
+    bf = decode_kernel(codes, 2, nbits=8, out_dtype_name="bfloat16", interpret=True)
+    g, w = np.asarray(bf.astype(jnp.float32)), np.asarray(f32)
+    assert ((g == w) | (np.isnan(g) & np.isnan(w))).all()
+
+
+# ------------------------------------------------------------- attention ------
+@pytest.mark.parametrize("kv_bits,es", [(8, 0), (16, 1)])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,d,bs",
+    [(2, 4, 2, 256, 64, 128),    # GQA 2:1, multi s-tile
+     (1, 8, 1, 128, 128, 128),   # MQA
+     (3, 6, 6, 100, 32, 64)],    # MHA, ragged S
+)
+def test_decode_attention_vs_ref(kv_bits, es, B, Hq, Hkv, S, d, bs):
+    rng = np.random.default_rng(12)
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, d)).astype(np.float32))
+    kf = rng.normal(0, 1, (B, Hkv, S, d)).astype(np.float32)
+    vf = rng.normal(0, 1, (B, Hkv, S, d)).astype(np.float32)
+    kc = posit_encode(jnp.asarray(kf), kv_bits, es)
+    vc = posit_encode(jnp.asarray(vf), kv_bits, es)
+    lengths = jnp.asarray(rng.integers(S // 2, S + 1, B), jnp.int32)
+    got = posit_decode_attention(
+        q, kc, vc, lengths, es, kv_bits=kv_bits, block_s=bs, interpret=True)
+    want = posit_decode_attention_ref(q, kc, vc, lengths, es, kv_bits=kv_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_respects_lengths():
+    """Cache positions beyond `length` must not influence the output."""
+    B, H, S, d = 1, 2, 128, 64
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, d)).astype(np.float32))
+    kf = rng.normal(0, 1, (B, H, S, d)).astype(np.float32)
+    vf = rng.normal(0, 1, (B, H, S, d)).astype(np.float32)
+    # poison the invalid tail
+    kf[:, :, 64:] = 1e9
+    vf[:, :, 64:] = -1e9
+    kc, vc = posit_encode(jnp.asarray(kf), 8, 0), posit_encode(jnp.asarray(vf), 8, 0)
+    lengths = jnp.asarray([64], jnp.int32)
+    got = posit_decode_attention(q, kc, vc, lengths, 0, kv_bits=8,
+                                 block_s=64, interpret=True)
+    want = posit_decode_attention_ref(
+        q, kc[:, :, :64], vc[:, :, :64], lengths, 0, kv_bits=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+# --------------------------------------------------------------- softmax ------
+@pytest.mark.parametrize("nbits,es", [(8, 0), (16, 1)])
+@pytest.mark.parametrize("R,C", [(8, 8), (64, 128), (10, 300)])
+def test_posit_softmax_kernel(nbits, es, R, C):
+    rng = np.random.default_rng(14)
+    logits = jnp.asarray(rng.normal(0, 3, (R, C)).astype(np.float32))
+    codes = posit_encode(logits, nbits, es)
+    got = posit_softmax_kernel(codes, es, nbits=nbits, interpret=True)
+    want = posit_softmax_ref(codes, es, nbits=nbits)
+    gv = np.asarray(posit_decode(got, nbits, es))
+    wv = np.asarray(posit_decode(want, nbits, es))
+    # f32 softmax then posit encode on both sides; padding may shift the last ulp
+    np.testing.assert_allclose(gv, wv, rtol=2 ** -(nbits - 4), atol=1e-6)
+    if nbits == 16:
+        # sum~1 only survives encoding at p16; p8 rounds tiny probabilities up
+        # systematically (values below ~2^-6 keep almost no fraction bits)
+        np.testing.assert_allclose(gv.sum(-1), 1.0, atol=0.05)

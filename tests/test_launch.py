@@ -1,0 +1,125 @@
+"""Launch-layer unit tests: collective parsing, sharding rules, roofline math,
+param counting — everything that doesn't need 512 devices."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, cells, get_arch, get_shape, list_archs
+from repro.launch.dryrun import parse_collectives
+from repro.launch.roofline import analyse, model_flops, param_count
+from repro.launch.sharding import param_spec
+
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = u8[64,128]{1,0} all-gather(%small), dimensions={0}
+  %a2a = (u16[8,32]{1,0}, u16[8,32]{1,0}) all-to-all(%x, %y), dimensions={0}
+  %rs-start = bf16[4,256]{1,0} reduce-scatter-start(%z), dimensions={0}
+  ROOT %cp = f32[2,2]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_parse_collectives():
+    got = parse_collectives(HLO_SAMPLE)
+    assert got["all-reduce"]["bytes"] == 16 * 128 * 4
+    assert got["all-gather"]["bytes"] == 64 * 128 * 1
+    assert got["all-to-all"]["bytes"] == 2 * 8 * 32 * 2
+    assert got["reduce-scatter"]["bytes"] == 4 * 256 * 2
+    assert got["collective-permute"]["bytes"] == 2 * 2 * 4
+    assert got["all-reduce"]["count"] == 1
+    assert got["all-gather"]["by_dtype"] == {"u8": 64 * 128}
+
+
+def test_parse_collectives_skips_done():
+    txt = "%x = f32[8]{0} all-reduce-start(%a)\n%y = f32[8]{0} all-reduce-done(%x)"
+    got = parse_collectives(txt)
+    assert got["all-reduce"]["count"] == 1  # start counted, done skipped
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_param_spec_rules():
+    mesh = FakeMesh()
+    # col-parallel: (in, out) -> (data, model)
+    assert param_spec("blocks/attn/wq/w", (60, 7168, 7168), mesh) == \
+        P(None, "data", "model")
+    # row-parallel
+    assert param_spec("blocks/mlp/down/w", (60, 20480, 7168), mesh) == \
+        P(None, "model", "data")
+    # experts: E over model (EP)
+    assert param_spec("blocks/moe/w_gate", (16, 64, 2048, 1024), mesh) == \
+        P(None, "model", "data", None)
+    # embedding: vocab over model when divisible
+    assert param_spec("embed/table", (64000, 7168), mesh) == P("model", "data")
+    # granite's 49155 vocab is not divisible -> unsharded vocab dim
+    assert param_spec("embed/table", (49155, 1536), mesh) == P(None, "data")
+    # optimizer moments mirror the parameter
+    assert param_spec("mu/blocks/attn/wq/w/m", (60, 7168, 7168), mesh) == \
+        P(None, "data", "model")
+    # norms replicate
+    assert param_spec("blocks/ln1/g", (60, 7168), mesh) == P(None, None)
+    # posit-coded weights shard like their float counterparts
+    assert param_spec("blocks/attn/wq/w_codes", (60, 7168, 7168), mesh) == \
+        P(None, "data", "model")
+
+
+def test_cells_assignment_matrix():
+    """40 cells total; 7 long_500k skips for full-attention archs (DESIGN §6)."""
+    all_cells = list(cells(include_skipped=True))
+    assert len(all_cells) == 40
+    skips = [(c.name, s.name) for c, s, sk in all_cells if sk]
+    assert len(skips) == 7
+    assert all(s == "long_500k" for _, s in skips)
+    runnable = list(cells())
+    assert len(runnable) == 33
+    long_archs = {c.name for c, s, _ in runnable if s.name == "long_500k"}
+    assert long_archs == {"zamba2-7b", "gemma3-4b", "xlstm-125m"}
+
+
+def test_param_count_sane():
+    """Analytic param counts should be within ~15% of the nominal sizes."""
+    nominal = {"yi-34b": 34e9, "phi3-mini-3.8b": 3.8e9,
+               "qwen2.5-14b": 14e9, "olmoe-1b-7b": 7e9}
+    for arch, n in nominal.items():
+        total, active = param_count(get_arch(arch))
+        assert 0.8 * n < total < 1.25 * n, (arch, total)
+        assert active <= total
+    # olmoe: ~1B active of ~7B total
+    total, active = param_count(get_arch("olmoe-1b-7b"))
+    assert active < 0.35 * total
+
+
+def test_model_flops_scaling():
+    cfg = get_arch("phi3-mini-3.8b")
+    tr = model_flops(cfg, get_shape("train_4k"))
+    pf = model_flops(cfg, get_shape("prefill_32k"))
+    dc = model_flops(cfg, get_shape("decode_32k"))
+    # train = 6ND on 1M tokens; prefill = 2ND on 1M tokens -> 3x
+    assert abs(tr / pf - 3.0) < 1e-6
+    # decode: 128 tokens vs 1M -> tiny
+    assert dc < pf / 1000
+
+
+def test_roofline_analyse():
+    rec = {
+        "arch": "phi3-mini-3.8b", "shape": "train_4k", "kind": "train",
+        "multi_pod": False, "n_chips": 256,
+        "flops_per_device": 1.1e14, "bytes_per_device": 2.0e11,
+        "memory": {}, "collectives": {"all-reduce": {"bytes": 5e9, "count": 3}},
+    }
+    out = analyse(rec)
+    assert out["dominant"] in ("compute", "memory", "collective")
+    assert out["t_compute_s"] == pytest.approx(1.1e14 / 197e12)
+    assert out["t_memory_s"] == pytest.approx(2.0e11 / 819e9)
+    assert out["t_collective_s"] == pytest.approx(5e9 / 50e9)
+    assert 0 < out["useful_ratio"] < 10
+    assert out["roofline_fraction"] > 0
