@@ -1,0 +1,118 @@
+"""Quire dataflow: exact-vs-rounded accumulation ULP error + throughput.
+
+Quantifies what the quire buys (and costs) against the paper's codec+FPU
+fused path on the same posit GEMM:
+
+  * accuracy — ULP distance (signed posit-code space: posit codes are
+    value-ordered, so |signed(a) - signed(b)| is exactly "roundings apart")
+    of each dataflow vs the Fraction-arithmetic exact-sum oracle. The quire
+    column must read 0 by construction; the fused column shows the f32
+    double-rounding accumulation error the quire removes.
+  * throughput — us/call of the quire GEMM (integer VPU datapath) vs the
+    fused GEMM (MXU datapath) on identical shapes. The quire is expected to
+    be much slower: it exists for the reductions where exactness matters
+    (losses, norms, long-K dots at p8/p16), not for bulk FLOPs.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import ref_codec
+from repro.core.codec import posit_encode
+from repro.core.dot import posit_dot
+from repro.core.pcsr import OperandSlots
+from repro.core.quire import quire_matmul
+from repro.core.types import P8_0, P16_1, PositFmt
+
+# accuracy problem: M independent K-long dot products
+M_ACC, K_ACC = 48, 512
+# throughput problem (small: the quire path is a software accumulator)
+M_T, K_T, N_T = 32, 256, 32
+
+
+def _signed(codes: np.ndarray, nbits: int) -> np.ndarray:
+    s = codes.astype(np.int64)
+    return np.where(s >= 1 << (nbits - 1), s - (1 << nbits), s)
+
+
+def _ulp(a: np.ndarray, b: np.ndarray, nbits: int) -> np.ndarray:
+    return np.abs(_signed(a, nbits) - _signed(b, nbits))
+
+
+def _exact_codes(a: np.ndarray, b: np.ndarray, n: int, es: int) -> np.ndarray:
+    """Fraction oracle for each row-dot of a (M,K) x b (K,)."""
+    out = np.empty(a.shape[0], dtype=a.dtype)
+    vb = [ref_codec.ref_decode(int(y), n, es) for y in b]
+    for i in range(a.shape[0]):
+        acc = Fraction(0)
+        for x, v in zip(a[i], vb):
+            acc += ref_codec.ref_decode(int(x), n, es) * v
+        out[i] = ref_codec.ref_encode_exact(acc, n, es)
+    return out
+
+
+def _accuracy(fmt: PositFmt) -> None:
+    n, es = fmt.nbits, fmt.es
+    rng = np.random.default_rng(0)
+    # Cancellation-heavy dot: large mirrored pairs (posit negation is exact,
+    # so each pair cancels exactly in the quire) swamping a small O(1) signal
+    # in the first columns of each half. The f32 partial sums run ~big^2 *
+    # sqrt(K) while the true result is O(1), so rounded accumulation error
+    # lands above the posit ulp — the regime the quire exists for.
+    big = min(fmt.maxpos / 8, 1024.0)  # keep f32 partials finite for p16
+    half = K_ACC // 2
+    av = rng.normal(0, big, (M_ACC, K_ACC)).astype(np.float32)
+    bv = rng.normal(0, big, K_ACC).astype(np.float32)
+    av[:, half:] = av[:, :half]
+    bv[half:] = -bv[:half]
+    av[:, :8] = rng.normal(0, 1, (M_ACC, 8))
+    bv[:8] = rng.normal(0, 1, 8)
+    av[:, half:half + 8] = rng.normal(0, 1, (M_ACC, 8))
+    bv[half:half + 8] = rng.normal(0, 1, 8)
+    a = np.asarray(posit_encode(jnp.asarray(av), n, es))
+    b = np.asarray(posit_encode(jnp.asarray(bv), n, es))
+    want = _exact_codes(a, b, n, es)
+
+    slots = OperandSlots.uniform(fmt)
+    fused = np.asarray(posit_dot(jnp.asarray(a), jnp.asarray(b[:, None]),
+                                 slots, impl="fused"))[:, 0]
+    quire = np.asarray(quire_matmul(jnp.asarray(a), jnp.asarray(b[:, None]),
+                                    fmt))[:, 0]
+    uf, uq = _ulp(fused, want, n), _ulp(quire, want, n)
+    emit(f"quire/acc_{fmt.name}", 0.0,
+         f"K={K_ACC} fused_mean_ulp={uf.mean():.3f} fused_max_ulp={uf.max()} "
+         f"quire_mean_ulp={uq.mean():.3f} quire_max_ulp={uq.max()} "
+         f"quire_exact={bool((quire == want).all())}")
+    assert (quire == want).all(), "quire dataflow must be bit-exact"
+
+
+def _throughput(fmt: PositFmt) -> None:
+    n, es = fmt.nbits, fmt.es
+    rng = np.random.default_rng(1)
+    a = posit_encode(jnp.asarray(rng.normal(0, 1, (M_T, K_T)).astype(np.float32)), n, es)
+    b = posit_encode(jnp.asarray(rng.normal(0, 1, (K_T, N_T)).astype(np.float32)), n, es)
+    slots = OperandSlots.uniform(fmt)
+
+    fused = jax.jit(lambda a, b: posit_dot(a, b, slots, impl="fused"))
+    quire = jax.jit(lambda a, b: quire_matmul(a, b, fmt))
+    us_f = time_fn(fused, a, b)
+    us_q = time_fn(quire, a, b)
+    emit(f"quire/gemm_{fmt.name}_fused", us_f, f"shape={M_T}x{K_T}x{N_T}")
+    emit(f"quire/gemm_{fmt.name}_quire", us_q,
+         f"shape={M_T}x{K_T}x{N_T} slowdown_x{us_q / us_f:.1f} (exact)")
+
+
+def run():
+    for fmt in (P8_0, P16_1):
+        _accuracy(fmt)
+        _throughput(fmt)
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -6,7 +6,11 @@ ASIC area/delay have no CPU analogue, so each variant's cost is reported as
     datapath), clearly labelled a proxy.
 
 Variants mirror the paper's: Baseline (FPU), +P8 (8-bit codecs), +MP
-(8+16-bit muxed), +MP+ES (dynamic exponent size from the pcsr).
+(8+16-bit muxed), +MP+ES (dynamic exponent size from the pcsr). A fifth
+beyond-paper variant, +QUIRE (PERCIVAL-style exact accumulator), is reported
+on a GEMV row pair so PAU-rounded vs quire-exact accumulation share a
+workload: the quire never touches the MXU, so its delay proxy is the price
+of exactness, not a like-for-like FPU delta.
 """
 from __future__ import annotations
 
@@ -16,6 +20,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.core.codec import posit_decode, posit_encode
+from repro.core.quire import quire_matmul
+from repro.core.types import P8_0
 
 N = 512
 
@@ -71,6 +77,26 @@ def run():
             emit(f"table3/{name}", us,
                  f"ops={ops} time+{(us / base_us - 1) * 100:.1f}% "
                  f"area_proxy+{(ops / base_ops - 1) * 100:.1f}%")
+
+    # +QUIRE variant: PAU-rounded vs quire-exact accumulation on one GEMV row
+    # (x_row @ W, K=N). The fused path rounds the f32 accumulation once at
+    # encode; the quire path is bit-exact with a single terminal rounding.
+    x8 = posit_encode(x[:1, :], 8, 0)
+    def p8_gemv(x8, w8):
+        y = jnp.matmul(posit_decode(x8, 8, 0), posit_decode(w8, 8, 0),
+                       preferred_element_type=jnp.float32)
+        return posit_encode(y, 8, 0)
+    gemv = jax.jit(p8_gemv)
+    us_g = time_fn(gemv, x8, w8)
+    ops_g = _hlo_ops(gemv, x8, w8)
+    emit("table3/fpu_p8_gemv", us_g, f"ops={ops_g} (rounded-accum reference)")
+
+    quire = jax.jit(lambda a, b: quire_matmul(a, b, P8_0))
+    us_q = time_fn(quire, x8, w8)
+    ops_q = _hlo_ops(quire, x8, w8)
+    emit("table3/fpu_p8_quire", us_q,
+         f"ops={ops_q} time+{(us_q / us_g - 1) * 100:.1f}% "
+         f"area_proxy+{(ops_q / ops_g - 1) * 100:.1f}% (exact-accum)")
     return True
 
 

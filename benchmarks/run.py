@@ -18,6 +18,7 @@ BENCHES = {
     "gemv_softmax": "benchmarks.bench_gemv_softmax",   # §IV-C
     "table2": "benchmarks.bench_table2_features",      # Table II SOTA baselines
     "collectives": "benchmarks.bench_collectives",     # beyond-paper
+    "quire": "benchmarks.bench_quire_accuracy",        # beyond-paper: exact acc
 }
 
 

@@ -44,3 +44,21 @@ print("mixed-format GEMM max err:",
 policy = TransPolicy.from_names(weights="p16_1", kv_cache="p8_0",
                                 compute_dtype="bf16")
 print("policy:", policy.describe())
+
+# 6. The quire (beyond-paper, PERCIVAL-style): exact accumulation with ONE
+#    terminal rounding. maxpos^2 - maxpos^2 + minpos^2 survives exactly —
+#    any rounded accumulator (f32 FPU or PAU) loses it.
+from repro.core import P16_2, qclr, qma, qms, qround
+
+maxpos, minpos = jnp.uint16(0x7FFF), jnp.uint16(1)
+q = qclr((), 16, es=2)
+q = qma(q, maxpos, maxpos, 16, 2)     # += maxpos^2
+q = qms(q, maxpos, maxpos, 16, 2)     # -= maxpos^2  (cancels exactly)
+q = qma(q, minpos, minpos, 16, 2)     # += minpos^2
+print("quire recovers minpos^2:", posit_decode(qround(q, 16, 2), 16, 2))
+
+#    Same capability as a GEMM dataflow, selected through the pcsr:
+Aq = posit_encode(A, 16, 2)
+Bq = posit_encode(B, 16, 2)
+y_exact = posit_dot(Aq, Bq, OperandSlots.uniform(P16_2, dataflow="quire"))
+print("quire GEMM (exact accumulation):", posit_decode(y_exact, 16, 2)[0, :4])

@@ -5,8 +5,9 @@ Public API:
   codec:    posit_decode, posit_encode, quantize (bit-exact, dynamic es)
   pcsr:     OperandSlots (per-op), TransPolicy (per-run)
   fcvt:     Table-I conversion ops (static or traced es)
-  alu:      true-posit integer add/mul (PERCIVAL-baseline)
-  dot:      posit_dot / posit_matmul_wx (fused vs unfused dataflows)
+  alu:      true-posit integer add/mul (PERCIVAL-baseline) + fused quire ops
+  dot:      posit_dot / posit_matmul_wx (fused / unfused / quire dataflows)
+  quire:    exact Kulisch accumulator (QuireFmt, quire_* ops, quire_matmul)
 """
 from repro.core.types import (  # noqa: F401
     BF16, ES_MAX, ES_MIN, F16, F32, Fmt, FloatFmt, P8_0, P8_1, P8_2, P8_3,
@@ -16,14 +17,21 @@ from repro.core.codec import (  # noqa: F401
     decode, encode, posit_decode, posit_decode_to, posit_encode, quantize,
 )
 from repro.core.pcsr import (  # noqa: F401
-    FP32_POLICY, P8_SERVE, P8_WEIGHTS, P16_TRAIN, P16_WEIGHTS, ROLES,
-    OperandSlots, TransPolicy,
+    DATAFLOWS, FP32_POLICY, P8_SERVE, P8_WEIGHTS, P16_QUIRE, P16_TRAIN,
+    P16_WEIGHTS, ROLES, OperandSlots, TransPolicy,
 )
 from repro.core.convert import (  # noqa: F401
     fcvt_p8_p8, fcvt_p8_p16, fcvt_p8_s, fcvt_p16_p8, fcvt_p16_p16, fcvt_p16_s,
     fcvt_s_p8, fcvt_s_p16,
 )
-from repro.core.alu import posit_add, posit_mul, posit_sub  # noqa: F401
+from repro.core.alu import (  # noqa: F401
+    posit_add, posit_mul, posit_sub, qclr, qma, qms, qneg, qround,
+)
 from repro.core.dot import (  # noqa: F401
     posit_dot, posit_gemv, posit_matmul_wx, posit_softmax,
+)
+from repro.core.quire import (  # noqa: F401
+    QuireFmt, quire_accumulate, quire_add_posit, quire_dot, quire_from_posit,
+    quire_is_nar, quire_matmul, quire_negate, quire_normalize, quire_read,
+    quire_zero,
 )

@@ -26,35 +26,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.codec import EsLike, _encode_fields, _es_u32, _u32, _U32
+from repro.core.codec import (
+    EsLike, _decode_fields, _encode_fields, _es_u32, _sigw, _u32, _U32,
+)
+
+from repro.core.quire import QuireFmt, quire_accumulate, quire_negate, quire_read, quire_zero
 
 _HID = 27  # hidden-bit position in the add datapath
-
-
-def _sigw(nbits: int) -> int:
-    return 6 if nbits == 8 else 14
-
-
-def _decode_fields(codes: jax.Array, nbits: int, esl: jax.Array):
-    """posit bits -> (neg, scale:int32, sig:uint32 hidden@SIGW-1, is_zero, is_nar)."""
-    n = nbits
-    c = codes.astype(_U32) & _u32((1 << n) - 1)
-    is_zero = c == 0
-    is_nar = c == _u32(1 << (n - 1))
-    neg = ((c >> _u32(n - 1)) & 1) == 1
-    absc = jnp.where(neg, (_u32(1 << n) - c) & _u32((1 << n) - 1), c)
-    y = absc << _u32(33 - n)
-    r0 = (absc >> _u32(n - 2)) & _u32(1)
-    z = jnp.where(r0 == 1, ~y, y)
-    m = jnp.minimum(lax.clz(z.astype(jnp.int32)).astype(jnp.int32), n - 1)
-    k = jnp.where(r0 == 1, m - 1, -m)
-    rem = y << _u32(m + 1)
-    e = ((rem >> _u32(24)) >> (_u32(8) - esl)).astype(jnp.int32)
-    frac_la = rem << esl
-    scale = k * (jnp.int32(1) << esl.astype(jnp.int32)) + e
-    sigw = _sigw(n)
-    sig = (_u32(1) << _u32(sigw - 1)) | (frac_la >> _u32(32 - (sigw - 1)))
-    return neg, scale, sig, is_zero, is_nar
 
 
 def posit_mul(a: jax.Array, b: jax.Array, nbits: int, es: EsLike) -> jax.Array:
@@ -135,3 +113,38 @@ def posit_sub(a: jax.Array, b: jax.Array, nbits: int, es: EsLike) -> jax.Array:
     n = nbits
     nb = ((_u32(1 << n) - b.astype(_U32)) & _u32((1 << n) - 1))
     return posit_add(a, nb.astype(b.dtype), n, es)
+
+
+# =====================================================================
+# fused quire ops — PERCIVAL's quire ISA (qmadd.s / qmsub.s / qclr / qneg /
+# qround.p) at op granularity. The quire state itself lives in
+# ``repro.core.quire``; these are the ALU-level fused entry points: a
+# multiply whose exact product is accumulated with NO intermediate rounding.
+# =====================================================================
+
+def qclr(batch_shape, nbits: int, es: int = 2):
+    """Cleared quire for P(nbits, es) — PERCIVAL ``qclr``."""
+    return quire_zero(batch_shape, QuireFmt(nbits, es))
+
+
+def qma(q: jax.Array, a: jax.Array, b: jax.Array, nbits: int,
+        es: EsLike) -> jax.Array:
+    """q += a * b exactly (PERCIVAL ``qmadd.s``): no rounding until qround."""
+    return quire_accumulate(q, a, b, QuireFmt(nbits), es_a=es, es_b=es)
+
+
+def qms(q: jax.Array, a: jax.Array, b: jax.Array, nbits: int,
+        es: EsLike) -> jax.Array:
+    """q -= a * b exactly (PERCIVAL ``qmsub.s``)."""
+    return quire_accumulate(q, a, b, QuireFmt(nbits), es_a=es, es_b=es,
+                            subtract=True)
+
+
+def qneg(q: jax.Array, nbits: int) -> jax.Array:
+    """Exact quire negation (PERCIVAL ``qneg``)."""
+    return quire_negate(q, QuireFmt(nbits))
+
+
+def qround(q: jax.Array, nbits: int, es: EsLike) -> jax.Array:
+    """quire -> posit code, the single terminal RNE (PERCIVAL ``qround.p``)."""
+    return quire_read(q, QuireFmt(nbits), es_out=es)

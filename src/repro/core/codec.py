@@ -109,6 +109,46 @@ def posit_decode_to(codes: jax.Array, nbits: int, es: EsLike, dtype) -> jax.Arra
 
 
 # =====================================================================
+# field decode: posit bits -> integer (sign, scale, significand) fields
+# =====================================================================
+
+def _sigw(nbits: int) -> int:
+    """Significand width incl. hidden bit: 6 for p8, 14 for p16 (max fraction
+    bits at es=0 plus the hidden bit)."""
+    return 6 if nbits == 8 else 14
+
+
+def _decode_fields(codes: jax.Array, nbits: int, esl: jax.Array):
+    """posit bits -> (neg, scale:int32, sig:uint32 hidden@SIGW-1, is_zero, is_nar).
+
+    The integer-domain front half of the codec, shared by the true-posit ALU
+    (repro.core.alu) and the quire (repro.core.quire). Uses the same
+    f32-exponent floor-log2 trick as ``posit_decode`` so it lowers through both
+    XLA and Mosaic (Pallas kernel bodies). Fields for zero/NaR inputs are
+    garbage and must be masked via the returned flags.
+    """
+    n = nbits
+    c = codes.astype(_U32) & _u32((1 << n) - 1)
+    is_zero = c == 0
+    is_nar = c == _u32(1 << (n - 1))
+    neg = ((c >> _u32(n - 1)) & 1) == 1
+    absc = jnp.where(neg, (_u32(1 << n) - c) & _u32((1 << n) - 1), c)
+    r0 = (absc >> _u32(n - 2)) & _u32(1)
+    w = jnp.where(r0 == 1, (~absc) & _u32((1 << (n - 1)) - 1), absc)
+    p = _floor_log2_small(jnp.maximum(w, 1).astype(jnp.int32))
+    m = jnp.where(w == 0, n - 1, (n - 2) - p)  # regime run length
+    k = jnp.where(r0 == 1, m - 1, -m)
+    y = absc << _u32(33 - n)
+    rem = y << _u32(m + 1)
+    e = ((rem >> _u32(24)) >> (_u32(8) - esl)).astype(jnp.int32)
+    frac_la = rem << esl
+    scale = k * (jnp.int32(1) << esl.astype(jnp.int32)) + e
+    sigw = _sigw(n)
+    sig = (_u32(1) << _u32(sigw - 1)) | (frac_la >> _u32(32 - (sigw - 1)))
+    return neg, scale, sig, is_zero, is_nar
+
+
+# =====================================================================
 # encode core: (sign, scale, fraction, sticky) -> posit bits
 # =====================================================================
 

@@ -1,6 +1,7 @@
 """Posit GEMM front door — the paper's Fig. 2(b) dataflow at op granularity.
 
-Two dataflows, matching the paper's SoC comparison (Table IV):
+Three dataflows, selected by the pcsr (``OperandSlots.dataflow``) or the
+``impl`` override:
 
 * ``fused``  (ours): posit operands are decoded tile-by-tile *inside* the matmul
   (Pallas kernel on TPU; XLA-fused jnp path elsewhere), the MXU/FPU computes in
@@ -10,6 +11,11 @@ Two dataflows, matching the paper's SoC comparison (Table IV):
   the full decoded f32 tensor in HBM before the matmul (and a separate encode
   pass after). Two extra HBM round-trips per operand — the analogue of [7]'s two
   extra conversion instructions per operation, which cost it 2.54x throughput.
+* ``quire`` (PERCIVAL-style, beyond-paper): every posit product accumulates
+  *exactly* in a software Kulisch accumulator (repro.core.quire), with a single
+  rounding at readout — zero accumulation error, at integer-datapath cost.
+  Requires all-posit slots; see ``kernels.posit_quire_gemm`` for the tiled
+  TPU version of the same contract.
 
 Operand formats come from an ``OperandSlots`` pcsr (per-slot pfmt/pprec/pes):
 float slots bypass the codec entirely (IEEE-754 compatibility), posit slots
@@ -40,6 +46,33 @@ def _encode_result(y: jax.Array, fmt: Fmt, es: Optional[EsLike]) -> jax.Array:
     return y.astype(compute_dtype_for(fmt))
 
 
+def _quire_dot(a, b, slots, *, es_a=None, es_b=None, es_out=None,
+               dimension_numbers=None):
+    """dataflow="quire": exact accumulation through repro.core.quire."""
+    from repro.core.quire import quire_matmul  # core->quire, no cycle w/ dot
+
+    for name, f in (("rs1", slots.rs1), ("rs2", slots.rs2), ("rd", slots.rd)):
+        if not isinstance(f, PositFmt):
+            raise ValueError(
+                f"quire dataflow requires posit {name}, got {f}: float slots "
+                "have no exact quire representation (use fused/unfused)")
+    if dimension_numbers is not None:
+        raise NotImplementedError(
+            "quire dataflow supports plain (M,K)@(K,N) contractions")
+    if a.ndim != 2 or b.ndim != 2:
+        raise NotImplementedError(
+            f"quire dataflow is 2-D GEMM only, got {a.shape} @ {b.shape}")
+    wide = slots.rs1 if slots.rs1.nbits >= slots.rs2.nbits else slots.rs2
+    return quire_matmul(
+        a, b, wide,
+        es_a=slots.rs1.es if es_a is None else es_a,
+        es_b=slots.rs2.es if es_b is None else es_b,
+        nbits_a=slots.rs1.nbits, nbits_b=slots.rs2.nbits,
+        out_nbits=slots.rd.nbits,
+        es_out=slots.rd.es if es_out is None else es_out,
+    )
+
+
 def posit_dot(
     a: jax.Array,
     b: jax.Array,
@@ -48,18 +81,25 @@ def posit_dot(
     es_a: Optional[EsLike] = None,
     es_b: Optional[EsLike] = None,
     es_out: Optional[EsLike] = None,
-    impl: str = "fused",
+    impl: Optional[str] = None,
     compute_dtype=None,
     dimension_numbers=None,
 ) -> jax.Array:
     """General dot with per-operand pcsr formats.
 
     a/b: float arrays, or uint8/uint16 posit-code arrays per ``slots``.
-    impl: "fused" (ours) | "unfused" ([7]-style baseline).
-    Accumulation is always f32 (the MXU/FPU datapath), like the paper's FP32 FPU.
+    impl: "fused" (ours) | "unfused" ([7]-style baseline) | "quire" (exact
+    accumulation, single terminal rounding); ``None`` defers to the pcsr's
+    ``slots.dataflow``. fused/unfused accumulate in f32 (the MXU/FPU
+    datapath, like the paper's FP32 FPU); quire accumulates exactly.
     """
-    if impl not in ("fused", "unfused"):
-        raise ValueError(f"impl must be fused|unfused, got {impl}")
+    if impl is None:
+        impl = slots.dataflow
+    if impl not in ("fused", "unfused", "quire"):
+        raise ValueError(f"impl must be fused|unfused|quire, got {impl}")
+    if impl == "quire":
+        return _quire_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
+                          dimension_numbers=dimension_numbers)
     if compute_dtype is None:
         # lossless-decode dtype: bf16 only if *both* operands allow it
         ca = compute_dtype_for(slots.rs1)

@@ -26,21 +26,45 @@ from typing import Optional
 from repro.core.types import BF16, F32, Fmt, PositFmt, get_format
 
 
+# Accumulation dataflows a dot-like op can run under (repro.core.dot):
+#   fused    — decode inside the matmul, f32 FPU accumulation (the paper)
+#   unfused  — [7]-style separate conversion passes, same numerics as fused
+#   quire    — PERCIVAL-style exact Kulisch accumulation, single terminal
+#              rounding (repro.core.quire / kernels.posit_quire_gemm)
+DATAFLOWS = ("fused", "unfused", "quire")
+
+
 @dataclasses.dataclass(frozen=True)
 class OperandSlots:
-    """Per-op format config: 3 input slots + 1 output slot (the literal pcsr)."""
+    """Per-op format config: 3 input slots + 1 output slot (the literal pcsr).
+
+    ``dataflow`` is the beyond-paper pcsr bit pair selecting the accumulation
+    path; it is a *static* field (it changes the lowered program, unlike es
+    which stays a traced scalar).
+    """
 
     rs1: Fmt = F32
     rs2: Fmt = F32
     rs3: Fmt = F32  # fused-op third operand (e.g. addend of FMA / bias)
     rd: Fmt = F32
+    dataflow: str = "fused"
+
+    def __post_init__(self):
+        if self.dataflow not in DATAFLOWS:
+            raise ValueError(
+                f"dataflow must be one of {DATAFLOWS}, got {self.dataflow!r}")
 
     @classmethod
-    def uniform(cls, fmt: Fmt) -> "OperandSlots":
-        return cls(rs1=fmt, rs2=fmt, rs3=fmt, rd=fmt)
+    def uniform(cls, fmt: Fmt, dataflow: str = "fused") -> "OperandSlots":
+        return cls(rs1=fmt, rs2=fmt, rs3=fmt, rd=fmt, dataflow=dataflow)
+
+    def with_dataflow(self, dataflow: str) -> "OperandSlots":
+        return dataclasses.replace(self, dataflow=dataflow)
 
     def encode_bits(self) -> int:
-        """Pack into the paper's 4x(1+1+3)-bit register layout (for display)."""
+        """Pack into the paper's 4x(1+1+3)-bit register layout (for display),
+        plus our dataflow extension in bits 20-21 (00 fused / 01 unfused /
+        10 quire)."""
         word = 0
         for i, f in enumerate((self.rs1, self.rs2, self.rs3, self.rd)):
             pfmt = 1 if isinstance(f, PositFmt) else 0
@@ -49,6 +73,7 @@ class OperandSlots:
             word |= pfmt << i
             word |= pprec << (4 + i)
             word |= pes << (8 + 3 * i)
+        word |= DATAFLOWS.index(self.dataflow) << 20
         return word
 
 
@@ -61,6 +86,7 @@ ROLES = (
     "optimizer",      # Adam moments at rest
     "collectives",    # generic collective payloads (compressed psum)
     "checkpoint",     # on-disk format
+    "state",          # recurrent state (SSM/xLSTM h): quire-carried update
 )
 
 
@@ -79,7 +105,12 @@ class TransPolicy:
     optimizer: Optional[PositFmt] = None
     collectives: Optional[PositFmt] = None
     checkpoint: Optional[PositFmt] = None
+    state: Optional[PositFmt] = None    # posit recurrent state, quire update
     compute_dtype: str = "f32"  # "f32" | "bf16" — the FPU-datapath dtype
+    # Exact quire-domain psum for posit collective payloads: one encode
+    # rounding per device + one readout rounding total, instead of re-rounding
+    # at every reduction hop (distributed.collectives.quire_psum_posit).
+    exact_collectives: bool = False
 
     def fmt_for(self, role: str) -> Optional[PositFmt]:
         if role not in ROLES:
@@ -87,8 +118,10 @@ class TransPolicy:
         return getattr(self, role)
 
     @classmethod
-    def from_names(cls, compute_dtype: str = "f32", **roles: Optional[str]) -> "TransPolicy":
-        kw = {}
+    def from_names(cls, compute_dtype: str = "f32",
+                   exact_collectives: bool = False,
+                   **roles: Optional[str]) -> "TransPolicy":
+        kw = {"exact_collectives": exact_collectives}
         for role, name in roles.items():
             if name is None or name == "none":
                 kw[role] = None
@@ -104,6 +137,8 @@ class TransPolicy:
         for role in ROLES:
             f = self.fmt_for(role)
             parts.append(f"{role}={f.name if f else '-'}")
+        if self.exact_collectives:
+            parts.append("exact_collectives")
         return " ".join(parts)
 
 
@@ -115,4 +150,10 @@ P8_WEIGHTS = TransPolicy.from_names(weights="p8_0", compute_dtype="bf16")
 P8_SERVE = TransPolicy.from_names(weights="p8_0", kv_cache="p8_0", compute_dtype="bf16")
 P16_TRAIN = TransPolicy.from_names(
     weights="p16_1", gradients="p16_1", optimizer="p16_1", checkpoint="p16_1"
+)
+# Exact-accumulation flavor: posit state carried through a quire, gradient
+# psum in the quire domain (single rounding per device + readout).
+P16_QUIRE = dataclasses.replace(
+    TransPolicy.from_names(weights="p16_1", gradients="p16_1", state="p16_1"),
+    exact_collectives=True,
 )

@@ -1,0 +1,374 @@
+"""Software quire — an exact Kulisch accumulator for posit products.
+
+The paper's lightweight PAU (and our codec+FPU path) rounds after every
+add/mul, which is exactly where transprecision GEMM/reduction accuracy dies at
+p8/p16. PERCIVAL shows the missing capability is a *quire*: a wide fixed-point
+accumulator into which every posit product lands exactly, with one single
+rounding at quire->posit readout. This module is that accumulator, emulated in
+integer JAX so the same source runs through XLA and inside Pallas kernel
+bodies (Mosaic: no int64, no clz — see ``codec._decode_fields``).
+
+Representation (DESIGN.md §7):
+
+  * A quire value is an int32 array whose **last axis** holds ``n_limbs + 1``
+    limbs: ``n_limbs`` radix-2^16 digits (LSB first) plus one NaR flag limb.
+    value = sum_i limb[i] * 2^(16*i - BIAS); any nonzero flag limb == NaR.
+  * Digits are *lazy*: ``quire_accumulate`` adds signed 16-bit digit
+    contributions (|digit| < 2^17) without propagating carries, so each call
+    is cheap and int32 headroom allows up to ``MAX_DEFERRED`` accumulations
+    between ``quire_normalize`` calls. Canonical form after normalize: digits
+    in [0, 2^16) with the top limb carrying the (signed) remainder.
+  * The binary point anchor ``BIAS`` is **static per nbits** (sized for
+    es = ES_MAX), so ``es`` never changes the layout: one compiled executable
+    serves every es in [0, 3], and operands of different es (or even different
+    nbits, p8 x p16) can share one quire.
+  * Width: every product of two posits P(n<=16, es<=3) lands entirely inside
+    the digit array, with ``CARRY_GUARD`` bits of headroom above maxpos^2 —
+    at least 2^CARRY_GUARD products accumulate with no possible overflow.
+
+``quire_read`` converts back to a posit code with a single round-to-nearest-
+even against the *exact* sum (guard/sticky computed from the full magnitude),
+validated bit-for-bit against a Fraction-arithmetic oracle in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.codec import (
+    EsLike, _decode_fields, _encode_fields, _es_u32, _floor_log2_small, _sigw,
+    _u32, _U32,
+)
+from repro.core.types import ES_MAX, PositFmt
+
+RADIX = 16          # bits per digit; int32 limbs leave lazy-carry headroom
+CARRY_GUARD = 20    # MSB headroom: >= 2^20 products accumulate exactly
+MAX_DEFERRED = 8192 # accumulate calls allowed between quire_normalize calls
+
+
+def _static_smax(nbits: int) -> int:
+    """Worst-case |scale| of a posit P(nbits, es<=ES_MAX): (n-2) * 2^ES_MAX."""
+    return (nbits - 2) << ES_MAX
+
+
+def _static_bias(nbits: int) -> int:
+    """Quire bit position of weight 2^0 — the es-independent anchor.
+
+    The smallest product bit of two P(n, es<=3) posits has weight
+    2^-(2*smax + 2*(sigw-1)); anchoring there keeps every digit index >= 0.
+    """
+    return 2 * _static_smax(nbits) + 2 * (_sigw(nbits) - 1)
+
+
+def _limb_count(nbits: int) -> int:
+    # span: [-(2 smax + 2 (w-1)), 2 smax + 1 + CARRY_GUARD] plus a sign bit
+    width = (2 * _static_smax(nbits) + 1 + CARRY_GUARD) + _static_bias(nbits) + 1
+    return -(-width // RADIX)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuireFmt:
+    """Static descriptor of the quire serving posit format P(nbits, es).
+
+    ``es`` is only the *default* exponent size for ops that take codes; the
+    limb layout is sized for ES_MAX so es may be a traced scalar at op level
+    (same contract as the codec — no retrace on es change).
+    """
+
+    nbits: int  # 8 or 16 — the widest operand format this quire serves
+    es: int = 2
+
+    def __post_init__(self):
+        if self.nbits not in (8, 16):
+            raise ValueError(f"quire nbits must be 8 or 16, got {self.nbits}")
+        if not (0 <= self.es <= ES_MAX):
+            raise ValueError(f"quire es must be in [0,{ES_MAX}], got {self.es}")
+
+    @classmethod
+    def for_posit(cls, fmt: PositFmt) -> "QuireFmt":
+        return cls(fmt.nbits, fmt.es)
+
+    @property
+    def n_limbs(self) -> int:
+        return _limb_count(self.nbits)
+
+    @property
+    def bias(self) -> int:
+        return _static_bias(self.nbits)
+
+    @property
+    def limbs_axis(self) -> int:
+        """Size of the trailing limb axis: digits + 1 NaR flag limb."""
+        return self.n_limbs + 1
+
+    @property
+    def storage_bits(self) -> int:
+        return self.n_limbs * RADIX
+
+
+# =====================================================================
+# digit generation: posit codes / products -> signed radix-2^16 digits
+# =====================================================================
+
+def _split_digits(p: jax.Array, offset: jax.Array):
+    """uint32 value ``p`` (< 2^29) placed at quire bit ``offset`` (int32 >= 0)
+    -> (limb index, three 16-bit digits occupying limbs idx, idx+1, idx+2)."""
+    idx = offset >> 4
+    s = (offset & 15).astype(_U32)
+    d0 = p & _u32(0xFFFF)
+    d1 = p >> _u32(16)
+    t0 = d0 << s                      # <= 0xFFFF << 15 < 2^31
+    t1 = (d1 << s) + (t0 >> _u32(16))
+    g0 = (t0 & _u32(0xFFFF)).astype(jnp.int32)
+    g1 = (t1 & _u32(0xFFFF)).astype(jnp.int32)
+    g2 = (t1 >> _u32(16)).astype(jnp.int32)
+    return idx, g0, g1, g2
+
+
+def _product_parts(fields_a, fields_b, nbits_a: int, nbits_b: int,
+                   bias: int, subtract: bool):
+    """Decoded operand fields -> (sgn, idx, g0, g1, g2, nar) for one product.
+
+    Layout-agnostic: the last-axis scatter (here) and the Pallas kernel's
+    VMEM-scratch scatter both consume this.
+    """
+    na, sa, ga, za, ra = fields_a
+    nb, sb, gb, zb, rb = fields_b
+    neg = na ^ nb
+    if subtract:
+        neg = ~neg
+    p = ga * gb  # < 2^28 (sig < 2^14 each)
+    offset = (sa + sb + jnp.int32(
+        bias - (_sigw(nbits_a) - 1) - (_sigw(nbits_b) - 1)))
+    nar = ra | rb
+    live = ~(za | zb | nar)
+    sgn = jnp.where(live,
+                    jnp.where(neg, jnp.int32(-1), jnp.int32(1)), jnp.int32(0))
+    idx, g0, g1, g2 = _split_digits(p, offset)
+    return sgn, idx, g0, g1, g2, nar
+
+
+def _posit_parts(fields, nbits: int, bias: int, subtract: bool):
+    """Decoded posit fields -> scatter parts for exact single-value injection."""
+    neg, s, sig, z, r = fields
+    if subtract:
+        neg = ~neg
+    offset = s + jnp.int32(bias - (_sigw(nbits) - 1))
+    live = ~(z | r)
+    sgn = jnp.where(live,
+                    jnp.where(neg, jnp.int32(-1), jnp.int32(1)), jnp.int32(0))
+    idx, g0, g1, g2 = _split_digits(sig, offset)
+    return sgn, idx, g0, g1, g2, r
+
+
+def _scatter(q: jax.Array, parts, n_limbs: int) -> jax.Array:
+    """Add signed digit contributions into last-axis limbs (lazy, no carries)."""
+    sgn, idx, g0, g1, g2, nar = parts
+    L = n_limbs
+    lids = lax.broadcasted_iota(jnp.int32, (1,) * max(q.ndim - 1, 0) + (L,),
+                                max(q.ndim - 1, 0))
+    b = lambda x: x[..., None]
+    contrib = (jnp.where(b(idx) == lids, b(g0), 0)
+               + jnp.where(b(idx) == lids - 1, b(g1), 0)
+               + jnp.where(b(idx) == lids - 2, b(g2), 0))
+    limbs = q[..., :L] + b(sgn) * contrib
+    flag = q[..., L:] | b(nar).astype(jnp.int32)
+    return jnp.concatenate([limbs, jnp.broadcast_to(flag, limbs.shape[:-1] + (1,))],
+                           axis=-1)
+
+
+# =====================================================================
+# public quire ops
+# =====================================================================
+
+def quire_zero(batch_shape, qfmt: QuireFmt) -> jax.Array:
+    """A cleared quire (PERCIVAL ``qclr``): all digits and the NaR flag zero."""
+    return jnp.zeros(tuple(batch_shape) + (qfmt.limbs_axis,), jnp.int32)
+
+
+def quire_accumulate(q: jax.Array, a: jax.Array, b: jax.Array, qfmt: QuireFmt,
+                     *, es_a: Optional[EsLike] = None,
+                     es_b: Optional[EsLike] = None,
+                     nbits_a: Optional[int] = None,
+                     nbits_b: Optional[int] = None,
+                     subtract: bool = False) -> jax.Array:
+    """q +/- = a * b, exactly. a/b are posit codes broadcastable to q's batch.
+
+    Digits are accumulated lazily: call ``quire_normalize`` at least every
+    ``MAX_DEFERRED`` accumulations (``quire_read`` normalizes internally).
+    Mixed precision is allowed (p8 operand x p16 operand into a p16 quire).
+    """
+    na_, nb_ = nbits_a or qfmt.nbits, nbits_b or qfmt.nbits
+    ea = _es_u32(qfmt.es if es_a is None else es_a)
+    eb = _es_u32(qfmt.es if es_b is None else es_b)
+    parts = _product_parts(_decode_fields(a, na_, ea), _decode_fields(b, nb_, eb),
+                           na_, nb_, qfmt.bias, subtract)
+    return _scatter(q, parts, qfmt.n_limbs)
+
+
+def quire_add_posit(q: jax.Array, codes: jax.Array, qfmt: QuireFmt, *,
+                    es: Optional[EsLike] = None, nbits: Optional[int] = None,
+                    subtract: bool = False) -> jax.Array:
+    """q +/- = value(codes), exactly (every posit value is a quire value)."""
+    n = nbits or qfmt.nbits
+    esl = _es_u32(qfmt.es if es is None else es)
+    parts = _posit_parts(_decode_fields(codes, n, esl), n, qfmt.bias, subtract)
+    return _scatter(q, parts, qfmt.n_limbs)
+
+
+def quire_from_posit(codes: jax.Array, qfmt: QuireFmt, *,
+                     es: Optional[EsLike] = None,
+                     nbits: Optional[int] = None) -> jax.Array:
+    """Exact posit -> quire conversion (NaR sets the flag limb)."""
+    return quire_add_posit(quire_zero(jnp.shape(codes), qfmt), codes, qfmt,
+                           es=es, nbits=nbits)
+
+
+def quire_negate(q: jax.Array, qfmt: QuireFmt) -> jax.Array:
+    """Exact negation (PERCIVAL ``qneg``): digit-wise negate, flag preserved."""
+    L = qfmt.n_limbs
+    return jnp.concatenate([-q[..., :L], q[..., L:]], axis=-1)
+
+
+def quire_normalize(q: jax.Array, qfmt: QuireFmt) -> jax.Array:
+    """Propagate lazy carries -> canonical digits in [0, 2^16), signed top limb.
+
+    Exact-value-preserving; also the required fix-up after integer ``psum``
+    of quires (digit-wise sums of canonical quires stay in int32 for up to
+    2^14 devices).
+    """
+    L = qfmt.n_limbs
+    c = jnp.zeros_like(q[..., 0])
+    outs = []
+    for i in range(L - 1):
+        t = q[..., i] + c
+        outs.append(t & 0xFFFF)
+        c = t >> RADIX  # arithmetic: exact floor-carry for negative t
+    outs.append(q[..., L - 1] + c)
+    outs.append(q[..., L])
+    return jnp.stack(outs, axis=-1)
+
+
+def quire_is_nar(q: jax.Array, qfmt: QuireFmt) -> jax.Array:
+    return q[..., qfmt.n_limbs] != 0
+
+
+def quire_read(q: jax.Array, qfmt: QuireFmt, *,
+               out_nbits: Optional[int] = None,
+               es_out: Optional[EsLike] = None) -> jax.Array:
+    """quire -> posit codes: the single terminal rounding (PERCIVAL ``qround``).
+
+    RNE against the exact accumulated value — guard and sticky are computed
+    from the full digit magnitude, so the result is bit-identical to rounding
+    the infinitely-precise sum. Exact zero -> 0; flagged -> NaR; magnitudes
+    beyond the posit range saturate to maxpos/minpos (never 0/NaR).
+    ``out_nbits``/``es_out`` let a p16-quire read out in any posit format.
+    """
+    L = qfmt.n_limbs
+    out_n = qfmt.nbits if out_nbits is None else out_nbits
+    oesl = _es_u32(qfmt.es if es_out is None else es_out)
+
+    q = quire_normalize(q, qfmt)
+    top = q[..., L - 1]
+    neg = top < 0
+    # conditional negate, then one more carry ripple -> nonneg canonical digits
+    mag = jnp.where(neg[..., None], -q[..., :L], q[..., :L])
+    c = jnp.zeros_like(top)
+    d = []
+    for i in range(L):
+        t = mag[..., i] + c
+        d.append((t & 0xFFFF).astype(_U32))
+        c = t >> RADIX
+
+    # MSB position over all digits (ascending loop: highest nonzero digit wins)
+    P = jnp.full(top.shape, -1, jnp.int32)
+    for i, di in enumerate(d):
+        h = _floor_log2_small(jnp.maximum(di, 1).astype(jnp.int32))
+        P = jnp.where(di > 0, jnp.int32(16 * i) + h, P)
+    i_top = P >> 4
+    r = (P & 15).astype(_U32)
+
+    # 48-bit window below the MSB (3 digits) + sticky of everything lower
+    zero_d = jnp.zeros_like(d[0])
+    D2, D1, D0 = zero_d, zero_d, zero_d
+    sticky = jnp.zeros(top.shape, bool)
+    for i, di in enumerate(d):
+        D2 = jnp.where(i_top == i, di, D2)
+        D1 = jnp.where(i_top == i + 1, di, D1)
+        D0 = jnp.where(i_top == i + 2, di, D0)
+        sticky = sticky | ((i_top > i + 2) & (di != 0))
+    hi = (D2 << _u32(16)) | D1              # MSB (hidden bit) at position 16+r
+    frac_la = (hi << (_u32(16) - r)) | (D0 >> r)
+    sticky = sticky | ((D0 & ((_u32(1) << r) - 1)) != 0)
+
+    scale = P - jnp.int32(qfmt.bias)
+    code = _encode_fields(neg, scale, frac_la, sticky, out_n, oesl)
+    code = jnp.where(P < 0, _u32(0), code)                       # exact zero
+    code = jnp.where(quire_is_nar(q, qfmt), _u32(1 << (out_n - 1)), code)
+    return code.astype(jnp.uint8 if out_n == 8 else jnp.uint16)
+
+
+# =====================================================================
+# quire dataflow: exact dot / GEMM (XLA path; Pallas kernel mirrors this)
+# =====================================================================
+
+def quire_matmul(a: jax.Array, b: jax.Array, fmt: PositFmt, *,
+                 es_a: Optional[EsLike] = None, es_b: Optional[EsLike] = None,
+                 nbits_a: Optional[int] = None, nbits_b: Optional[int] = None,
+                 out_nbits: Optional[int] = None,
+                 es_out: Optional[EsLike] = None,
+                 block_k: int = 256) -> jax.Array:
+    """Exact-accumulation GEMM: every a[i,k]*b[k,j] lands in a per-output
+    quire; one rounding at readout. a: (M, K), b: (K, N) posit codes ->
+    (M, N) posit codes. O(M*N*L) int32 state — the software analogue of
+    PERCIVAL's per-lane quire register, not an MXU path. ``fmt`` is the widest
+    operand format (it sizes the quire); ``nbits_a/nbits_b`` override per
+    operand for mixed-precision GEMMs.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    na_, nb_ = nbits_a or fmt.nbits, nbits_b or fmt.nbits
+    qf = QuireFmt(max(na_, nb_), fmt.es)
+    ea = _es_u32(fmt.es if es_a is None else es_a)
+    eb = _es_u32(fmt.es if es_b is None else es_b)
+    eo = ea if es_out is None else _es_u32(es_out)
+
+    bk = min(block_k, MAX_DEFERRED)
+    pad = (-K) % bk
+    if pad:  # zero codes contribute nothing to a quire
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    nb = (K + pad) // bk
+    a_blk = a.T.reshape(nb, bk, M)
+    b_blk = b.reshape(nb, bk, N)
+
+    def block(q, xs):
+        ab, bb = xs  # (bk, M), (bk, N)
+
+        def step(j, q):
+            ak = lax.dynamic_index_in_dim(ab, j, 0, keepdims=False)
+            bk_row = lax.dynamic_index_in_dim(bb, j, 0, keepdims=False)
+            return quire_accumulate(q, ak[:, None], bk_row[None, :], qf,
+                                    es_a=ea, es_b=eb, nbits_a=na_, nbits_b=nb_)
+
+        q = lax.fori_loop(0, bk, step, q)
+        return quire_normalize(q, qf), None
+
+    q0 = quire_zero((M, N), qf)
+    q, _ = lax.scan(block, q0, (a_blk, b_blk))
+    return quire_read(q, qf, out_nbits=out_nbits, es_out=eo)
+
+
+def quire_dot(a: jax.Array, b: jax.Array, fmt: PositFmt, *,
+              es: Optional[EsLike] = None, es_out: Optional[EsLike] = None,
+              block_k: int = 256) -> jax.Array:
+    """Exact dot product of two 1-D posit-code vectors -> one posit code."""
+    assert a.ndim == b.ndim == 1, (a.shape, b.shape)
+    out = quire_matmul(a[None, :], b[:, None], fmt, es_a=es, es_b=es,
+                       es_out=es_out, block_k=block_k)
+    return out[0, 0]

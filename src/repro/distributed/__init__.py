@@ -1,3 +1,3 @@
 from repro.distributed.collectives import (  # noqa: F401
-    compressed_psum, make_grad_sync,
+    compressed_psum, exact_psum, make_grad_sync, quire_psum_posit,
 )

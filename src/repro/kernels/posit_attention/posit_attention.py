@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 from repro.core.codec import posit_decode
 
 _NEG_INF = -1e30
@@ -135,7 +137,7 @@ def posit_decode_attention(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B * Hq, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

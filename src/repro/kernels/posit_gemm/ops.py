@@ -30,7 +30,15 @@ def gemm(
     interpret: bool | None = None,
     **block_kw,
 ) -> jax.Array:
-    """O = decode(A) @ decode(B) -> encode, formats per the pcsr operand slots."""
+    """O = decode(A) @ decode(B) -> encode, formats per the pcsr operand slots.
+
+    A pcsr with ``dataflow="quire"`` (or impl="quire") routes to the
+    exact-accumulation kernel package (posit_quire_gemm)."""
+    if impl == "quire" or (impl == "auto" and slots.dataflow == "quire"):
+        from repro.kernels.posit_quire_gemm.ops import quire_gemm
+
+        return quire_gemm(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
+                          impl="auto", interpret=interpret, **block_kw)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla"
     def _es(x, fmt):

@@ -1,0 +1,62 @@
+"""Jitted front door for the exact-accumulation (quire) posit GEMM.
+
+``impl``:
+  "pallas"     — the TPU kernel (interpret=True on CPU: same semantics)
+  "xla"        — scan-based path (repro.core.quire.quire_matmul); numerically
+                 identical contract (both are bit-exact vs the Fraction oracle)
+  "auto"       — pallas on TPU, xla elsewhere
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pcsr import OperandSlots
+from repro.core.types import PositFmt
+from repro.kernels.posit_quire_gemm.posit_quire_gemm import posit_quire_gemm
+from repro.kernels.posit_quire_gemm.ref import posit_quire_gemm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quire_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    slots: OperandSlots,
+    *,
+    es_a=None, es_b=None, es_out=None,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    **block_kw,
+) -> jax.Array:
+    """O = round_once(sum decode(A)*decode(B)) per the pcsr operand slots."""
+    for name, f in (("rs1", slots.rs1), ("rs2", slots.rs2), ("rd", slots.rd)):
+        if not isinstance(f, PositFmt):
+            raise ValueError(
+                f"quire dataflow requires posit {name}, got {f}: the quire "
+                "accumulates posit products exactly; float slots have no "
+                "quire representation")
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+
+    def _es(x, fmt):
+        return fmt.es if x is None else x
+
+    es = jnp.asarray(
+        [_es(es_a, slots.rs1), _es(es_b, slots.rs2), _es(es_out, slots.rd)],
+        dtype=jnp.int32,
+    )
+    if impl == "pallas":
+        if interpret is None:
+            interpret = not _on_tpu()
+        return posit_quire_gemm(
+            a, b, es,
+            a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+            interpret=interpret, **block_kw,
+        )
+    if impl == "xla":
+        return posit_quire_gemm_ref(
+            a, b, es, a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd)
+    raise ValueError(f"unknown impl {impl!r}")

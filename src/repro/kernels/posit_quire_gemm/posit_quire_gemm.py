@@ -1,0 +1,157 @@
+"""Exact-accumulation posit GEMM Pallas kernel — the quire dataflow, tiled.
+
+Dataflow per (i, j, k) grid step (PERCIVAL's quire brought to the TPU memory
+hierarchy):
+
+    HBM --BlockSpec--> VMEM:  A tile (bm x bk)  posit codes
+                              B tile (bk x bn)  posit codes
+    VMEM:   [field decoder]   posit -> (sign, scale, significand) int fields
+    VPU:    per-k outer product -> signed radix-2^16 digits, lazily
+            accumulated into the QUIRE SCRATCH (bm x bn x L+1 int32) which
+            persists in VMEM across the whole k-grid (revisited-output pattern)
+    VMEM:   [quire readout]   single RNE rounding -> posit codes   (last k)
+    VMEM --BlockSpec--> HBM:  O tile (bm x bn)
+
+Unlike the fused codec GEMM this path never touches the MXU: exactness is the
+product, not FLOPs — every a[i,k]*b[k,j] lands in the output element's quire
+with no intermediate rounding, matching a Fraction-arithmetic oracle
+bit-for-bit. Carries are propagated once per k tile, well inside the
+``MAX_DEFERRED`` lazy-carry budget (requires block_k <= MAX_DEFERRED).
+
+``es`` for (rs1, rs2, rd) arrives as a scalar-prefetch vector: the quire's
+binary-point anchor is es-independent (DESIGN.md §7), so one compiled kernel
+serves every es — and even mixed-es operand pairs.
+
+Note on layout: the quire scratch keeps limbs on the *trailing* axis so the
+kernel shares digit/readout code with ``repro.core.quire`` verbatim. A
+TPU-lane-optimal variant would transpose limbs to the leading axis; interpret
+mode and correctness (the contract this kernel is tested against) are
+layout-independent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+from repro.core.codec import _decode_fields, _es_u32
+from repro.core.quire import (
+    MAX_DEFERRED, QuireFmt, _product_parts, _scatter, quire_normalize,
+    quire_read,
+)
+from repro.core.types import PositFmt
+
+
+def _quire_gemm_kernel(
+    es_ref,  # scalar prefetch: (3,) int32 = es for rs1, rs2, rd
+    a_ref, b_ref, o_ref, q_ref,
+    *, a_fmt: PositFmt, b_fmt: PositFmt, out_fmt: PositFmt,
+    qfmt: QuireFmt, n_k: int, block_k: int,
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+    ea, eb = _es_u32(es_ref[0]), _es_u32(es_ref[1])
+    na, sa, ga, za, ra = _decode_fields(a_ref[...], a_fmt.nbits, ea)
+    nb, sb, gb, zb, rb = _decode_fields(b_ref[...], b_fmt.nbits, eb)
+
+    def step(kk, q):
+        col = lambda x: lax.dynamic_slice_in_dim(x, kk, 1, axis=1)  # (bm, 1)
+        row = lambda x: lax.dynamic_slice_in_dim(x, kk, 1, axis=0)  # (1, bn)
+        parts = _product_parts(
+            (col(na), col(sa), col(ga), col(za), col(ra)),
+            (row(nb), row(sb), row(gb), row(zb), row(rb)),
+            a_fmt.nbits, b_fmt.nbits, qfmt.bias, False)
+        return _scatter(q, parts, qfmt.n_limbs)
+
+    q = lax.fori_loop(0, block_k, step, q_ref[...])
+    q_ref[...] = quire_normalize(q, qfmt)  # carry budget: one tile of products
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _emit():
+        o_ref[...] = quire_read(q_ref[...], qfmt,
+                                out_nbits=out_fmt.nbits, es_out=es_ref[2])
+
+
+def _pad_to(x: jax.Array, mults: tuple) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)  # 0-codes contribute nothing to a quire
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "a_fmt", "b_fmt", "out_fmt", "block_m", "block_n", "block_k",
+        "interpret",
+    ),
+)
+def posit_quire_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    es: jax.Array,  # (3,) int32: es for a, b, out
+    *,
+    a_fmt: PositFmt,
+    b_fmt: PositFmt,
+    out_fmt: PositFmt,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """O = round_once(sum_k decode(A)[i,k] * decode(B)[k,j]), all-posit slots.
+
+    A: (M, K), B: (K, N) posit codes -> (M, N) posit codes in ``out_fmt``.
+    The (bm, bn) quire limbs live in VMEM scratch across the k grid.
+    """
+    for f in (a_fmt, b_fmt, out_fmt):
+        if not isinstance(f, PositFmt):
+            raise ValueError(f"quire GEMM requires posit slots, got {f}")
+    if block_k > MAX_DEFERRED:
+        raise ValueError(f"block_k {block_k} exceeds lazy-carry budget "
+                         f"{MAX_DEFERRED}")
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    qfmt = QuireFmt(max(a_fmt.nbits, b_fmt.nbits))
+
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    a_p = _pad_to(a, (bm, bk))
+    b_p = _pad_to(b, (bk, bn))
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    grid = (Mp // bm, Np // bn, Kp // bk)
+
+    out_dtype = jnp.uint8 if out_fmt.nbits == 8 else jnp.uint16
+    kernel = functools.partial(
+        _quire_gemm_kernel,
+        a_fmt=a_fmt, b_fmt=b_fmt, out_fmt=out_fmt,
+        qfmt=qfmt, n_k=grid[2], block_k=bk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn, qfmt.limbs_axis), jnp.int32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(es, jnp.int32), a_p, b_p)
+    return out[:M, :N]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the quire GEMM kernel (untiled scan, same exact math).
+
+Both this and the kernel reduce to ``repro.core.quire`` digit arithmetic, so
+they must agree bit-for-bit regardless of tiling — and both are validated
+against the Fraction-arithmetic exact-sum oracle in tests/test_quire.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quire import quire_matmul
+from repro.core.types import PositFmt
+
+
+def posit_quire_gemm_ref(
+    a: jax.Array, b: jax.Array, es,  # (3,) int32
+    *, a_fmt: PositFmt, b_fmt: PositFmt, out_fmt: PositFmt,
+) -> jax.Array:
+    es = jnp.asarray(es, jnp.int32)
+    wide = a_fmt if a_fmt.nbits >= b_fmt.nbits else b_fmt
+    return quire_matmul(a, b, wide, es_a=es[0], es_b=es[1],
+                        nbits_a=a_fmt.nbits, nbits_b=b_fmt.nbits,
+                        out_nbits=out_fmt.nbits, es_out=es[2])

@@ -126,13 +126,20 @@ def make_train_step(model: Model, policy: TransPolicy, opt_cfg: AdamWConfig,
         def per_pod(params, opt_state, batch, step):
             # inside: manual over "pod" (per-pod shard of the batch),
             # auto/GSPMD over "data"/"model".
-            from repro.distributed.collectives import compressed_allreduce
+            from repro.distributed.collectives import (compressed_allreduce,
+                                                       exact_psum)
 
             loss, metrics, grads = loss_and_grads(params, batch)
 
             def sync_leaf(g):
                 # two-hop posit-compressed all-reduce on the pod links:
-                # pow2 prescale + dynamic es + FTZ (see collectives.py)
+                # pow2 prescale + dynamic es + FTZ (see collectives.py).
+                # policy.exact_collectives upgrades the hop to the
+                # quire-domain exact reduction (DESIGN.md §7).
+                if policy.exact_collectives:
+                    return exact_psum(
+                        g.astype(jnp.float32) / n_pods, grad_fmt, "pod"
+                    ).astype(g.dtype)
                 return compressed_allreduce(
                     g.astype(jnp.float32) / n_pods, grad_fmt, "pod"
                 ).astype(g.dtype)

@@ -7,9 +7,18 @@ inter-chunk state carry over a *static python loop* so every FLOP is visible
 in the lowered HLO — keeps the roofline honest, unlike a lax.scan while-loop),
 and as a single elementwise state update for decode.
 
-Recurrent state stays f32 regardless of the posit policy (DESIGN.md §6: no
-quire in this design, so re-rounding the carried state every step would
-accumulate error; weights/activations still follow the policy).
+Recurrent-state precision (DESIGN.md §7): by default the carried state h is
+f32 — naively re-rounding it to a posit every step would compound error. With
+``policy.state`` set to a posit format, the state is instead carried at posit
+precision through a QUIRE: each step's update
+    h' = round_once( decay (x) h  +  dt * (B ⊗ x) )
+accumulates the decay*state product and the input injection *exactly* in a
+Kulisch accumulator and rounds ONCE — the update error of a true
+posit-state recurrence with hardware quire support (PERCIVAL), not the
+doubled mul-round+add-round of a quire-free PAU. The training (chunked) path
+applies the same carry between chunks via a straight-through estimator:
+forward values are quire-exact, gradients flow through the f32 recurrence
+(the quire is integer arithmetic and has no derivative).
 """
 from __future__ import annotations
 
@@ -18,9 +27,46 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.codec import posit_decode, posit_encode
 from repro.core.pcsr import TransPolicy
+from repro.core.quire import (
+    QuireFmt, quire_accumulate, quire_add_posit, quire_read, quire_zero,
+)
 from repro.models.layers import apply_linear, init_linear
 from repro.models.unroll import scan_or_unroll
+
+
+def _quire_state_update(h: jax.Array, decay: jax.Array, inject: jax.Array,
+                        policy: TransPolicy) -> jax.Array:
+    """One recurrent carry h' = decay*h + inject at the policy's state format.
+
+    policy.state=None -> plain f32 update. Otherwise both products land in a
+    per-element quire (decay and h encoded to the state format once, the f32
+    ``inject`` term encoded once) and the new state is a single rounding of
+    the exact sum. Wrapped in a straight-through estimator so the chunked
+    training path stays differentiable: forward is the quire value, backward
+    is the f32 recurrence.
+
+    h: (..., P, N); decay: broadcastable against h's leading axes (expanded
+    with trailing singletons); inject: same shape as h.
+    """
+    decay_b = decay[..., None, None]
+    h_f32 = h * decay_b + inject
+    fmt = policy.state
+    if fmt is None:
+        return h_f32
+    qf = QuireFmt.for_posit(fmt)
+    h_c = posit_encode(h, fmt.nbits, fmt.es)
+    d_c = posit_encode(decay_b, fmt.nbits, fmt.es)  # broadcasts in the quire
+    u_c = posit_encode(inject, fmt.nbits, fmt.es)
+    q = quire_zero(h.shape, qf)
+    q = quire_accumulate(q, d_c, h_c, qf)
+    q = quire_add_posit(q, u_c, qf)
+    h_q = posit_decode(quire_read(q, qf), fmt.nbits, fmt.es)
+    # NaR (can only arrive via non-finite f32 inputs) falls back to the f32
+    # path rather than poisoning the whole recurrence with NaN.
+    h_q = jnp.where(jnp.isnan(h_q), h_f32, h_q)
+    return h_f32 + jax.lax.stop_gradient(h_q - h_f32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,9 +181,11 @@ def apply_ssm(p: dict, cfg: SSMCfg, x: jax.Array, policy: TransPolicy) -> jax.Ar
         # inter-chunk: contribution of carried state
         y_inter = jnp.einsum("bsn,bhpn,bsh->bshp", cc, h, jnp.exp(segc))
         # state update: h' = exp(total) h + sum_t exp(total - seg_t) dt_t B_t x_t
+        # (quire-carried at posit precision when policy.state is set)
         carry_w = jnp.exp(tot[:, None, :] - segc) * dtk   # (B, L, nh)
-        h = h * jnp.exp(tot)[:, :, None, None] + jnp.einsum(
-            "btn,bthp,bth->bhpn", bc, xc, carry_w)
+        h = _quire_state_update(
+            h, jnp.exp(tot),
+            jnp.einsum("btn,bthp,bth->bhpn", bc, xc, carry_w), policy)
         return h, y_intra + y_inter
 
     h0 = jnp.zeros((B, nh, hp, N), jnp.float32)
@@ -186,8 +234,8 @@ def decode_ssm_step(p: dict, cfg: SSMCfg, x_t: jax.Array, state: dict,
         + p["dt_bias"])  # (B, nh)
     A = -jnp.exp(p["A_log"])
     decay = jnp.exp(dtt * A)                                    # (B, nh)
-    h = state["h"] * decay[:, :, None, None] + jnp.einsum(
-        "bn,bhp,bh->bhpn", Bt, xt, dtt)
+    h = _quire_state_update(
+        state["h"], decay, jnp.einsum("bn,bhp,bh->bhpn", Bt, xt, dtt), policy)
     y = jnp.einsum("bhpn,bn->bhp", h, Ct) + xt * p["D"][None, :, None]
     y = _gated_rmsnorm(y.reshape(B, 1, di), z, p["norm_g"])
     out = apply_linear(p["out_proj"], y.astype(x_t.dtype), policy)

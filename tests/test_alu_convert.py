@@ -3,7 +3,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional (declared in pyproject [test] extras): collection of
+# this module must never hard-error without it — only the property test skips.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    given = settings = st = None
 
 from repro.core import alu, convert, ref_codec
 from repro.core.codec import posit_decode, posit_encode
@@ -59,12 +65,16 @@ def test_alu_edge_cases():
         assert (got == 0).all()
 
 
-@settings(max_examples=150, deadline=None)
-@given(st.integers(0, 255), st.integers(0, 255), st.sampled_from([0, 1, 2]))
-def test_alu_add_commutative(a, b, es):
-    r1 = int(np.asarray(alu.posit_add(jnp.uint8(a), jnp.uint8(b), 8, es)))
-    r2 = int(np.asarray(alu.posit_add(jnp.uint8(b), jnp.uint8(a), 8, es)))
-    assert r1 == r2
+if st is not None:
+    @settings(max_examples=150, deadline=None)
+    @given(st.integers(0, 255), st.integers(0, 255), st.sampled_from([0, 1, 2]))
+    def test_alu_add_commutative(a, b, es):
+        r1 = int(np.asarray(alu.posit_add(jnp.uint8(a), jnp.uint8(b), 8, es)))
+        r2 = int(np.asarray(alu.posit_add(jnp.uint8(b), jnp.uint8(a), 8, es)))
+        assert r1 == r2
+else:
+    def test_alu_add_commutative():
+        pytest.importorskip("hypothesis")
 
 
 # ------------------------------------------------------------------- fcvt -----

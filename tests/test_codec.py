@@ -5,7 +5,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is optional (pyproject [test] extras): the module must collect
+# without it — the property tests at the bottom skip instead.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    given = settings = st = None
 
 from repro.core import codec, ref_codec
 from repro.core.types import PositFmt
@@ -155,87 +160,91 @@ def test_es_out_of_range_clamped():
 
 
 # ----------------------------------------------------------- hypothesis props
-@settings(max_examples=200, deadline=None)
-@given(
-    st.integers(0, 65535), st.integers(0, 65535),
-    st.sampled_from(ALL_ES),
-)
-def test_monotonicity_code_order_is_value_order(ca, cb, es):
-    """Signed two's-complement code order == numeric order (posit superpower)."""
-    n = 16
-    nar = 1 << (n - 1)
-    if ca == nar or cb == nar:
-        return
-    va = ref_codec.ref_decode(ca, n, es)
-    vb = ref_codec.ref_decode(cb, n, es)
-    sa = ca - (1 << n) if ca >= nar else ca  # signed view
-    sb = cb - (1 << n) if cb >= nar else cb
-    assert (sa < sb) == (va < vb)
+if st is not None:
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.integers(0, 65535), st.integers(0, 65535),
+        st.sampled_from(ALL_ES),
+    )
+    def test_monotonicity_code_order_is_value_order(ca, cb, es):
+        """Signed two's-complement code order == numeric order (posit superpower)."""
+        n = 16
+        nar = 1 << (n - 1)
+        if ca == nar or cb == nar:
+            return
+        va = ref_codec.ref_decode(ca, n, es)
+        vb = ref_codec.ref_decode(cb, n, es)
+        sa = ca - (1 << n) if ca >= nar else ca  # signed view
+        sb = cb - (1 << n) if cb >= nar else cb
+        assert (sa < sb) == (va < vb)
 
 
-@settings(max_examples=200, deadline=None)
-@given(st.integers(0, 255), st.sampled_from(ALL_ES))
-def test_negation_symmetry(code, es):
-    """decode(twos_complement(c)) == -decode(c)."""
-    n = 8
-    if code == (1 << (n - 1)):
-        return
-    v = ref_codec.ref_decode(code, n, es)
-    nc = ((1 << n) - code) & ((1 << n) - 1)
-    assert ref_codec.ref_decode(nc, n, es) == -v
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(0, 255), st.sampled_from(ALL_ES))
+    def test_negation_symmetry(code, es):
+        """decode(twos_complement(c)) == -decode(c)."""
+        n = 8
+        if code == (1 << (n - 1)):
+            return
+        v = ref_codec.ref_decode(code, n, es)
+        nc = ((1 << n) - code) & ((1 << n) - 1)
+        assert ref_codec.ref_decode(nc, n, es) == -v
 
 
-@settings(max_examples=300, deadline=None)
-@given(
-    st.floats(width=32, allow_nan=False, allow_infinity=False),
-    st.sampled_from([(8, 0), (8, 2), (16, 1), (16, 3)]),
-)
-def test_encode_matches_oracle_hypothesis(x, nes):
-    n, es = nes
-    got = int(np.asarray(codec.posit_encode(jnp.float32(x), n, es)))
-    want = ref_codec.ref_encode(float(np.float32(x)), n, es)
-    assert got == want, (x, got, want)
+    @settings(max_examples=300, deadline=None)
+    @given(
+        st.floats(width=32, allow_nan=False, allow_infinity=False),
+        st.sampled_from([(8, 0), (8, 2), (16, 1), (16, 3)]),
+    )
+    def test_encode_matches_oracle_hypothesis(x, nes):
+        n, es = nes
+        got = int(np.asarray(codec.posit_encode(jnp.float32(x), n, es)))
+        want = ref_codec.ref_encode(float(np.float32(x)), n, es)
+        assert got == want, (x, got, want)
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    st.floats(-1e6, 1e6, width=32, allow_nan=False),
-    st.sampled_from([(8, 1), (16, 2)]),
-)
-def test_quantize_idempotent(x, nes):
-    n, es = nes
-    fmt = PositFmt(n, es)
-    q1 = codec.quantize(jnp.float32(x), fmt)
-    q2 = codec.quantize(q1, fmt)
-    assert (np.asarray(q1) == np.asarray(q2)) or (np.isnan(q1) and np.isnan(q2))
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.floats(-1e6, 1e6, width=32, allow_nan=False),
+        st.sampled_from([(8, 1), (16, 2)]),
+    )
+    def test_quantize_idempotent(x, nes):
+        n, es = nes
+        fmt = PositFmt(n, es)
+        q1 = codec.quantize(jnp.float32(x), fmt)
+        q2 = codec.quantize(q1, fmt)
+        assert (np.asarray(q1) == np.asarray(q2)) or (np.isnan(q1) and np.isnan(q2))
 
 
-@settings(max_examples=150, deadline=None)
-@given(st.floats(-1e4, 1e4, width=32, allow_nan=False), st.sampled_from(ALL_ES))
-def test_rounding_is_nearest(x, es):
-    """|x - q(x)| must be <= the distance to both posit neighbours of q(x).
+    @settings(max_examples=150, deadline=None)
+    @given(st.floats(-1e4, 1e4, width=32, allow_nan=False), st.sampled_from(ALL_ES))
+    def test_rounding_is_nearest(x, es):
+        """|x - q(x)| must be <= the distance to both posit neighbours of q(x).
 
-    Holds only inside the non-saturating range: below minpos the standard's
-    never-round-to-zero rule deliberately picks minpos over the nearer 0
-    (checked separately in test_saturation_semantics).
-    """
-    n = 16
-    x = float(np.float32(x))
-    fmt = PositFmt(n, es)
-    if x == 0 or not (fmt.minpos <= abs(x) <= fmt.maxpos):
-        return
-    code = int(np.asarray(codec.posit_encode(jnp.float32(x), n, es)))
-    if code == (1 << (n - 1)):
-        return
-    v = ref_codec.ref_decode(code, n, es)
-    # signed neighbours in code space
-    s = code - (1 << n) if code >= (1 << (n - 1)) else code
-    for nb in (s - 1, s + 1):
-        nbc = nb & ((1 << n) - 1)
-        if nbc == (1 << (n - 1)):
-            continue
-        w = ref_codec.ref_decode(nbc, n, es)
-        from fractions import Fraction
-        xf = Fraction(x)
-        # allow ties (RNE picks one of two equidistant)
-        assert abs(xf - v) <= abs(xf - w), (x, es, code, float(v), float(w))
+        Holds only inside the non-saturating range: below minpos the standard's
+        never-round-to-zero rule deliberately picks minpos over the nearer 0
+        (checked separately in test_saturation_semantics).
+        """
+        n = 16
+        x = float(np.float32(x))
+        fmt = PositFmt(n, es)
+        if x == 0 or not (fmt.minpos <= abs(x) <= fmt.maxpos):
+            return
+        code = int(np.asarray(codec.posit_encode(jnp.float32(x), n, es)))
+        if code == (1 << (n - 1)):
+            return
+        v = ref_codec.ref_decode(code, n, es)
+        # signed neighbours in code space
+        s = code - (1 << n) if code >= (1 << (n - 1)) else code
+        for nb in (s - 1, s + 1):
+            nbc = nb & ((1 << n) - 1)
+            if nbc == (1 << (n - 1)):
+                continue
+            w = ref_codec.ref_decode(nbc, n, es)
+            from fractions import Fraction
+            xf = Fraction(x)
+            # allow ties (RNE picks one of two equidistant)
+            assert abs(xf - v) <= abs(xf - w), (x, es, code, float(v), float(w))
+else:
+    def test_hypothesis_props():
+        pytest.importorskip("hypothesis")

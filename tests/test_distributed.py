@@ -21,8 +21,18 @@ import json
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.types import P8_0, P16_1
+from repro.core.codec import posit_encode
+from repro.core import ref_codec
 from repro.distributed.collectives import (compressed_allreduce,
-                                           compressed_psum)
+                                           compressed_psum, quire_psum_posit)
+
+# jax.shard_map + check_vma are the current API; fall back to the
+# experimental name + check_rep on older jax
+if hasattr(jax, "shard_map"):
+    _sm, _sm_kw = jax.shard_map, {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _sm
+    _sm_kw = {"check_rep": False}
 
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
 rng = np.random.default_rng(0)
@@ -31,30 +41,57 @@ x = jnp.asarray(rng.normal(0, 1e-3, (8, M)).astype(np.float32))
 out = {}
 
 # two-hop compressed allreduce == true sum (within p16 tolerance)
-f = jax.jit(jax.shard_map(
+f = jax.jit(_sm(
     lambda v: compressed_allreduce(v, P16_1, "pod"),
     mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
-    check_vma=False))
+    **_sm_kw))
 got = np.asarray(f(x), np.float64)
 true = np.tile(x.reshape(2, 4, M).sum(0), (2, 1, 1)).reshape(8, M)
 out["allreduce_rel"] = float(np.abs(got - true).mean() / np.abs(true).mean())
 
 # compressed_psum f32 bypass is exact
-g = jax.jit(jax.shard_map(
+g = jax.jit(_sm(
     lambda v: compressed_psum(v, None)[0],
     mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
-    check_vma=False))
+    **_sm_kw))
 got2 = np.asarray(g(x), np.float64)
 true2 = np.tile(x.astype(np.float64).sum(0), (8, 1))
 out["bypass_exact"] = bool(np.allclose(got2, true2, rtol=1e-6))
 
 # error feedback: residual returned and nonzero for p8
-h = jax.jit(jax.shard_map(
+h = jax.jit(_sm(
     lambda v, r: compressed_psum(v, P8_0, residual=r)[1],
     mesh=mesh, in_specs=(P(("pod", "data")),) * 2,
-    out_specs=P(("pod", "data")), check_vma=False))
+    out_specs=P(("pod", "data")), **_sm_kw))
 res = np.asarray(h(x, jnp.zeros_like(x)))
 out["residual_nonzero"] = bool(np.abs(res).max() > 0)
+
+# quire-domain psum of posit codes is EXACT: bit-identical to the Fraction
+# sum of the per-device values with one terminal rounding
+Mq = 256
+xq = jnp.asarray(rng.normal(0, 1.0, (8, Mq)).astype(np.float32))
+codes = posit_encode(xq, 16, 1)
+qf = jax.jit(_sm(
+    lambda c: quire_psum_posit(c, P16_1, "pod"),
+    mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
+    **_sm_kw))
+got_q = np.asarray(qf(codes)).reshape(2, 4 * Mq)
+host = np.asarray(codes).reshape(2, 4 * Mq)
+want_q = np.empty(4 * Mq, np.uint16)
+for j in range(4 * Mq):
+    acc = sum(ref_codec.ref_decode(int(host[d, j]), 16, 1) for d in range(2))
+    want_q[j] = ref_codec.ref_encode_exact(acc, 16, 1)
+out["quire_psum_exact"] = bool((got_q == want_q[None, :]).all())
+
+# exact compressed_psum: inter hop in the quire domain, still accurate
+pe = jax.jit(_sm(
+    lambda v: compressed_psum(v, P16_1, exact=True)[0],
+    mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
+    **_sm_kw))
+got_e = np.asarray(pe(x), np.float64)
+true_e = np.tile(x.astype(np.float64).sum(0), (8, 1))
+rel = np.abs(got_e - true_e).mean() / np.abs(true_e).mean()
+out["exact_psum_rel"] = float(rel)
 print("RESULT " + json.dumps(out))
 """
 
@@ -82,6 +119,17 @@ def test_psum_f32_bypass_exact(child_results):
 
 def test_error_feedback_residual(child_results):
     assert child_results["residual_nonzero"]
+
+
+def test_quire_psum_bitexact(child_results):
+    """Quire-domain psum == Fraction-exact sum + one rounding, bit-for-bit."""
+    assert child_results["quire_psum_exact"]
+
+
+def test_exact_compressed_psum_accurate(child_results):
+    """exact=True inter hop: only the per-device encode rounds, so the error
+    is bounded by the p16 encode alone (comfortably under the two-hop path)."""
+    assert child_results["exact_psum_rel"] < 5e-4
 
 
 # ------------------------------------------------------- single-process -------

@@ -1,0 +1,316 @@
+"""Quire subsystem tests: the exact-accumulation contract.
+
+The load-bearing property: ``quire_read(sum_i qma(a_i, b_i))`` must be
+bit-identical to summing the decoded values in *infinite precision* (Fraction
+arithmetic via ref_codec) and encoding once — across formats, es values,
+NaR, cancellation, and maxpos-overflow saturation. The Pallas kernel, the
+scan-based quire_matmul, and the dot.py dataflow must all meet the same bits.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from fractions import Fraction
+
+from repro.core import alu, ref_codec
+from repro.core.codec import posit_encode
+from repro.core.pcsr import OperandSlots
+from repro.core.quire import (
+    QuireFmt, quire_accumulate, quire_add_posit, quire_from_posit,
+    quire_matmul, quire_read, quire_zero,
+)
+from repro.core.types import P8_0, P8_2, P16_1, P16_2, F32, PositFmt
+from repro.core.dot import posit_dot
+from repro.kernels.posit_quire_gemm.posit_quire_gemm import posit_quire_gemm
+from repro.kernels.posit_quire_gemm.ref import posit_quire_gemm_ref
+
+
+def _exact_dot_code(ac, bc, n, es, n_out=None, es_out=None,
+                    nb_b=None, es_b=None):
+    """Fraction-arithmetic oracle: exact sum of products, single rounding."""
+    nb_b = n if nb_b is None else nb_b
+    es_b = es if es_b is None else es_b
+    no = n if n_out is None else n_out
+    eo = es if es_out is None else es_out
+    acc, nar = Fraction(0), False
+    for x, y in zip(ac, bc):
+        va = ref_codec.ref_decode(int(x), n, es)
+        vb = ref_codec.ref_decode(int(y), nb_b, es_b)
+        if va is None or vb is None:
+            nar = True
+        else:
+            acc += va * vb
+    return (1 << (no - 1)) if nar else ref_codec.ref_encode_exact(acc, no, eo)
+
+
+def _rand_codes(rng, nbits, shape):
+    dt = np.uint8 if nbits == 8 else np.uint16
+    return rng.integers(0, 1 << nbits, shape).astype(dt)
+
+
+# ---------------------------------------------------- exact-sum property ------
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_quire_dot_exact_vs_fraction_oracle_p8(es):
+    """Random p8 codes (NaR included at natural frequency): bit-exact."""
+    rng = np.random.default_rng(es)
+    M, K = 16, 40
+    a = _rand_codes(rng, 8, (M, K))
+    b = _rand_codes(rng, 8, (K, 1))
+    fmt = PositFmt(8, es)
+    got = np.asarray(quire_matmul(jnp.asarray(a), jnp.asarray(b), fmt,
+                                  block_k=16))
+    want = np.array([[_exact_dot_code(a[i], b[:, 0], 8, es)]
+                     for i in range(M)], dtype=np.uint8)
+    assert (got == want).all(), np.argwhere(got != want)[:5]
+
+
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_quire_dot_exact_vs_fraction_oracle_p16(es):
+    rng = np.random.default_rng(10 + es)
+    M, K = 6, 24
+    a = _rand_codes(rng, 16, (M, K))
+    b = _rand_codes(rng, 16, (K, 1))
+    fmt = PositFmt(16, es)
+    got = np.asarray(quire_matmul(jnp.asarray(a), jnp.asarray(b), fmt,
+                                  block_k=8))
+    want = np.array([[_exact_dot_code(a[i], b[:, 0], 16, es)]
+                     for i in range(M)], dtype=np.uint16)
+    assert (got == want).all(), np.argwhere(got != want)[:5]
+
+
+def test_quire_value_scale_distribution():
+    """Same property on value-like data (encodes of normals, no NaR)."""
+    rng = np.random.default_rng(2)
+    for n, es in [(8, 1), (16, 2)]:
+        K = 64
+        av = rng.normal(0, 3, K).astype(np.float32)
+        bv = rng.normal(0, 3, K).astype(np.float32)
+        a = np.asarray(posit_encode(jnp.asarray(av), n, es))
+        b = np.asarray(posit_encode(jnp.asarray(bv), n, es))
+        got = int(np.asarray(quire_matmul(
+            jnp.asarray(a[None, :]), jnp.asarray(b[:, None]),
+            PositFmt(n, es)))[0, 0])
+        assert got == _exact_dot_code(a, b, n, es)
+
+
+# ------------------------------------------------------------ NaR / edges -----
+def test_quire_nar_propagates():
+    qf = QuireFmt(16, 1)
+    nar = jnp.uint16(1 << 15)
+    one = posit_encode(jnp.float32(1.0), 16, 1)
+    q = quire_zero((), qf)
+    q = quire_accumulate(q, one, one, qf)
+    q = quire_accumulate(q, nar, one, qf)   # NaR * x poisons
+    q = quire_accumulate(q, one, one, qf)   # ...and stays poisoned
+    assert int(np.asarray(quire_read(q, qf))) == 1 << 15
+
+
+@pytest.mark.parametrize("n,es", [(8, 0), (16, 2)])
+def test_quire_overflow_saturates_to_maxpos(n, es):
+    """K * maxpos^2 is far beyond maxpos: readout saturates, never wraps/NaRs."""
+    dt = np.uint8 if n == 8 else np.uint16
+    maxpos = dt((1 << (n - 1)) - 1)
+    K = 200
+    a = jnp.full((1, K), maxpos, dtype=dt)
+    b = jnp.full((K, 1), maxpos, dtype=dt)
+    fmt = PositFmt(n, es)
+    assert int(np.asarray(quire_matmul(a, b, fmt))[0, 0]) == int(maxpos)
+    neg = jnp.full((K, 1), dt((1 << n) - int(maxpos)), dtype=dt)
+    assert int(np.asarray(quire_matmul(a, neg, fmt))[0, 0]) \
+        == (1 << n) - int(maxpos)
+
+
+def test_quire_catastrophic_cancellation_is_exact():
+    """maxpos^2 - maxpos^2 + minpos^2 == minpos^2 exactly (saturating up to
+    minpos at readout) — the case every rounded accumulator loses."""
+    qf = QuireFmt(16, 2)
+    mx, mn = jnp.uint16(0x7FFF), jnp.uint16(1)
+    q = quire_zero((), qf)
+    q = quire_accumulate(q, mx, mx, qf)
+    q = quire_accumulate(q, mx, mx, qf, subtract=True)
+    assert int(np.asarray(quire_read(q, qf))) == 0  # exact zero, not noise
+    q = quire_accumulate(q, mn, mn, qf)
+    assert int(np.asarray(quire_read(q, qf))) == 1  # minpos survives
+
+
+# ----------------------------------------------------------- fused alu ops ----
+def test_qma_single_product_equals_ref_mul():
+    """One qma + qround == exact-product single rounding == ref_mul."""
+    rng = np.random.default_rng(3)
+    a = _rand_codes(rng, 8, 300)
+    b = _rand_codes(rng, 8, 300)
+    q = alu.qclr((300,), 8, 1)
+    q = alu.qma(q, jnp.asarray(a), jnp.asarray(b), 8, 1)
+    got = np.asarray(alu.qround(q, 8, 1))
+    want = np.array([ref_codec.ref_mul(int(x), int(y), 8, 1)
+                     for x, y in zip(a, b)])
+    assert (got == want).all()
+
+
+def test_qms_and_qneg_invert_qma():
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(_rand_codes(rng, 16, 64))
+    b = jnp.asarray(_rand_codes(rng, 16, 64))
+    nar_in = (np.asarray(a) == 1 << 15) | (np.asarray(b) == 1 << 15)
+    q = alu.qclr((64,), 16, 2)
+    q = alu.qms(alu.qma(q, a, b, 16, 2), a, b, 16, 2)
+    got = np.asarray(alu.qround(q, 16, 2))
+    assert (got == np.where(nar_in, 1 << 15, 0)).all()
+    q2 = alu.qma(alu.qclr((64,), 16, 2), a, b, 16, 2)
+    q3 = alu.qneg(alu.qneg(q2, 16), 16)
+    assert (np.asarray(alu.qround(q3, 16, 2))
+            == np.asarray(alu.qround(q2, 16, 2))).all()
+
+
+def test_quire_from_posit_roundtrips():
+    """inject + read is the identity on every p8 code (incl. 0 and NaR)."""
+    codes = jnp.asarray(np.arange(256, dtype=np.uint8))
+    for es in (0, 3):
+        qf = QuireFmt(8, es)
+        back = np.asarray(quire_read(quire_from_posit(codes, qf), qf))
+        assert (back == np.arange(256)).all()
+
+
+def test_quire_add_posit_exact_sum():
+    """Sum of posit *values* (not products) via the quire: single rounding."""
+    rng = np.random.default_rng(5)
+    vals = rng.normal(0, 1, 50).astype(np.float32)
+    codes = np.asarray(posit_encode(jnp.asarray(vals), 16, 1))
+    qf = QuireFmt(16, 1)
+    q = quire_zero((), qf)
+    for c in codes:
+        q = quire_add_posit(q, jnp.uint16(c), qf)
+    got = int(np.asarray(quire_read(q, qf)))
+    acc = sum(ref_codec.ref_decode(int(c), 16, 1) for c in codes)
+    assert got == ref_codec.ref_encode_exact(acc, 16, 1)
+
+
+# ----------------------------------------------------------- Pallas kernel ----
+@pytest.mark.parametrize("fmt,bm,bn,bk", [
+    (P8_0, 8, 8, 16),    # multi-tile every dim incl. k (scratch carry)
+    (P16_1, 8, 8, 16),
+    (P8_2, 8, 8, 8),
+])
+def test_quire_kernel_bitexact_vs_ref(fmt, bm, bn, bk):
+    rng = np.random.default_rng(6)
+    M, K, N = 10, 40, 6  # ragged vs the block shapes -> exercises padding
+    a = jnp.asarray(_rand_codes(rng, fmt.nbits, (M, K)))
+    b = jnp.asarray(_rand_codes(rng, fmt.nbits, (K, N)))
+    es = jnp.asarray([fmt.es] * 3, jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    got = posit_quire_gemm(a, b, es, interpret=True, block_m=bm, block_n=bn,
+                           block_k=bk, **kw)
+    want = posit_quire_gemm_ref(a, b, es, **kw)
+    assert got.dtype == want.dtype
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_quire_kernel_vs_fraction_oracle():
+    """The tiled kernel itself meets the exact-sum bits (not just the ref)."""
+    rng = np.random.default_rng(7)
+    K = 24
+    a = _rand_codes(rng, 16, (4, K))
+    b = _rand_codes(rng, 16, (K, 1))
+    es = jnp.asarray([1, 1, 1], jnp.int32)
+    got = np.asarray(posit_quire_gemm(
+        jnp.asarray(a), jnp.asarray(b), es, interpret=True,
+        block_m=4, block_n=1, block_k=8, a_fmt=P16_1, b_fmt=P16_1,
+        out_fmt=P16_1))
+    want = np.array([[_exact_dot_code(a[i], b[:, 0], 16, 1)]
+                     for i in range(4)], dtype=np.uint16)
+    assert (got == want).all()
+
+
+def test_quire_kernel_mixed_formats_and_out():
+    """p8 x p16 operands, p8 readout — quire sized by the wider operand."""
+    rng = np.random.default_rng(8)
+    a = _rand_codes(rng, 8, (6, 20))
+    b = _rand_codes(rng, 16, (20, 3))
+    es = jnp.asarray([0, 1, 2], jnp.int32)
+    kw = dict(a_fmt=P8_0, b_fmt=P16_1, out_fmt=P8_2)
+    got = np.asarray(posit_quire_gemm(
+        jnp.asarray(a), jnp.asarray(b), es, interpret=True,
+        block_m=8, block_n=8, block_k=8, **kw))
+    ref = np.asarray(posit_quire_gemm_ref(jnp.asarray(a), jnp.asarray(b), es,
+                                          **kw))
+    assert (got == ref).all() and got.dtype == np.uint8
+    want = np.array(
+        [[_exact_dot_code(a[i], b[:, j], 8, 0, n_out=8, es_out=2,
+                          nb_b=16, es_b=1) for j in range(3)]
+         for i in range(6)], dtype=np.uint8)
+    assert (got == want).all()
+
+
+# --------------------------------------------------------------- dataflow -----
+def test_dot_quire_dataflow_via_pcsr():
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(_rand_codes(rng, 16, (8, 16)))
+    b = jnp.asarray(_rand_codes(rng, 16, (16, 4)))
+    slots = OperandSlots.uniform(P16_1, dataflow="quire")
+    got = posit_dot(a, b, slots)                      # impl defaults to pcsr
+    also = posit_dot(a, b, OperandSlots.uniform(P16_1), impl="quire")
+    want = quire_matmul(a, b, P16_1)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(also) == np.asarray(want)).all()
+
+
+def test_dot_quire_rejects_float_slots():
+    a = jnp.zeros((4, 4), jnp.uint16)
+    b = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="posit"):
+        posit_dot(a, b, OperandSlots(rs1=P16_1, rs2=F32, rd=P16_1,
+                                     dataflow="quire"))
+
+
+def test_pcsr_dataflow_bits_and_validation():
+    slots = OperandSlots.uniform(P16_2, dataflow="quire")
+    assert (slots.encode_bits() >> 20) & 0b11 == 2
+    assert (OperandSlots.uniform(P16_2).encode_bits() >> 20) & 0b11 == 0
+    with pytest.raises(ValueError, match="dataflow"):
+        OperandSlots(dataflow="mxu")
+
+
+def test_quire_dynamic_es_single_trace():
+    """es is data: one executable serves every es (the pcsr pes contract)."""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(_rand_codes(rng, 16, (4, 8)))
+    b = jnp.asarray(_rand_codes(rng, 16, (8, 4)))
+    calls = []
+
+    @jax.jit
+    def mm(a, b, e):
+        calls.append(1)
+        return quire_matmul(a, b, P16_1, es_a=e, es_b=e, es_out=e)
+
+    for e in range(4):
+        got = np.asarray(mm(a, b, jnp.int32(e)))
+        want = np.asarray(quire_matmul(a, b, PositFmt(16, e)))
+        assert (got == want).all(), e
+    assert len(calls) == 1
+
+
+# -------------------------------------------------------------- ssm state -----
+def test_ssm_quire_state_close_to_f32_and_differentiable():
+    from repro.core.pcsr import TransPolicy
+    from repro.models.ssm import (SSMCfg, apply_ssm, decode_ssm_step, init_ssm,
+                                  init_ssm_state)
+
+    cfg = SSMCfg(d_model=32, d_state=8, head_dim=16, chunk=16)
+    p = init_ssm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(12)
+    pol_q = TransPolicy.from_names(state="p16_2")
+    pol_f = TransPolicy()
+
+    x1 = jnp.asarray(rng.normal(0, 1, (2, 1, 32)).astype(np.float32))
+    st = init_ssm_state(2, cfg)
+    y_q, st_q = decode_ssm_step(p, cfg, x1, st, pol_q)
+    y_f, _ = decode_ssm_step(p, cfg, x1, st, pol_f)
+    assert st_q["h"].dtype == jnp.float32  # pytree unchanged (codes-equivalent)
+    assert float(jnp.max(jnp.abs(y_q - y_f))) < 1e-2  # p16 quantization only
+
+    xs = jnp.asarray(rng.normal(0, 1, (1, 32, 32)).astype(np.float32))
+    assert bool(jnp.isfinite(apply_ssm(p, cfg, xs, pol_q)).all())
+    g = jax.grad(lambda pp: apply_ssm(pp, cfg, xs, pol_q).sum())(p)
+    leaves = jax.tree.leaves(g)
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves)  # STE keeps grads
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
