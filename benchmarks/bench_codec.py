@@ -1,0 +1,57 @@
+"""Codec micro-benchmark: table-driven fast paths vs the bit pipeline.
+
+The paper's codec cost is two conversion ops around the FPU; our two
+implementations of those ops are the ~40-op integer bit pipeline
+(Mosaic-friendly) and the LUT/bucketize path (gather-friendly backends,
+repro.core.lut).  This measures both on p8/p16 decode and p8 encode, plus the
+p16 two-level split-table decode, and reports the speedup ratios — the
+numbers behind the ``codec_impl="auto"`` policy default.
+
+Results land in BENCH_codec.json via benchmarks.run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.lut import lut_decode_p8, lut_decode_p16, lut_encode_p8
+
+
+def run(smoke: bool = False):
+    n_elems = 1 << 16 if smoke else 1 << 20
+    iters = 5 if smoke else 10
+    rng = np.random.default_rng(0)
+    es = 1
+
+    c8 = jnp.asarray(rng.integers(0, 256, n_elems).astype(np.uint8))
+    c16 = jnp.asarray(rng.integers(0, 65536, n_elems).astype(np.uint16))
+    x = jnp.asarray(rng.normal(0, 4, n_elems).astype(np.float32))
+
+    pairs = {
+        "decode_p8": (
+            jax.jit(lambda c: posit_decode(c, 8, es)),
+            jax.jit(lambda c: lut_decode_p8(c, es)), c8),
+        "decode_p16": (
+            jax.jit(lambda c: posit_decode(c, 16, es)),
+            jax.jit(lambda c: lut_decode_p16(c, es)), c16),
+        "encode_p8": (
+            jax.jit(lambda v: posit_encode(v, 8, es)),
+            jax.jit(lambda v: lut_encode_p8(v, es)), x),
+    }
+    for name, (bits_fn, lut_fn, arg) in pairs.items():
+        us_bits = time_fn(bits_fn, arg, iters=iters)
+        us_lut = time_fn(lut_fn, arg, iters=iters)
+        melem_bits = n_elems / us_bits
+        melem_lut = n_elems / us_lut
+        emit(f"codec/{name}/bits", us_bits, f"{melem_bits:.1f}Melem/s")
+        emit(f"codec/{name}/lut", us_lut, f"{melem_lut:.1f}Melem/s")
+        emit(f"codec/{name}/lut_speedup", us_lut,
+             f"{us_bits / us_lut:.2f}x_vs_bits")
+    return True
+
+
+if __name__ == "__main__":
+    run()

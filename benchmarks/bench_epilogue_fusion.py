@@ -1,0 +1,128 @@
+"""Fused vs chained serving layer: the per-op launch + round-trip tax.
+
+A serving linear layer is decode(W) -> gemm -> bias -> activation ->
+residual -> encode.  The chained baseline runs it the way the motivation
+([7], PPU-light designs) pays for it: **each stage is its own XLA op** —
+its own dispatch, its own materialized result crossing memory.  The fused
+path (this PR) runs the whole layer as one op: the decode feeds the matmul
+in-register and the epilogue rides in the producer (``posit_matmul_wx`` with
+``epilogue="fused"``; the Pallas kernel path does the same inside one
+``pallas_call``).
+
+Two measurements per configuration:
+  * analytic bytes-moved model (deterministic, hardware-independent — the
+    actual mechanism, same accounting as Table IV), asserted strictly lower
+    for the fused path, and
+  * measured wall time, sampled as *paired interleaved rounds* with the
+    median of per-round chained/fused ratios — adjacent rounds share machine
+    conditions, so shared-host noise cancels instead of deciding the verdict.
+
+In smoke mode (the CI configuration) the measured ratio must be > 1.
+Results land in BENCH_epilogue.json via benchmarks.run.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import P8_0, P16_1
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.dot import posit_matmul_wx
+
+
+def _bytes_moved(M, K, N, w_bytes, out_bytes, *, chained: bool,
+                 with_residual: bool) -> int:
+    """Memory traffic model for one layer: x + W codes + bias in, result out.
+    The chained pipeline additionally round-trips the decoded (K, N) f32
+    weights and the (M, N) f32 intermediate at every stage boundary
+    (gemm->bias, bias->act, act->residual, residual->encode)."""
+    base = M * K * 4 + K * N * w_bytes + N * 4 + M * N * out_bytes
+    if with_residual:
+        base += M * N * 4
+    if chained:
+        base += 2 * K * N * 4            # decode pass: write + re-read f32 W
+        base += 4 * (2 * M * N * 4)      # four stage boundaries, write + read
+    return base
+
+
+def _median_paired_ratio(fused, chained, args, rounds: int):
+    """(median ratio, min fused us, min chained us) over interleaved rounds."""
+    for fn in (fused, chained):  # compile + warm caches
+        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(fn(*args))
+    ratios, tf_all, tc_all = [], [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused(*args))
+        tf = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(chained(*args))
+        tc = time.perf_counter() - t0
+        ratios.append(tc / tf)
+        tf_all.append(tf)
+        tc_all.append(tc)
+    ratios.sort()
+    return ratios[len(ratios) // 2], min(tf_all) * 1e6, min(tc_all) * 1e6
+
+
+def run(smoke: bool = False):
+    M, K, N = (512, 256, 1024) if smoke else (1024, 256, 1024)
+    rounds = 10 if smoke else 16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(0, 1, N).astype(np.float32))
+    residual = jnp.asarray(rng.normal(0, 1, (M, N)).astype(np.float32))
+
+    ratios = {}
+    for fmt, label in ((P8_0, "p8_0"), (P16_1, "p16_1")):
+        w = jnp.asarray(rng.normal(0, K ** -0.5, (K, N)).astype(np.float32))
+        wc = posit_encode(w, fmt.nbits, fmt.es)
+
+        fused = jax.jit(lambda a, wv, bv, rv, _f=fmt: posit_matmul_wx(
+            a, wv, _f, bias=bv, activation="relu", residual=rv,
+            out_fmt=_f, epilogue="fused", compute_dtype=jnp.float32))
+
+        # the chained baseline: every stage a separate XLA op (own launch,
+        # own materialized result), exactly the pre-fusion layer pipeline
+        s_dec = jax.jit(lambda wv, _f=fmt: posit_decode(wv, _f.nbits, _f.es))
+        s_gemm = jax.jit(lambda a, wf: jnp.matmul(
+            a, wf, preferred_element_type=jnp.float32))
+        s_bias = jax.jit(lambda y, bv: y + bv)
+        s_act = jax.jit(jax.nn.relu)
+        s_res = jax.jit(lambda y, rv: y + rv)
+        s_enc = jax.jit(lambda y, _f=fmt: posit_encode(y, _f.nbits, _f.es))
+
+        def chained(a, wv, bv, rv):
+            return s_enc(s_res(s_act(s_bias(s_gemm(a, s_dec(wv)), bv)), rv))
+
+        ratio, us_f, us_c = _median_paired_ratio(
+            fused, chained, (x, wc, bias, residual), rounds)
+
+        by_f = _bytes_moved(M, K, N, fmt.storage_bytes, fmt.storage_bytes,
+                            chained=False, with_residual=True)
+        by_c = _bytes_moved(M, K, N, fmt.storage_bytes, fmt.storage_bytes,
+                            chained=True, with_residual=True)
+        assert by_f < by_c, "fused epilogue must move strictly fewer HBM bytes"
+        ratios[label] = ratio
+        emit(f"epilogue/layer{M}x{K}x{N}/{label}/fused", us_f,
+             f"{by_f / 1e6:.2f}MB_moved")
+        emit(f"epilogue/layer{M}x{K}x{N}/{label}/chained", us_c,
+             f"{by_c / 1e6:.2f}MB_moved")
+        emit(f"epilogue/layer{M}x{K}x{N}/{label}/fused_speedup", us_f,
+             f"measured={ratio:.2f}x bytes={by_c / by_f:.2f}x")
+
+    if smoke:
+        # every format must beat the baseline — max() would let one format
+        # regress silently behind the other
+        worst = min(ratios.values())
+        assert worst > 1.0, (
+            f"fused epilogue must beat the chained baseline, got {ratios}")
+    return True
+
+
+if __name__ == "__main__":
+    run(smoke=True)

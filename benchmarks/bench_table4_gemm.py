@@ -22,6 +22,7 @@ from repro.core.pcsr import OperandSlots as OS
 from repro.kernels.posit_gemm.ops import gemm
 
 SIZES = (4, 8, 12, 16, 20, 256, 1024)
+SMOKE_SIZES = (4, 16, 256)  # CI per-PR configuration (benchmarks.run --smoke)
 
 
 def _operands(n, fmt, seed=0):
@@ -45,10 +46,11 @@ def _bytes_moved(n, fmt, impl) -> int:
     return base
 
 
-def run():
+def run(smoke: bool = False):
+    sizes = SMOKE_SIZES if smoke else SIZES
     for fmt, label in ((F32, "fp32"), (P16_1, "p16_1"), (P8_0, "p8_0")):
         slots = OS(rs1=fmt, rs2=fmt, rd=fmt)
-        for n in SIZES:
+        for n in sizes:
             a, b = _operands(n, fmt)
             fns = {}
             for impl in ("xla", "unfused") if fmt is not F32 else ("xla",):
@@ -65,7 +67,7 @@ def run():
                      fns["xla"], f"measured={ratio:.2f}x bytes={br:.2f}x")
 
     # ours vs fp32 baseline at same sizes (paper: ~1.0x, pcsr config is free)
-    for n in (256, 1024):
+    for n in ((256,) if smoke else (256, 1024)):
         af, bf = _operands(n, F32)
         base = time_fn(jax.jit(lambda a, b: gemm(a, b, OS(rs1=F32, rs2=F32, rd=F32))), af, bf)
         a8, b8 = _operands(n, P8_0)

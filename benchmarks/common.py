@@ -1,9 +1,17 @@
-"""Benchmark harness utilities: wall-clock timing + CSV emission."""
+"""Benchmark harness utilities: wall-clock timing + CSV/JSON emission.
+
+``emit`` both prints the CSV row (the historical interface) and records it in
+a module-level buffer; ``drain_rows`` hands the buffered rows to the runner,
+which serializes them as ``BENCH_<name>.json`` — the machine-readable perf
+trajectory CI and later PRs diff against.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
+
+_ROWS: list[dict] = []
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -20,4 +28,13 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
 
 
 def emit(name: str, us: float, derived: str) -> None:
+    _ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                  "derived": derived})
     print(f"{name},{us:.1f},{derived}")
+
+
+def drain_rows() -> list[dict]:
+    """Return and clear the rows emitted since the last drain."""
+    rows = list(_ROWS)
+    _ROWS.clear()
+    return rows

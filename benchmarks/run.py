@@ -1,15 +1,31 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig1d,table4,...]
+                                            [--smoke] [--json-dir DIR]
 
-Output format: ``name,us_per_call,derived`` CSV rows.
+Output format: ``name,us_per_call,derived`` CSV rows on stdout, plus one
+machine-readable ``BENCH_<name>.json`` per benchmark in ``--json-dir``
+(default: the current directory) — the perf trajectory record: whether a PR
+regressed throughput is answerable by diffing these files across commits.
+
+``--smoke`` runs each benchmark at reduced sizes/iterations (passed through
+to modules whose ``run`` accepts a ``smoke`` kwarg) — the CI configuration
+that keeps every perf path (LUT codec, fused epilogue, quire GEMM) executed
+on every PR.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import time
 import traceback
+
+import jax
+
+from benchmarks.common import drain_rows
 
 BENCHES = {
     "fig1d": "benchmarks.bench_fig1d_accuracy",        # Fig. 1(d) accuracy
@@ -19,13 +35,26 @@ BENCHES = {
     "table2": "benchmarks.bench_table2_features",      # Table II SOTA baselines
     "collectives": "benchmarks.bench_collectives",     # beyond-paper
     "quire": "benchmarks.bench_quire_accuracy",        # beyond-paper: exact acc
+    "codec": "benchmarks.bench_codec",                 # LUT vs bit-pipeline
+    "epilogue": "benchmarks.bench_epilogue_fusion",    # fused vs chained layer
 }
+
+
+def _call_run(mod, smoke: bool):
+    """Invoke mod.run, passing smoke= only to modules that accept it."""
+    if "smoke" in inspect.signature(mod.run).parameters:
+        return mod.run(smoke=smoke)
+    return mod.run()
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes/iters (CI per-PR perf-path coverage)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<name>.json results ('' = none)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(BENCHES)
 
@@ -34,14 +63,30 @@ def main(argv=None) -> None:
     for name in names:
         mod_name = BENCHES[name]
         t0 = time.time()
+        drain_rows()  # isolate each benchmark's rows
+        ok = True
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            mod.run()
+            _call_run(mod, args.smoke)
             print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
         except Exception:
+            ok = False
             failures.append(name)
             print(f"# {name} FAILED:", file=sys.stderr)
             traceback.print_exc()
+        if args.json_dir:
+            os.makedirs(args.json_dir, exist_ok=True)
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({
+                    "bench": name,
+                    "ok": ok,
+                    "smoke": args.smoke,
+                    "backend": jax.default_backend(),
+                    "elapsed_s": round(time.time() - t0, 2),
+                    "rows": drain_rows(),
+                }, f, indent=1)
+            print(f"# wrote {path}", file=sys.stderr)
     if failures:
         sys.exit(f"benchmarks failed: {failures}")
 

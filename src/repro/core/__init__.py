@@ -16,6 +16,10 @@ from repro.core.types import (  # noqa: F401
 from repro.core.codec import (  # noqa: F401
     decode, encode, posit_decode, posit_decode_to, posit_encode, quantize,
 )
+from repro.core.lut import (  # noqa: F401
+    CODEC_IMPLS, decode_with_impl, encode_with_impl, lut_decode_p8,
+    lut_decode_p16, lut_encode_p8, resolve_codec_impl,
+)
 from repro.core.pcsr import (  # noqa: F401
     DATAFLOWS, FP32_POLICY, P8_SERVE, P8_WEIGHTS, P16_QUIRE, P16_TRAIN,
     P16_WEIGHTS, ROLES, OperandSlots, TransPolicy,
@@ -28,10 +32,11 @@ from repro.core.alu import (  # noqa: F401
     posit_add, posit_mul, posit_sub, qclr, qma, qms, qneg, qround,
 )
 from repro.core.dot import (  # noqa: F401
-    posit_dot, posit_gemv, posit_matmul_wx, posit_softmax,
+    ACTIVATIONS, apply_epilogue, posit_dot, posit_gemv, posit_matmul_wx,
+    posit_softmax,
 )
 from repro.core.quire import (  # noqa: F401
     QuireFmt, quire_accumulate, quire_add_posit, quire_dot, quire_from_posit,
     quire_is_nar, quire_matmul, quire_negate, quire_normalize, quire_read,
-    quire_zero,
+    quire_read_f32, quire_zero,
 )

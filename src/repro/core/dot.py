@@ -30,24 +30,66 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.codec import EsLike, posit_decode, posit_encode
+from repro.core.lut import decode_with_impl, encode_with_impl
 from repro.core.pcsr import OperandSlots
 from repro.core.types import Fmt, PositFmt, compute_dtype_for
 
+# Activations a fused epilogue can apply (gelu is the tanh approximation —
+# jax.nn.gelu's default — which also lowers through Mosaic).
+ACTIVATIONS = ("none", "gelu", "silu", "relu")
 
-def _decode_operand(x: jax.Array, fmt: Fmt, es: Optional[EsLike], compute_dtype) -> jax.Array:
+
+def _apply_activation(y: jax.Array, activation: str) -> jax.Array:
+    if activation == "none":
+        return y
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "silu":
+        return jax.nn.silu(y)
+    if activation == "relu":
+        return jax.nn.relu(y)
+    raise ValueError(f"activation must be one of {ACTIVATIONS}, got {activation!r}")
+
+
+def apply_epilogue(y: jax.Array, bias: Optional[jax.Array],
+                   activation: str, residual: Optional[jax.Array],
+                   *, chained: bool = False) -> jax.Array:
+    """The GEMM epilogue contract: ``act(y + bias) + residual``, in f32.
+
+    ``chained=True`` puts an optimization barrier between every stage — each
+    intermediate is materialized, the [7]-style separate-pass baseline the
+    fused path is benchmarked against (bench_epilogue_fusion).
+    """
+    barrier = jax.lax.optimization_barrier if chained else (lambda t: t)
+    y = y.astype(jnp.float32)
+    if bias is not None:
+        y = barrier(y) + bias.astype(jnp.float32)
+    if activation != "none":
+        y = _apply_activation(barrier(y), activation)
+    if residual is not None:
+        y = barrier(y) + residual.astype(jnp.float32)
+    return y
+
+
+def _decode_operand(x: jax.Array, fmt: Fmt, es: Optional[EsLike], compute_dtype,
+                    codec_impl: str = "auto") -> jax.Array:
     if isinstance(fmt, PositFmt):
-        return posit_decode(x, fmt.nbits, fmt.es if es is None else es).astype(compute_dtype)
+        return decode_with_impl(x, fmt.nbits, fmt.es if es is None else es,
+                                codec_impl).astype(compute_dtype)
     return x.astype(compute_dtype)
 
 
-def _encode_result(y: jax.Array, fmt: Fmt, es: Optional[EsLike]) -> jax.Array:
+def _encode_result(y: jax.Array, fmt: Fmt, es: Optional[EsLike],
+                   codec_impl: str = "auto") -> jax.Array:
     if isinstance(fmt, PositFmt):
-        return posit_encode(y, fmt.nbits, fmt.es if es is None else es)
+        return encode_with_impl(y, fmt.nbits, fmt.es if es is None else es,
+                                codec_impl)
     return y.astype(compute_dtype_for(fmt))
 
 
 def _quire_dot(a, b, slots, *, es_a=None, es_b=None, es_out=None,
-               dimension_numbers=None):
+               dimension_numbers=None, bias=None, activation="none",
+               residual=None, chained=False):
     """dataflow="quire": exact accumulation through repro.core.quire."""
     from repro.core.quire import quire_matmul  # core->quire, no cycle w/ dot
 
@@ -63,14 +105,22 @@ def _quire_dot(a, b, slots, *, es_a=None, es_b=None, es_out=None,
         raise NotImplementedError(
             f"quire dataflow is 2-D GEMM only, got {a.shape} @ {b.shape}")
     wide = slots.rs1 if slots.rs1.nbits >= slots.rs2.nbits else slots.rs2
-    return quire_matmul(
-        a, b, wide,
+    kw = dict(
         es_a=slots.rs1.es if es_a is None else es_a,
         es_b=slots.rs2.es if es_b is None else es_b,
         nbits_a=slots.rs1.nbits, nbits_b=slots.rs2.nbits,
-        out_nbits=slots.rd.nbits,
-        es_out=slots.rd.es if es_out is None else es_out,
     )
+    if bias is None and activation == "none" and residual is None:
+        # no epilogue: keep the exact quire->posit readout (single rounding
+        # straight into the output format)
+        return quire_matmul(
+            a, b, wide, out_nbits=slots.rd.nbits,
+            es_out=slots.rd.es if es_out is None else es_out, **kw)
+    # epilogue: one exact rounding into f32 (the FPU domain the epilogue
+    # computes in), then encode — same numerics contract as the fused path
+    y = quire_matmul(a, b, wide, as_float=True, **kw)
+    y = apply_epilogue(y, bias, activation, residual, chained=chained)
+    return _encode_result(y, slots.rd, es_out, slots.codec_impl)
 
 
 def posit_dot(
@@ -84,6 +134,10 @@ def posit_dot(
     impl: Optional[str] = None,
     compute_dtype=None,
     dimension_numbers=None,
+    bias: Optional[jax.Array] = None,
+    activation: str = "none",
+    residual: Optional[jax.Array] = None,
+    epilogue: str = "fused",
 ) -> jax.Array:
     """General dot with per-operand pcsr formats.
 
@@ -92,14 +146,23 @@ def posit_dot(
     accumulation, single terminal rounding); ``None`` defers to the pcsr's
     ``slots.dataflow``. fused/unfused accumulate in f32 (the MXU/FPU
     datapath, like the paper's FP32 FPU); quire accumulates exactly.
+
+    ``bias``/``activation``/``residual`` are the fused layer epilogue:
+    ``encode(act(a@b + bias) + residual)`` rides with the GEMM — one launch
+    and one HBM write per layer.  ``epilogue="chained"`` materializes every
+    stage instead (the benchmark baseline, see ``apply_epilogue``).
     """
     if impl is None:
         impl = slots.dataflow
     if impl not in ("fused", "unfused", "quire"):
         raise ValueError(f"impl must be fused|unfused|quire, got {impl}")
+    chained = epilogue == "chained"
+    has_epilogue = bias is not None or activation != "none" or residual is not None
     if impl == "quire":
         return _quire_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
-                          dimension_numbers=dimension_numbers)
+                          dimension_numbers=dimension_numbers,
+                          bias=bias, activation=activation, residual=residual,
+                          chained=chained)
     if compute_dtype is None:
         # lossless-decode dtype: bf16 only if *both* operands allow it
         ca = compute_dtype_for(slots.rs1)
@@ -109,13 +172,13 @@ def posit_dot(
     if impl == "unfused":
         # Materialize full decoded tensors in HBM (optimization barrier keeps XLA
         # from re-fusing them into the matmul — this is the point of the baseline).
-        af = _decode_operand(a, slots.rs1, es_a, compute_dtype)
-        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype)
+        af = _decode_operand(a, slots.rs1, es_a, compute_dtype, slots.codec_impl)
+        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype, slots.codec_impl)
         af = jax.lax.optimization_barrier(af)
         bf = jax.lax.optimization_barrier(bf)
     else:
-        af = _decode_operand(a, slots.rs1, es_a, compute_dtype)
-        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype)
+        af = _decode_operand(a, slots.rs1, es_a, compute_dtype, slots.codec_impl)
+        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype, slots.codec_impl)
 
     if dimension_numbers is None:
         y = jnp.matmul(af, bf, preferred_element_type=jnp.float32)
@@ -124,7 +187,10 @@ def posit_dot(
 
     if impl == "unfused":
         y = jax.lax.optimization_barrier(y)
-    return _encode_result(y, slots.rd, es_out)
+    if has_epilogue:
+        y = apply_epilogue(y, bias, activation, residual,
+                           chained=chained or impl == "unfused")
+    return _encode_result(y, slots.rd, es_out, slots.codec_impl)
 
 
 def posit_matmul_wx(
@@ -135,20 +201,42 @@ def posit_matmul_wx(
     es: Optional[EsLike] = None,
     compute_dtype=None,
     out_dtype=None,
+    bias: Optional[jax.Array] = None,
+    activation: str = "none",
+    residual: Optional[jax.Array] = None,
+    out_fmt: Optional[PositFmt] = None,
+    es_out: Optional[EsLike] = None,
+    codec_impl: str = "auto",
+    epilogue: str = "fused",
 ) -> jax.Array:
     """x @ decode(W) — the weights-only fast path used by TransLinear.
 
-    x: (..., K) float; w_codes: (K, N) posit codes. Output float (..., N).
-    For p8 weights the decode is bf16-exact, so the MXU runs at full bf16 speed.
+    x: (..., K) float; w_codes: (K, N) posit codes. Output float (..., N),
+    or posit codes when ``out_fmt`` is given (the serving layer's fused
+    gemm -> bias -> activation -> residual -> encode, one HBM write).
+    For p8 weights the decode is bf16-exact, so the MXU runs at full bf16
+    speed.  ``epilogue="chained"`` is the materialize-every-stage baseline.
     """
     if compute_dtype is None:
         compute_dtype = compute_dtype_for(w_fmt)
-    wf = posit_decode(w_codes, w_fmt.nbits, w_fmt.es if es is None else es)
+    wf = decode_with_impl(w_codes, w_fmt.nbits,
+                          w_fmt.es if es is None else es, codec_impl)
+    chained = epilogue == "chained"
+    if chained:
+        wf = jax.lax.optimization_barrier(wf)
     y = jnp.matmul(
         x.astype(compute_dtype),
         wf.astype(compute_dtype),
         preferred_element_type=jnp.float32,
     )
+    if bias is not None or activation != "none" or residual is not None:
+        y = apply_epilogue(y, bias, activation, residual, chained=chained)
+    if out_fmt is not None:
+        if chained:
+            y = jax.lax.optimization_barrier(y)
+        return encode_with_impl(y, out_fmt.nbits,
+                                out_fmt.es if es_out is None else es_out,
+                                codec_impl)
     return y.astype(out_dtype if out_dtype is not None else x.dtype)
 
 

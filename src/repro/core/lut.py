@@ -1,0 +1,316 @@
+"""Table-driven codec fast paths — LUT decode + bucketize encode.
+
+The bit-pipeline codec (``repro.core.codec``) spends ~40 integer ops per
+element.  That is the right trade inside a Mosaic kernel body (vector ALU ops
+are cheap, gathers are hostile), but on gather-friendly backends a posit-8
+decode is literally a 256-entry table lookup and a posit-16 decode almost is.
+This module provides the table side of the codec, bit-exact against the
+pipeline:
+
+* **p8 decode**: one dense ``(4 es, 256)`` float32 table.  Every p8 value has
+  at most 5 fraction bits and |scale| <= 48, so the table entries are exact
+  f32 (and exactly bf16-castable, DESIGN.md §2).  NaR is stored as NaN, zero
+  as +0.0 — decode is a single gather.
+
+* **p16 decode**: a two-level split table (DESIGN.md §8).  The 16-bit code is
+  split (after two's-complement sign strip) into ``hi = absc >> 8`` and
+  ``lo = absc & 0xFF``.  For most ``hi`` bytes the regime, its terminator and
+  all ``es`` exponent bits fit inside the high byte, so sign/scale and the
+  high fraction bits are a function of ``hi`` alone and ``lo`` is pure
+  fraction: ``fbits = L1_BITS[es, hi] | (lo << L1_SHIFT[es, hi])``.  The few
+  ``hi`` bytes whose regime/exponent spill into the low byte (<= 16 of 128
+  per es) fall back to a dense second-level table ``LO[es, slot, lo]``.
+  Total: ~70 KB of tables instead of the 256 KB a flat p16 table would need.
+
+* **p8 encode**: monotonicity-based bucketize.  Signed p8 code order *is*
+  value order (the posit superpower), so encoding is ``searchsorted`` of the
+  input against the 253 midpoints between adjacent decoded values, with RNE
+  tie-handling (exact midpoints go to the even code) and the posit specials
+  (NaN/Inf -> NaR, +-0 -> 0, never-round-to-zero saturation at minpos).  All
+  p8 midpoints are exactly f32-representable (adjacent posits are <= 2^es
+  octaves apart, so a midpoint needs <= 8+6 mantissa bits), which makes the
+  comparison against f32 inputs exact — asserted at table-build time.
+
+``codec_impl`` policy knob (``OperandSlots.codec_impl`` /
+``TransPolicy.codec_impl``): "bits" forces the pipeline, "lut" forces tables,
+"auto" picks tables only where they measure faster — the p8 decode on
+gather-friendly backends (cpu/gpu XLA); see ``resolve_codec_impl`` and
+BENCH_codec.json.  Pallas kernel bodies always use the pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.codec import EsLike, _es_u32, _u32, _U32, _NAN_BITS, posit_decode, posit_encode
+
+CODEC_IMPLS = ("auto", "lut", "bits")
+
+_MASK32 = 0xFFFFFFFF
+
+
+# =====================================================================
+# table construction (numpy, module-import free of jax tracing)
+# =====================================================================
+
+def _np_decode(codes: np.ndarray, nbits: int, es: int) -> np.ndarray:
+    """Vectorized numpy mirror of ``codec.posit_decode`` (build-time oracle).
+
+    Bit-for-bit the same integer pipeline; independence from the jnp codec is
+    established by the exhaustive LUT==pipeline equivalence tests.
+    """
+    n = nbits
+    c = codes.astype(np.int64) & ((1 << n) - 1)
+    sign = (c >> (n - 1)) & 1
+    absc = np.where(sign == 1, ((1 << n) - c) & ((1 << n) - 1), c)
+    r0 = (absc >> (n - 2)) & 1
+    w = np.where(r0 == 1, (~absc) & ((1 << (n - 1)) - 1), absc)
+    # exact floor-log2 via frexp (ints < 2^15 are exact in f64)
+    p = np.frexp(np.maximum(w, 1).astype(np.float64))[1] - 1
+    m = np.where(w == 0, n - 1, (n - 2) - p)
+    k = np.where(r0 == 1, m - 1, -m)
+    y = (absc << (33 - n)) & _MASK32
+    rem = (y << (m + 1)) & _MASK32
+    e = (rem >> 24) >> (8 - es)
+    frac_la = (rem << es) & _MASK32
+    mant23 = frac_la >> 9
+    scale = k * (1 << es) + e
+    fbits = (sign << 31) | (((scale + 127) & 0xFF) << 23) | mant23
+    out = fbits.astype(np.uint32).view(np.float32)
+    out = np.where(c == 0, np.float32(0.0), out)
+    nan = np.uint32(_NAN_BITS).view(np.float32)
+    return np.where(c == (1 << (n - 1)), nan, out).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _p8_decode_table() -> np.ndarray:
+    """(4, 256) f32: table[es, code] == posit_decode(code, 8, es)."""
+    return np.stack([_np_decode(np.arange(256), 8, es) for es in range(4)])
+
+
+def _p16_hi_class(hi: int, es: int):
+    """Classify a high byte of absc: return (scale, m) if the regime, its
+    terminator and all es exponent bits fit in the 7 body bits, else None."""
+    body = hi & 0x7F  # absc bit 15 is 0; body bits 14..8 live in hi bits 6..0
+    r0 = (body >> 6) & 1
+    run = 0
+    for i in range(6, -1, -1):
+        if ((body >> i) & 1) == r0:
+            run += 1
+        else:
+            break
+    if run == 7 or run + 1 + es > 7:
+        return None
+    m = run
+    k = m - 1 if r0 == 1 else -m
+    e = (body >> (6 - m - es)) & ((1 << es) - 1)
+    return k * (1 << es) + e, m
+
+
+@functools.lru_cache(maxsize=None)
+def _p16_decode_tables():
+    """Two-level split tables for p16 decode (see module docstring).
+
+    Returns (l1_bits (4,128) int32, l1_shift (4,128) int32,
+    lo_tab (4, S, 256) f32).  l1_bits >= 0 holds the base f32 bit pattern of
+    the *absolute* value (sign 0) with the low byte's fraction contribution
+    missing; l1_bits < 0 encodes ``-(slot+1)`` into lo_tab.
+    """
+    l1_bits = np.zeros((4, 128), np.int32)
+    l1_shift = np.zeros((4, 128), np.int32)
+    slot_codes: list[list[np.ndarray]] = []
+    max_slots = 0
+    for es in range(4):
+        rows = []
+        for hi in range(128):
+            cls = _p16_hi_class(hi, es)
+            if cls is None:
+                l1_bits[es, hi] = -(len(rows) + 1)
+                rows.append(_np_decode(
+                    (hi << 8) | np.arange(256), 16, es))
+            else:
+                scale, m = cls
+                base_mant = (hi << (17 + m + es)) & 0x7FFFFF
+                l1_bits[es, hi] = ((scale + 127) << 23) | base_mant
+                l1_shift[es, hi] = 9 + m + es
+        slot_codes.append(rows)
+        max_slots = max(max_slots, len(rows))
+    lo_tab = np.zeros((4, max_slots, 256), np.float32)
+    for es in range(4):
+        for s, row in enumerate(slot_codes[es]):
+            lo_tab[es, s] = row
+    return l1_bits, l1_shift, lo_tab
+
+
+@functools.lru_cache(maxsize=None)
+def _p8_encode_tables(ftz: bool):
+    """Bucketize-encode tables per es: (codes (4,V) uint8, mids (4,V-1) f32,
+    tie_up (4,V-1) bool).  V = 255 with zero in the lattice (ftz) else 254.
+
+    ``codes`` lists the non-NaR codes in ascending *value* order (== signed
+    code order).  ``mids[i]`` is the *encoding-level* decision boundary
+    between values i and i+1: posit rounding is RNE on the truncated
+    encoding, whose flip point between adjacent n-bit codes c and c+1
+    (signed) is exactly the value of the (n+1)-bit posit with signed code
+    2c+1 — the arithmetic midpoint only inside uniform lattice segments, and
+    the guard-bit boundary where discarded bits include exponent bits
+    (DESIGN.md §8).  ``tie_up[i]`` says an exact tie (x equals the boundary,
+    empty sticky) rounds to the upper neighbour — the even code of the pair.
+    All P(9, es) boundary values are exactly f32-representable (<= 7
+    significand bits, |scale| <= 56) — asserted below.
+    """
+    V = 255 if ftz else 254
+    codes_t = np.zeros((4, V), np.uint8)
+    mids_t = np.zeros((4, V - 1), np.float32)
+    tie_t = np.zeros((4, V - 1), bool)
+    for es in range(4):
+        codes = np.array([c for c in range(256)
+                          if c != 0x80 and (ftz or c != 0)], np.uint8)
+        signed = codes.astype(np.int8)
+        order = np.argsort(signed)
+        codes = codes[order]
+        vals = _np_decode(codes, 8, es).astype(np.float64)
+        assert (np.diff(vals) > 0).all(), "p8 values must be strictly ordered"
+        s = signed[order].astype(np.int64)  # ascending signed codes
+        mids = _np_decode((2 * s[:-1] + 1) & 0x1FF, 9, es).astype(np.float64)
+        assert (mids > vals[:-1]).all() and (mids < vals[1:]).all(), \
+            "P9 boundaries must interleave the p8 lattice"
+        assert (mids.astype(np.float32).astype(np.float64) == mids).all(), \
+            "p8 rounding boundaries must be exactly f32-representable"
+        codes_t[es] = codes
+        mids_t[es] = mids.astype(np.float32)
+        tie_t[es] = (codes[1:] % 2) == 0  # ties go to the even code
+    return codes_t, mids_t, tie_t
+
+
+# =====================================================================
+# LUT codec ops (jnp; gather-based)
+# =====================================================================
+
+def lut_decode_p8(codes: jax.Array, es: EsLike) -> jax.Array:
+    """p8 decode as one (4, 256)-table gather; bit-exact vs posit_decode."""
+    tab = jnp.asarray(_p8_decode_table())
+    esl = _es_u32(es).astype(jnp.int32)
+    return tab[esl][codes.astype(jnp.int32) & 0xFF]
+
+
+def lut_decode_p16(codes: jax.Array, es: EsLike) -> jax.Array:
+    """p16 decode via the two-level split table; bit-exact vs posit_decode."""
+    l1b_np, l1s_np, lo_np = _p16_decode_tables()
+    l1b, l1s, lo_tab = (jnp.asarray(l1b_np), jnp.asarray(l1s_np),
+                        jnp.asarray(lo_np))
+    esl = _es_u32(es).astype(jnp.int32)
+    c = codes.astype(_U32) & _u32(0xFFFF)
+    neg = (c >> _u32(15)) == 1
+    absc = jnp.where(neg, (_u32(1 << 16) - c) & _u32(0xFFFF), c)
+    hi = (absc >> _u32(8)).astype(jnp.int32)   # 0..128 (128 only for NaR)
+    lo = (absc & _u32(0xFF)).astype(jnp.int32)
+    hic = jnp.minimum(hi, 127)
+
+    b = l1b[esl][hic]
+    sh = l1s[esl][hic].astype(_U32)
+    fast = lax.bitcast_convert_type(
+        b.astype(_U32) | (lo.astype(_U32) << sh), jnp.float32)
+    slot = jnp.clip(-b - 1, 0, lo_tab.shape[1] - 1)
+    slow = lo_tab[esl][slot, lo]
+    v = jnp.where(b >= 0, fast, slow)
+    v = jnp.where(neg, -v, v)
+    nan = lax.bitcast_convert_type(
+        jnp.full(c.shape, _NAN_BITS, dtype=_U32), jnp.float32)
+    return jnp.where(c == _u32(1 << 15), nan, v)
+
+
+def lut_encode_p8(x: jax.Array, es: EsLike, ftz: bool = False) -> jax.Array:
+    """p8 encode by bucketizing against the 253 decoded-value midpoints.
+
+    RNE with exact ties to the even code; NaN/Inf -> NaR; +-0 -> 0; standard
+    never-round-to-zero saturation (the zero-less lattice's minpos bucket
+    covers all of (0, minpos)).  ftz=True keeps zero in the lattice, which is
+    exactly the ftz contract of ``posit_encode`` (|x| <= minpos/2 -> 0).
+    """
+    codes_np, mids_np, tie_np = _p8_encode_tables(ftz)
+    codes_t, mids_t, tie_t = (jnp.asarray(codes_np), jnp.asarray(mids_np),
+                              jnp.asarray(tie_np))
+    esl = _es_u32(es).astype(jnp.int32)
+    xf = x.astype(jnp.float32)
+    bits = lax.bitcast_convert_type(xf, _U32)
+    a_bits = bits & _u32(0x7FFFFFFF)
+    is_zero = a_bits == 0
+    is_nar = a_bits >= _u32(0x7F800000)
+
+    mids = mids_t[esl]          # (V-1,) f32
+    tie_up = tie_t[esl]
+    codes = codes_t[esl]
+    n_mids = mids.shape[0]
+    idx = jnp.searchsorted(mids, xf, side="left").astype(jnp.int32)
+    i2 = jnp.minimum(idx, n_mids - 1)
+    tie = (idx < n_mids) & (mids[i2] == xf)
+    idx = idx + (tie & tie_up[i2]).astype(jnp.int32)
+    code = codes[idx]
+
+    # Sub-minpos region via exact integer magnitude compare (monotone f32 bit
+    # patterns): float comparisons can't be trusted here — backends may flush
+    # subnormal inputs to zero before the searchsorted compares.  minpos is
+    # 2^-(6<<es), always f32-normal, so its bit pattern is a pure exponent.
+    neg = (bits >> _u32(31)) == 1
+    minpos_bits = ((jnp.int32(127) - (jnp.int32(6) << esl)) << 23).astype(_U32)
+    tiny = (~is_zero) & (a_bits < minpos_bits)
+    sat = jnp.where(neg, jnp.uint8(0xFF), jnp.uint8(1))
+    if ftz:
+        # RNE against the {0} U posits lattice: |x| <= minpos/2 -> 0 (the tie
+        # at exactly minpos/2 goes to the even code 0), else -> +-minpos.
+        half_bits = minpos_bits - _u32(1 << 23)
+        code = jnp.where(tiny, jnp.where(a_bits <= half_bits, jnp.uint8(0), sat),
+                         code)
+    else:
+        code = jnp.where(tiny, sat, code)  # never-round-to-zero
+    code = jnp.where(is_zero, jnp.uint8(0), code)
+    return jnp.where(is_nar, jnp.uint8(0x80), code)
+
+
+# =====================================================================
+# impl dispatch — the codec_impl pcsr knob
+# =====================================================================
+
+def _gather_friendly() -> bool:
+    return jax.default_backend() in ("cpu", "gpu")
+
+
+def resolve_codec_impl(impl: str, nbits: int = 8, op: str = "decode") -> str:
+    """Resolve 'auto' to a concrete implementation for (op, format, backend).
+
+    'auto' picks the LUT only where BENCH_codec shows it winning: the p8
+    decode gather on gather-friendly backends (~3.5x the bit pipeline on CPU
+    XLA).  The p16 split-table decode and the p8 bucketize encode lose to
+    the pipeline there (binary search / two-level gathers cost more than the
+    integer ops), so 'auto' keeps 'bits' for them; 'lut' forces the tables
+    wherever they exist.
+    """
+    if impl not in CODEC_IMPLS:
+        raise ValueError(f"codec_impl must be one of {CODEC_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        if op == "decode" and nbits == 8 and _gather_friendly():
+            return "lut"
+        return "bits"
+    return impl
+
+
+def decode_with_impl(codes: jax.Array, nbits: int, es: EsLike,
+                     impl: str = "auto") -> jax.Array:
+    """posit -> f32 via the selected codec implementation (bit-exact both ways)."""
+    if resolve_codec_impl(impl, nbits, "decode") == "lut":
+        return lut_decode_p8(codes, es) if nbits == 8 else lut_decode_p16(codes, es)
+    return posit_decode(codes, nbits, es)
+
+
+def encode_with_impl(x: jax.Array, nbits: int, es: EsLike,
+                     impl: str = "auto", ftz: bool = False) -> jax.Array:
+    """f32 -> posit via the selected implementation.  The bucketize fast path
+    exists for p8 only; p16 always takes the bit pipeline."""
+    if nbits == 8 and resolve_codec_impl(impl, nbits, "encode") == "lut":
+        return lut_encode_p8(x, es, ftz=ftz)
+    return posit_encode(x, nbits, es, ftz=ftz)

@@ -33,6 +33,16 @@ from repro.core.types import BF16, F32, Fmt, PositFmt, get_format
 #              rounding (repro.core.quire / kernels.posit_quire_gemm)
 DATAFLOWS = ("fused", "unfused", "quire")
 
+# Codec implementations (repro.core.lut): "bits" is the ~40-op integer
+# pipeline (the only option inside Mosaic kernel bodies), "lut" the
+# table/gather fast path, "auto" picks per backend.
+CODEC_IMPLS = ("auto", "lut", "bits")
+
+# Epilogue dataflows for dot-like ops (repro.core.dot): "fused" keeps
+# bias/activation/residual/encode in the producing kernel (one HBM write);
+# "chained" materializes each stage — the [7]-style round-trip baseline.
+EPILOGUES = ("fused", "chained")
+
 
 @dataclasses.dataclass(frozen=True)
 class OperandSlots:
@@ -40,7 +50,8 @@ class OperandSlots:
 
     ``dataflow`` is the beyond-paper pcsr bit pair selecting the accumulation
     path; it is a *static* field (it changes the lowered program, unlike es
-    which stays a traced scalar).
+    which stays a traced scalar).  ``codec_impl`` selects the codec
+    implementation the op's decodes/encodes lower to (also static).
     """
 
     rs1: Fmt = F32
@@ -48,23 +59,33 @@ class OperandSlots:
     rs3: Fmt = F32  # fused-op third operand (e.g. addend of FMA / bias)
     rd: Fmt = F32
     dataflow: str = "fused"
+    codec_impl: str = "auto"
 
     def __post_init__(self):
         if self.dataflow not in DATAFLOWS:
             raise ValueError(
                 f"dataflow must be one of {DATAFLOWS}, got {self.dataflow!r}")
+        if self.codec_impl not in CODEC_IMPLS:
+            raise ValueError(
+                f"codec_impl must be one of {CODEC_IMPLS}, got {self.codec_impl!r}")
 
     @classmethod
-    def uniform(cls, fmt: Fmt, dataflow: str = "fused") -> "OperandSlots":
-        return cls(rs1=fmt, rs2=fmt, rs3=fmt, rd=fmt, dataflow=dataflow)
+    def uniform(cls, fmt: Fmt, dataflow: str = "fused",
+                codec_impl: str = "auto") -> "OperandSlots":
+        return cls(rs1=fmt, rs2=fmt, rs3=fmt, rd=fmt, dataflow=dataflow,
+                   codec_impl=codec_impl)
 
     def with_dataflow(self, dataflow: str) -> "OperandSlots":
         return dataclasses.replace(self, dataflow=dataflow)
 
+    def with_codec_impl(self, codec_impl: str) -> "OperandSlots":
+        return dataclasses.replace(self, codec_impl=codec_impl)
+
     def encode_bits(self) -> int:
         """Pack into the paper's 4x(1+1+3)-bit register layout (for display),
         plus our dataflow extension in bits 20-21 (00 fused / 01 unfused /
-        10 quire)."""
+        10 quire) and the codec_impl extension in bits 22-23 (00 auto /
+        01 lut / 10 bits)."""
         word = 0
         for i, f in enumerate((self.rs1, self.rs2, self.rs3, self.rd)):
             pfmt = 1 if isinstance(f, PositFmt) else 0
@@ -74,6 +95,7 @@ class OperandSlots:
             word |= pprec << (4 + i)
             word |= pes << (8 + 3 * i)
         word |= DATAFLOWS.index(self.dataflow) << 20
+        word |= CODEC_IMPLS.index(self.codec_impl) << 22
         return word
 
 
@@ -111,6 +133,21 @@ class TransPolicy:
     # rounding per device + one readout rounding total, instead of re-rounding
     # at every reduction hop (distributed.collectives.quire_psum_posit).
     exact_collectives: bool = False
+    # Codec implementation every layer-level decode/encode lowers to
+    # (repro.core.lut): "auto" | "lut" | "bits".
+    codec_impl: str = "auto"
+    # Layer epilogue dataflow (repro.core.dot): "fused" keeps
+    # bias/activation/residual/encode with the GEMM, "chained" materializes
+    # each stage (the benchmark baseline).
+    epilogue: str = "fused"
+
+    def __post_init__(self):
+        if self.codec_impl not in CODEC_IMPLS:
+            raise ValueError(
+                f"codec_impl must be one of {CODEC_IMPLS}, got {self.codec_impl!r}")
+        if self.epilogue not in EPILOGUES:
+            raise ValueError(
+                f"epilogue must be one of {EPILOGUES}, got {self.epilogue!r}")
 
     def fmt_for(self, role: str) -> Optional[PositFmt]:
         if role not in ROLES:
@@ -120,8 +157,10 @@ class TransPolicy:
     @classmethod
     def from_names(cls, compute_dtype: str = "f32",
                    exact_collectives: bool = False,
+                   codec_impl: str = "auto", epilogue: str = "fused",
                    **roles: Optional[str]) -> "TransPolicy":
-        kw = {"exact_collectives": exact_collectives}
+        kw = {"exact_collectives": exact_collectives,
+              "codec_impl": codec_impl, "epilogue": epilogue}
         for role, name in roles.items():
             if name is None or name == "none":
                 kw[role] = None
@@ -139,6 +178,10 @@ class TransPolicy:
             parts.append(f"{role}={f.name if f else '-'}")
         if self.exact_collectives:
             parts.append("exact_collectives")
+        if self.codec_impl != "auto":
+            parts.append(f"codec={self.codec_impl}")
+        if self.epilogue != "fused":
+            parts.append(f"epilogue={self.epilogue}")
         return " ".join(parts)
 
 

@@ -257,21 +257,14 @@ def quire_is_nar(q: jax.Array, qfmt: QuireFmt) -> jax.Array:
     return q[..., qfmt.n_limbs] != 0
 
 
-def quire_read(q: jax.Array, qfmt: QuireFmt, *,
-               out_nbits: Optional[int] = None,
-               es_out: Optional[EsLike] = None) -> jax.Array:
-    """quire -> posit codes: the single terminal rounding (PERCIVAL ``qround``).
+def _readout_fields(q: jax.Array, qfmt: QuireFmt):
+    """Normalize + extract (neg, scale:int32, frac_la hidden@31, sticky,
+    is_zero, is_nar) from a quire — the shared front half of both readouts.
 
-    RNE against the exact accumulated value — guard and sticky are computed
-    from the full digit magnitude, so the result is bit-identical to rounding
-    the infinitely-precise sum. Exact zero -> 0; flagged -> NaR; magnitudes
-    beyond the posit range saturate to maxpos/minpos (never 0/NaR).
-    ``out_nbits``/``es_out`` let a p16-quire read out in any posit format.
+    Guard and sticky downstream see the *full* digit magnitude, so any
+    rounding built on these fields is a single rounding of the exact sum.
     """
     L = qfmt.n_limbs
-    out_n = qfmt.nbits if out_nbits is None else out_nbits
-    oesl = _es_u32(qfmt.es if es_out is None else es_out)
-
     q = quire_normalize(q, qfmt)
     top = q[..., L - 1]
     neg = top < 0
@@ -306,10 +299,76 @@ def quire_read(q: jax.Array, qfmt: QuireFmt, *,
     sticky = sticky | ((D0 & ((_u32(1) << r) - 1)) != 0)
 
     scale = P - jnp.int32(qfmt.bias)
+    return neg, scale, frac_la, sticky, P < 0, quire_is_nar(q, qfmt)
+
+
+def quire_read(q: jax.Array, qfmt: QuireFmt, *,
+               out_nbits: Optional[int] = None,
+               es_out: Optional[EsLike] = None) -> jax.Array:
+    """quire -> posit codes: the single terminal rounding (PERCIVAL ``qround``).
+
+    RNE against the exact accumulated value — guard and sticky are computed
+    from the full digit magnitude, so the result is bit-identical to rounding
+    the infinitely-precise sum. Exact zero -> 0; flagged -> NaR; magnitudes
+    beyond the posit range saturate to maxpos/minpos (never 0/NaR).
+    ``out_nbits``/``es_out`` let a p16-quire read out in any posit format.
+    """
+    out_n = qfmt.nbits if out_nbits is None else out_nbits
+    oesl = _es_u32(qfmt.es if es_out is None else es_out)
+    neg, scale, frac_la, sticky, is_zero, is_nar = _readout_fields(q, qfmt)
     code = _encode_fields(neg, scale, frac_la, sticky, out_n, oesl)
-    code = jnp.where(P < 0, _u32(0), code)                       # exact zero
-    code = jnp.where(quire_is_nar(q, qfmt), _u32(1 << (out_n - 1)), code)
+    code = jnp.where(is_zero, _u32(0), code)                     # exact zero
+    code = jnp.where(is_nar, _u32(1 << (out_n - 1)), code)
     return code.astype(jnp.uint8 if out_n == 8 else jnp.uint16)
+
+
+def _f32_from_fields(neg: jax.Array, scale: jax.Array, frac_la: jax.Array,
+                     sticky: jax.Array) -> jax.Array:
+    """RNE-assemble a float32 from (sign, scale, fraction bits without the
+    hidden bit left-aligned at 31, sticky) — the same field convention as
+    ``_encode_fields``, rounded into IEEE instead of posit.
+
+    Exact single rounding incl. subnormals; overflow -> +-inf, magnitudes
+    below half the smallest subnormal -> +-0.  Mosaic-safe (uint32 only,
+    every shift in [0, 31]).
+    """
+    # significand with the hidden bit at 31; the fraction LSB it displaces
+    # (weight 2^-32) can only matter as sticky
+    sig_la = _u32(0x80000000) | (frac_la >> _u32(1))
+    sticky = sticky | ((frac_la & _u32(1)) != 0)
+    # subnormal pre-shift: scale < -126 keeps fewer than 24 mantissa bits
+    sh = jnp.clip(-126 - scale, 0, 24).astype(_U32)
+    mant = (sig_la >> _u32(8)) >> sh
+    guard = ((sig_la >> _u32(7)) >> sh) & _u32(1)
+    low = sig_la & ((_u32(1) << (_u32(7) + sh)) - _u32(1))
+    st = sticky | (low != 0)
+    inc = (guard == 1) & (st | ((mant & 1) == 1))
+    mant = mant + inc.astype(_U32)
+    # exponent-field base: adding the hidden bit of `mant` lands the biased
+    # exponent; a rounding carry to 2^24 increments it for free.  Subnormals
+    # use base 0 (mant *is* the field; carry to 2^23 re-normalizes for free).
+    base = jnp.where(sh > 0, jnp.int32(0), scale + 126)
+    fbits = (base.astype(_U32) << _u32(23)) + mant
+    fbits = jnp.where(scale >= 128, _u32(0x7F800000), fbits)     # overflow
+    fbits = jnp.where(scale < -150, _u32(0), fbits)              # underflow
+    fbits = fbits | (jnp.where(neg, _u32(1), _u32(0)) << _u32(31))
+    return lax.bitcast_convert_type(fbits, jnp.float32)
+
+
+def quire_read_f32(q: jax.Array, qfmt: QuireFmt) -> jax.Array:
+    """quire -> float32: single RNE of the exact sum into the FPU domain.
+
+    The readout used by fused epilogues (DESIGN.md §8): bias/activation run
+    in f32 on a value that saw *no* accumulation rounding.  Exact zero -> +0;
+    NaR -> NaN; |sum| beyond f32 range -> +-inf (the same overflow semantics
+    a f32-accumulating fused GEMM would produce).
+    """
+    neg, scale, frac_la, sticky, is_zero, is_nar = _readout_fields(q, qfmt)
+    v = _f32_from_fields(neg, scale, frac_la, sticky)
+    v = jnp.where(is_zero, jnp.float32(0.0), v)
+    nan = lax.bitcast_convert_type(
+        jnp.full(v.shape, 0x7FC00000, dtype=_U32), jnp.float32)
+    return jnp.where(is_nar, nan, v)
 
 
 # =====================================================================
@@ -321,13 +380,16 @@ def quire_matmul(a: jax.Array, b: jax.Array, fmt: PositFmt, *,
                  nbits_a: Optional[int] = None, nbits_b: Optional[int] = None,
                  out_nbits: Optional[int] = None,
                  es_out: Optional[EsLike] = None,
-                 block_k: int = 256) -> jax.Array:
+                 block_k: int = 256,
+                 as_float: bool = False) -> jax.Array:
     """Exact-accumulation GEMM: every a[i,k]*b[k,j] lands in a per-output
     quire; one rounding at readout. a: (M, K), b: (K, N) posit codes ->
     (M, N) posit codes. O(M*N*L) int32 state — the software analogue of
     PERCIVAL's per-lane quire register, not an MXU path. ``fmt`` is the widest
     operand format (it sizes the quire); ``nbits_a/nbits_b`` override per
-    operand for mixed-precision GEMMs.
+    operand for mixed-precision GEMMs.  ``as_float=True`` reads out through
+    ``quire_read_f32`` instead (f32 result, one rounding — the fused-epilogue
+    entry point).
     """
     M, K = a.shape
     K2, N = b.shape
@@ -361,6 +423,8 @@ def quire_matmul(a: jax.Array, b: jax.Array, fmt: PositFmt, *,
 
     q0 = quire_zero((M, N), qf)
     q, _ = lax.scan(block, q0, (a_blk, b_blk))
+    if as_float:
+        return quire_read_f32(q, qf)
     return quire_read(q, qf, out_nbits=out_nbits, es_out=eo)
 
 

@@ -26,18 +26,22 @@ def gemm(
     slots: OperandSlots,
     *,
     es_a=None, es_b=None, es_out=None,
+    bias=None, activation: str = "none", residual=None,
     impl: str = "auto",
     interpret: bool | None = None,
     **block_kw,
 ) -> jax.Array:
-    """O = decode(A) @ decode(B) -> encode, formats per the pcsr operand slots.
+    """O = epilogue(decode(A) @ decode(B)) -> encode, per the pcsr slots.
 
-    A pcsr with ``dataflow="quire"`` (or impl="quire") routes to the
-    exact-accumulation kernel package (posit_quire_gemm)."""
+    ``bias``/``activation``/``residual`` fuse the layer epilogue into the
+    kernel's emit step (one launch, one HBM write).  A pcsr with
+    ``dataflow="quire"`` (or impl="quire") routes to the exact-accumulation
+    kernel package (posit_quire_gemm)."""
     if impl == "quire" or (impl == "auto" and slots.dataflow == "quire"):
         from repro.kernels.posit_quire_gemm.ops import quire_gemm
 
         return quire_gemm(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
+                          bias=bias, activation=activation, residual=residual,
                           impl="auto", interpret=interpret, **block_kw)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla"
@@ -55,10 +59,15 @@ def gemm(
         return posit_gemm(
             a, b, es,
             a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+            bias=bias, activation=activation, residual=residual,
             interpret=interpret, **block_kw,
         )
     if impl == "xla":
-        return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out, impl="fused")
+        return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
+                         bias=bias, activation=activation, residual=residual,
+                         impl="fused")
     if impl == "unfused":
-        return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out, impl="unfused")
+        return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
+                         bias=bias, activation=activation, residual=residual,
+                         impl="unfused")
     raise ValueError(f"unknown impl {impl!r}")

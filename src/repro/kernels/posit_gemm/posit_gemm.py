@@ -4,20 +4,28 @@ Dataflow per (i, j, k) grid step (paper Fig. 2(b) on the TPU memory hierarchy):
 
     HBM --BlockSpec--> VMEM:  A tile (bm x bk)   posit codes or float
                               B tile (bk x bn)   posit codes or float
+                              bias (1 x bn), residual (bm x bn)   [optional]
     VMEM:   [input decoder]   posit -> bf16/f32  (skipped for float operands)
     MXU:    acc(f32) += A' @ B'                  (the "FPU datapath")
-    VMEM:   [output encoder]  f32 -> posit       (skipped for float rd; last k)
+    VMEM:   [fused epilogue]  act(acc + bias) + residual      (last k)
+    VMEM:   [output encoder]  f32 -> posit       (skipped for float rd)
     VMEM --BlockSpec--> HBM:  O tile (bm x bn)
 
 Posit operands move through HBM as 1–2-byte codes, so a p8 x p8 GEMM reads 4x
 fewer HBM bytes than f32 (the paper's scratchpad-savings, Table IV) and the
 decode rides in VMEM next to the MXU (the paper's lightweight-codec claim).
+The epilogue (bias add, activation, residual add, output encode) runs inside
+the same kernel invocation: one launch and one HBM write per layer instead of
+a gemm -> bias -> act -> encode chain of four (DESIGN.md §8).
 
 ``es`` for (rs1, rs2, rd) arrives as a scalar-prefetch vector — the pcsr: one
 compiled kernel serves every exponent size at runtime.
 
 Grid is (m, n, k) with k innermost/arbitrary; a VMEM f32 scratch accumulates
-across k tiles (revisited output pattern).
+across k tiles (revisited output pattern).  Block sizes are rounded *up* to
+hardware-friendly multiples (lane = 128, sublane per dtype) and the operands
+padded, never shrunk to ragged tiles: ``min(block, dim)`` on a small dim used
+to produce tiles that violate the TPU (sublane, lane) tiling.
 """
 from __future__ import annotations
 
@@ -29,17 +37,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import LANE, pad_to, round_block, sublane, tpu_compiler_params
 
 from repro.core.codec import posit_decode, posit_encode
+from repro.core.dot import ACTIVATIONS, _apply_activation
 from repro.core.types import Fmt, PositFmt, compute_dtype_for
 
 
 def _gemm_kernel(
     es_ref,  # scalar prefetch: (3,) int32 = es for rs1, rs2, rd
-    a_ref, b_ref, o_ref, acc_ref,
-    *, a_fmt: Fmt, b_fmt: Fmt, out_fmt: Fmt, compute_dtype, n_k: int,
+    *refs,
+    a_fmt: Fmt, b_fmt: Fmt, out_fmt: Fmt, compute_dtype, n_k: int,
+    activation: str, has_bias: bool, has_residual: bool,
 ):
+    it = iter(refs)
+    a_ref, b_ref = next(it), next(it)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref, acc_ref = next(it), next(it)
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -60,24 +76,23 @@ def _gemm_kernel(
     @pl.when(pl.program_id(2) == n_k - 1)
     def _emit():
         r = acc_ref[...]
+        # fused epilogue: act(acc + bias) + residual, all in f32 in VMEM
+        if has_bias:
+            r = r + bias_ref[...].astype(jnp.float32)
+        r = _apply_activation(r, activation)
+        if has_residual:
+            r = r + res_ref[...].astype(jnp.float32)
         if isinstance(out_fmt, PositFmt):
             o_ref[...] = posit_encode(r, out_fmt.nbits, es_ref[2])
         else:
             o_ref[...] = r.astype(o_ref.dtype)
 
 
-def _pad_to(x: jax.Array, mults: tuple) -> jax.Array:
-    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
-    if any(p[1] for p in pads):
-        x = jnp.pad(x, pads)  # 0-codes decode to 0.0 -> contribute nothing
-    return x
-
-
 @functools.partial(
     jax.jit,
     static_argnames=(
         "a_fmt", "b_fmt", "out_fmt", "block_m", "block_n", "block_k",
-        "compute_dtype_name", "interpret",
+        "compute_dtype_name", "activation", "interpret",
     ),
 )
 def posit_gemm(
@@ -88,48 +103,78 @@ def posit_gemm(
     a_fmt: Fmt,
     b_fmt: Fmt,
     out_fmt: Fmt,
+    bias: Optional[jax.Array] = None,      # (N,) f32
+    residual: Optional[jax.Array] = None,  # (M, N) float
+    activation: str = "none",
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 512,
     compute_dtype_name: Optional[str] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """O = decode(A) @ decode(B), encoded per out_fmt. A: (M, K), B: (K, N)."""
+    """O = epilogue(decode(A) @ decode(B)), encoded per out_fmt.
+
+    A: (M, K), B: (K, N); epilogue = ``act(acc + bias) + residual`` fused
+    into the last k step (one kernel launch, one HBM write per layer).
+    """
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"activation must be one of {ACTIVATIONS}, got {activation!r}")
     if compute_dtype_name is None:
         ca, cb = compute_dtype_for(a_fmt), compute_dtype_for(b_fmt)
         compute_dtype = ca if ca == cb else jnp.float32
     else:
         compute_dtype = jnp.dtype(compute_dtype_name)
 
-    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
-    a_p = _pad_to(a, (bm, bk))
-    b_p = _pad_to(b, (bk, bn))
-    Mp, Kp = a_p.shape
-    _, Np = b_p.shape
-    grid = (Mp // bm, Np // bn, Kp // bk)
-
     if isinstance(out_fmt, PositFmt):
         out_dtype = jnp.uint8 if out_fmt.nbits == 8 else jnp.uint16
     else:
         out_dtype = out_fmt.dtype
 
+    # Lane/sublane-friendly blocks: bm is a sublane dim for *every* array
+    # blocked on it (A, the f32 acc/residual, and the output — whose dtype
+    # may be narrower than A's), bk a lane dim for A and sublane for B,
+    # bn a lane dim for B/out.
+    m_mult = max(sublane(a.dtype), sublane(out_dtype), 8)
+    k_mult = max(LANE, sublane(b.dtype))
+    bm = round_block(M, block_m, m_mult)
+    bn = round_block(N, block_n, LANE)
+    bk = round_block(K, block_k, k_mult)
+    a_p = pad_to(a, (bm, bk))
+    b_p = pad_to(b, (bk, bn))
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    grid = (Mp // bm, Np // bn, Kp // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
+    ]
+    inputs = [a_p, b_p]
+    if bias is not None:
+        assert bias.shape == (N,), (bias.shape, N)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k, s: (0, j)))
+        inputs.append(pad_to(bias.astype(jnp.float32)[None, :], (1, bn)))
+    if residual is not None:
+        assert residual.shape == (M, N), (residual.shape, (M, N))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)))
+        inputs.append(pad_to(residual.astype(jnp.float32), (bm, bn)))
+
     kernel = functools.partial(
         _gemm_kernel,
         a_fmt=a_fmt, b_fmt=b_fmt, out_fmt=out_fmt,
         compute_dtype=compute_dtype, n_k=grid[2],
+        activation=activation, has_bias=bias is not None,
+        has_residual=residual is not None,
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
-                pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         ),
@@ -138,5 +183,5 @@ def posit_gemm(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(jnp.asarray(es, jnp.int32), a_p, b_p)
+    )(jnp.asarray(es, jnp.int32), *inputs)
     return out[:M, :N]

@@ -1,16 +1,22 @@
 """Pure-jnp oracle for the fused posit GEMM kernel (untiled, same math)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.codec import posit_decode, posit_encode
+from repro.core.dot import apply_epilogue
 from repro.core.types import Fmt, PositFmt, compute_dtype_for
 
 
 def posit_gemm_ref(
     a: jax.Array, b: jax.Array, es,  # (3,) int32
     *, a_fmt: Fmt, b_fmt: Fmt, out_fmt: Fmt, compute_dtype_name=None,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: str = "none",
 ) -> jax.Array:
     if compute_dtype_name is None:
         ca, cb = compute_dtype_for(a_fmt), compute_dtype_for(b_fmt)
@@ -24,6 +30,8 @@ def posit_gemm_ref(
         af.astype(compute_dtype), bf.astype(compute_dtype),
         preferred_element_type=jnp.float32,
     )
+    if bias is not None or activation != "none" or residual is not None:
+        y = apply_epilogue(y, bias, activation, residual)
     if isinstance(out_fmt, PositFmt):
         return posit_encode(y, out_fmt.nbits, es[2])
     return y.astype(out_fmt.dtype)

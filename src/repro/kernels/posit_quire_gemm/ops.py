@@ -27,11 +27,16 @@ def quire_gemm(
     slots: OperandSlots,
     *,
     es_a=None, es_b=None, es_out=None,
+    bias=None, activation: str = "none", residual=None,
     impl: str = "auto",
     interpret: bool | None = None,
     **block_kw,
 ) -> jax.Array:
-    """O = round_once(sum decode(A)*decode(B)) per the pcsr operand slots."""
+    """O = round_once(sum decode(A)*decode(B)) per the pcsr operand slots.
+
+    With an epilogue (bias/activation/residual) the exact sum is rounded
+    once into f32, the epilogue applies, and the result encodes — fused
+    into the kernel's readout step (DESIGN.md §8)."""
     for name, f in (("rs1", slots.rs1), ("rs2", slots.rs2), ("rd", slots.rd)):
         if not isinstance(f, PositFmt):
             raise ValueError(
@@ -54,9 +59,11 @@ def quire_gemm(
         return posit_quire_gemm(
             a, b, es,
             a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+            bias=bias, activation=activation, residual=residual,
             interpret=interpret, **block_kw,
         )
     if impl == "xla":
         return posit_quire_gemm_ref(
-            a, b, es, a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd)
+            a, b, es, a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+            bias=bias, activation=activation, residual=residual)
     raise ValueError(f"unknown impl {impl!r}")

@@ -38,22 +38,30 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import LANE, pad_to, round_block, sublane, tpu_compiler_params
 
-from repro.core.codec import _decode_fields, _es_u32
+from repro.core.codec import _decode_fields, _es_u32, posit_encode
+from repro.core.dot import ACTIVATIONS, _apply_activation
 from repro.core.quire import (
     MAX_DEFERRED, QuireFmt, _product_parts, _scatter, quire_normalize,
-    quire_read,
+    quire_read, quire_read_f32,
 )
 from repro.core.types import PositFmt
 
 
 def _quire_gemm_kernel(
     es_ref,  # scalar prefetch: (3,) int32 = es for rs1, rs2, rd
-    a_ref, b_ref, o_ref, q_ref,
-    *, a_fmt: PositFmt, b_fmt: PositFmt, out_fmt: PositFmt,
+    *refs,
+    a_fmt: PositFmt, b_fmt: PositFmt, out_fmt: PositFmt,
     qfmt: QuireFmt, n_k: int, block_k: int,
+    activation: str, has_bias: bool, has_residual: bool,
 ):
+    it = iter(refs)
+    a_ref, b_ref = next(it), next(it)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref, q_ref = next(it), next(it)
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         q_ref[...] = jnp.zeros_like(q_ref)
@@ -76,22 +84,28 @@ def _quire_gemm_kernel(
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _emit():
-        o_ref[...] = quire_read(q_ref[...], qfmt,
-                                out_nbits=out_fmt.nbits, es_out=es_ref[2])
-
-
-def _pad_to(x: jax.Array, mults: tuple) -> jax.Array:
-    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
-    if any(p[1] for p in pads):
-        x = jnp.pad(x, pads)  # 0-codes contribute nothing to a quire
-    return x
+        if not (has_bias or has_residual or activation != "none"):
+            # no epilogue: exact single rounding straight into the posit rd
+            o_ref[...] = quire_read(q_ref[...], qfmt,
+                                    out_nbits=out_fmt.nbits, es_out=es_ref[2])
+            return
+        # fused epilogue readout: one exact rounding into f32 (the FPU
+        # domain the epilogue computes in), then the output encode —
+        # still one launch and one HBM write (DESIGN.md §8)
+        r = quire_read_f32(q_ref[...], qfmt)
+        if has_bias:
+            r = r + bias_ref[...].astype(jnp.float32)
+        r = _apply_activation(r, activation)
+        if has_residual:
+            r = r + res_ref[...].astype(jnp.float32)
+        o_ref[...] = posit_encode(r, out_fmt.nbits, es_ref[2])
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "a_fmt", "b_fmt", "out_fmt", "block_m", "block_n", "block_k",
-        "interpret",
+        "activation", "interpret",
     ),
 )
 def posit_quire_gemm(
@@ -102,6 +116,9 @@ def posit_quire_gemm(
     a_fmt: PositFmt,
     b_fmt: PositFmt,
     out_fmt: PositFmt,
+    bias: jax.Array = None,      # (N,) f32
+    residual: jax.Array = None,  # (M, N) float
+    activation: str = "none",
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 512,
@@ -110,41 +127,65 @@ def posit_quire_gemm(
     """O = round_once(sum_k decode(A)[i,k] * decode(B)[k,j]), all-posit slots.
 
     A: (M, K), B: (K, N) posit codes -> (M, N) posit codes in ``out_fmt``.
-    The (bm, bn) quire limbs live in VMEM scratch across the k grid.
+    The (bm, bn) quire limbs live in VMEM scratch across the k grid.  With an
+    epilogue (bias/activation/residual) the readout is one exact RNE into
+    f32, the epilogue applies in-register, and the encode emits — still a
+    single launch and HBM write.
     """
     for f in (a_fmt, b_fmt, out_fmt):
         if not isinstance(f, PositFmt):
             raise ValueError(f"quire GEMM requires posit slots, got {f}")
-    if block_k > MAX_DEFERRED:
-        raise ValueError(f"block_k {block_k} exceeds lazy-carry budget "
-                         f"{MAX_DEFERRED}")
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"activation must be one of {ACTIVATIONS}, got {activation!r}")
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
     qfmt = QuireFmt(max(a_fmt.nbits, b_fmt.nbits))
 
-    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
-    a_p = _pad_to(a, (bm, bk))
-    b_p = _pad_to(b, (bk, bn))
+    out_dtype = jnp.uint8 if out_fmt.nbits == 8 else jnp.uint16
+    # lane/sublane-friendly blocks (see posit_gemm): round up + pad, never
+    # ragged-shrink; bm must satisfy every array blocked on it (A codes,
+    # f32 residual, int32 quire scratch, and the — possibly narrower —
+    # output codes).  bk stays within the lazy-carry budget.
+    bm = round_block(M, block_m, max(sublane(a.dtype), sublane(out_dtype), 8))
+    bn = round_block(N, block_n, LANE)
+    bk = round_block(K, block_k, max(LANE, sublane(b.dtype)))
+    if bk > MAX_DEFERRED:
+        raise ValueError(f"block_k {bk} exceeds lazy-carry budget "
+                         f"{MAX_DEFERRED}")
+    a_p = pad_to(a, (bm, bk))
+    b_p = pad_to(b, (bk, bn))
     Mp, Kp = a_p.shape
     _, Np = b_p.shape
     grid = (Mp // bm, Np // bn, Kp // bk)
 
-    out_dtype = jnp.uint8 if out_fmt.nbits == 8 else jnp.uint16
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
+    ]
+    inputs = [a_p, b_p]
+    if bias is not None:
+        assert bias.shape == (N,), (bias.shape, N)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k, s: (0, j)))
+        inputs.append(pad_to(bias.astype(jnp.float32)[None, :], (1, bn)))
+    if residual is not None:
+        assert residual.shape == (M, N), (residual.shape, (M, N))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)))
+        inputs.append(pad_to(residual.astype(jnp.float32), (bm, bn)))
+
     kernel = functools.partial(
         _quire_gemm_kernel,
         a_fmt=a_fmt, b_fmt=b_fmt, out_fmt=out_fmt,
         qfmt=qfmt, n_k=grid[2], block_k=bk,
+        activation=activation, has_bias=bias is not None,
+        has_residual=residual is not None,
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
-                pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)),
             scratch_shapes=[pltpu.VMEM((bm, bn, qfmt.limbs_axis), jnp.int32)],
         ),
@@ -153,5 +194,5 @@ def posit_quire_gemm(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(jnp.asarray(es, jnp.int32), a_p, b_p)
+    )(jnp.asarray(es, jnp.int32), *inputs)
     return out[:M, :N]

@@ -6,9 +6,13 @@ against the Fraction-arithmetic exact-sum oracle in tests/test_quire.py.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.codec import posit_encode
+from repro.core.dot import apply_epilogue
 from repro.core.quire import quire_matmul
 from repro.core.types import PositFmt
 
@@ -16,9 +20,17 @@ from repro.core.types import PositFmt
 def posit_quire_gemm_ref(
     a: jax.Array, b: jax.Array, es,  # (3,) int32
     *, a_fmt: PositFmt, b_fmt: PositFmt, out_fmt: PositFmt,
+    bias: Optional[jax.Array] = None,
+    residual: Optional[jax.Array] = None,
+    activation: str = "none",
 ) -> jax.Array:
     es = jnp.asarray(es, jnp.int32)
     wide = a_fmt if a_fmt.nbits >= b_fmt.nbits else b_fmt
-    return quire_matmul(a, b, wide, es_a=es[0], es_b=es[1],
-                        nbits_a=a_fmt.nbits, nbits_b=b_fmt.nbits,
-                        out_nbits=out_fmt.nbits, es_out=es[2])
+    kw = dict(es_a=es[0], es_b=es[1],
+              nbits_a=a_fmt.nbits, nbits_b=b_fmt.nbits)
+    if bias is None and activation == "none" and residual is None:
+        return quire_matmul(a, b, wide, out_nbits=out_fmt.nbits,
+                            es_out=es[2], **kw)
+    y = quire_matmul(a, b, wide, as_float=True, **kw)
+    y = apply_epilogue(y, bias, activation, residual)
+    return posit_encode(y, out_fmt.nbits, es[2])

@@ -5,10 +5,17 @@
 
 Reports tokens/s and the KV-cache HBM footprint under the selected pcsr policy
 (the paper's Table-IV memory-savings, at the serving bottleneck).
+
+``--codec-impl`` selects the codec lowering (auto | lut | bits — the
+table-driven fast path vs the bit pipeline, repro.core.lut) and
+``--epilogue`` the layer dataflow (fused keeps gemm->bias->act->residual->
+encode in one op per layer; chained materializes each stage, the baseline
+bench_epilogue_fusion measures against).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -34,13 +41,17 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default="none")
+    ap.add_argument("--codec-impl", default="auto", choices=("auto", "lut", "bits"))
+    ap.add_argument("--epilogue", default="fused", choices=("fused", "chained"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    policy = _parse_policy(args.policy)
+    policy = dataclasses.replace(
+        _parse_policy(args.policy),
+        codec_impl=args.codec_impl, epilogue=args.epilogue)
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
     S_max = args.prompt_len + args.gen

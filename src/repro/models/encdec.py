@@ -91,7 +91,7 @@ def encode(params: dict, frames: jax.Array, cfg: ModelCfg,
         h = apply_layernorm(p["ln1"], x)
         x = x + attn.apply_attention(p["attn"], ecfg, h, policy)
         h = apply_layernorm(p["ln2"], x)
-        return x + apply_gelu_mlp(p["mlp"], h, policy), None
+        return apply_gelu_mlp(p["mlp"], h, policy, residual=x), None
 
     fn = jax.checkpoint(body) if remat else body
     x, _ = scan_or_unroll(fn, x, params["enc_blocks"])
@@ -116,7 +116,7 @@ def decode_train(params: dict, tokens: jax.Array, enc_out: jax.Array,
         x = x + attn.apply_attention(p["cross"], ccfg, h, policy,
                                      xattn_kv=enc_out)
         h = apply_layernorm(p["ln3"], x)
-        return x + apply_gelu_mlp(p["mlp"], h, policy), None
+        return apply_gelu_mlp(p["mlp"], h, policy, residual=x), None
 
     fn = jax.checkpoint(body) if remat else body
     x, _ = scan_or_unroll(fn, x, params["dec_blocks"])
@@ -179,7 +179,7 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
         a2, _ = attn.decode_attention_step(p["cross"], ccfg, h, ccross, pos, policy)
         x2 = x2 + a2
         h = apply_layernorm(p["ln3"], x2)
-        return x2 + apply_gelu_mlp(p["mlp"], h, policy), c2
+        return apply_gelu_mlp(p["mlp"], h, policy, residual=x2), c2
 
     x, new_self = scan_or_unroll(
         body, x, (params["dec_blocks"], cache["self"], cache["cross"]))

@@ -188,9 +188,11 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelCfg,
                 y, aux_l = moe_mod.apply_moe(
                     p["moe"], h, top_k=cfg.top_k,
                     capacity_factor=cfg.capacity_factor, policy=policy)
+                y = x + y
             else:
-                y, aux_l = apply_swiglu(p["mlp"], h, policy), 0.0
-            return (x + y, aux + aux_l), None
+                # block residual fuses into the down-projection epilogue
+                y, aux_l = apply_swiglu(p["mlp"], h, policy, residual=x), 0.0
+            return (y, aux + aux_l), None
 
         fn = jax.checkpoint(body) if remat else body
         (x, aux_total), _ = scan_or_unroll(
@@ -212,7 +214,7 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelCfg,
             h = apply_rmsnorm(sp["ln1"], x, cfg.norm_eps)
             x = x + attn.apply_attention(sp["attn"], acfg, h, policy)
             h = apply_rmsnorm(sp["ln2"], x, cfg.norm_eps)
-            return x + apply_swiglu(sp["mlp"], h, policy)
+            return apply_swiglu(sp["mlp"], h, policy, residual=x)
 
         if remat:
             shared_body = jax.checkpoint(shared_body)

@@ -1,0 +1,251 @@
+"""Fused GEMM epilogue: kernels vs oracles, layers vs chained baseline.
+
+Bit-exactness contract: epilogues without transcendental activations
+(none/relu, bias, residual) are bit-exact between the Pallas kernels and
+their jnp oracles; gelu/silu are allowed one posit-code ulp (XLA fuses the
+surrounding multiply chain differently across lowering contexts — the same
+tolerance the softmax kernel tests use).  The quire kernel's epilogue readout
+is exact for any tiling, so it is compared bit-exactly for every activation
+modulo that same transcendental caveat."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import F32, P8_0, P16_1, TransPolicy
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.dot import posit_dot, posit_matmul_wx
+from repro.core.pcsr import OperandSlots as OS
+from repro.kernels.posit_gemm.posit_gemm import posit_gemm
+from repro.kernels.posit_gemm.ref import posit_gemm_ref
+from repro.kernels.posit_quire_gemm.posit_quire_gemm import posit_quire_gemm
+from repro.kernels.posit_quire_gemm.ref import posit_quire_gemm_ref
+from repro.models.layers import apply_gelu_mlp, apply_linear, apply_swiglu, init_linear, init_swiglu, init_gelu_mlp, quantize_linear
+
+EXACT_ACTS = ("none", "relu")
+TRANS_ACTS = ("gelu", "silu")
+
+
+def _mk(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32)),
+            jnp.asarray(rng.normal(0, 1, (k, n)).astype(np.float32)),
+            jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
+            jnp.asarray(rng.normal(0, 1, (m, n)).astype(np.float32)))
+
+
+def _code_ulp_diff(got, want, nbits):
+    """Max distance in signed code space (posit codes are value-ordered)."""
+    full, half = 1 << nbits, 1 << (nbits - 1)
+    sg = np.asarray(got).astype(np.int64)
+    sw = np.asarray(want).astype(np.int64)
+    sg = np.where(sg >= half, sg - full, sg)
+    sw = np.where(sw >= half, sw - full, sw)
+    return np.abs(sg - sw).max()
+
+
+# ------------------------------------------------------ posit_gemm kernel -----
+@pytest.mark.parametrize("fmt", [P8_0, P16_1])
+@pytest.mark.parametrize("act", EXACT_ACTS)
+def test_gemm_kernel_epilogue_bitexact(fmt, act):
+    a, b, bias, res = _mk(32, 48, 24, seed=1)
+    ac, bc = posit_encode(a, fmt.nbits, fmt.es), posit_encode(b, fmt.nbits, fmt.es)
+    esv = jnp.asarray([fmt.es] * 3, jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    for use_b in (None, bias):
+        for use_r in (None, res):
+            got = posit_gemm(ac, bc, esv, interpret=True, block_m=32,
+                             block_n=24, block_k=64, bias=use_b,
+                             residual=use_r, activation=act, **kw)
+            want = posit_gemm_ref(ac, bc, esv, bias=use_b, residual=use_r,
+                                  activation=act, **kw)
+            assert (np.asarray(got) == np.asarray(want)).all(), \
+                (fmt, act, use_b is not None, use_r is not None)
+
+
+@pytest.mark.parametrize("fmt", [P8_0, P16_1])
+@pytest.mark.parametrize("act", TRANS_ACTS)
+def test_gemm_kernel_epilogue_transcendental_1ulp(fmt, act):
+    a, b, bias, res = _mk(32, 48, 24, seed=2)
+    ac, bc = posit_encode(a, fmt.nbits, fmt.es), posit_encode(b, fmt.nbits, fmt.es)
+    esv = jnp.asarray([fmt.es] * 3, jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    got = posit_gemm(ac, bc, esv, interpret=True, block_m=32, block_n=24,
+                     block_k=64, bias=bias, residual=res, activation=act, **kw)
+    want = posit_gemm_ref(ac, bc, esv, bias=bias, residual=res,
+                          activation=act, **kw)
+    assert _code_ulp_diff(got, want, fmt.nbits) <= 1
+
+
+def test_gemm_kernel_epilogue_float_out():
+    a, b, bias, res = _mk(32, 48, 24, seed=3)
+    ac = posit_encode(a, 8, 0)
+    esv = jnp.asarray([0, 0, 0], jnp.int32)
+    got = posit_gemm(ac, b, esv, interpret=True, a_fmt=P8_0, b_fmt=F32,
+                     out_fmt=F32, block_m=32, block_n=24, block_k=64,
+                     bias=bias, residual=res, activation="relu")
+    want = posit_gemm_ref(ac, b, esv, a_fmt=P8_0, b_fmt=F32, out_fmt=F32,
+                          bias=bias, residual=res, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_kernel_epilogue_multitile():
+    """bias/residual BlockSpecs must index correctly across a multi-tile grid."""
+    fmt = P16_1
+    a, b, bias, res = _mk(100, 130, 50, seed=4)
+    ac, bc = posit_encode(a, 16, 1), posit_encode(b, 16, 1)
+    esv = jnp.asarray([1, 1, 1], jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    got = posit_gemm(ac, bc, esv, interpret=True, block_m=32, block_n=128,
+                     block_k=128, bias=bias, residual=res, activation="relu", **kw)
+    want = posit_gemm_ref(ac, bc, esv, bias=bias, residual=res,
+                          activation="relu", **kw)
+    # multi-k-tile accumulation order may flip the last posit rounding
+    assert _code_ulp_diff(got, want, 16) <= 1
+
+
+# ------------------------------------------------ posit_quire_gemm kernel -----
+@pytest.mark.parametrize("act", EXACT_ACTS)
+def test_quire_kernel_epilogue_bitexact_any_tiling(act):
+    """Quire accumulation is exact, so tiling cannot shift the epilogue:
+    kernel == oracle bit-for-bit even multi-tile."""
+    fmt = P16_1
+    a, b, bias, res = _mk(32, 48, 24, seed=5)
+    ac, bc = posit_encode(a, 16, 1), posit_encode(b, 16, 1)
+    esv = jnp.asarray([1, 1, 1], jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    got = posit_quire_gemm(ac, bc, esv, interpret=True, block_m=16,
+                           block_n=16, block_k=16, bias=bias, residual=res,
+                           activation=act, **kw)
+    want = posit_quire_gemm_ref(ac, bc, esv, bias=bias, residual=res,
+                                activation=act, **kw)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_quire_kernel_no_epilogue_unchanged():
+    """Without an epilogue the readout stays the exact quire->posit path."""
+    fmt = P16_1
+    a, b, _, _ = _mk(16, 32, 16, seed=6)
+    ac, bc = posit_encode(a, 16, 1), posit_encode(b, 16, 1)
+    esv = jnp.asarray([1, 1, 1], jnp.int32)
+    kw = dict(a_fmt=fmt, b_fmt=fmt, out_fmt=fmt)
+    got = posit_quire_gemm(ac, bc, esv, interpret=True, **kw)
+    want = posit_quire_gemm_ref(ac, bc, esv, **kw)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# -------------------------------------------------------------- posit_dot -----
+@pytest.mark.parametrize("impl", ["fused", "unfused"])
+def test_posit_dot_epilogue_fused_equals_chained(impl):
+    """epilogue='chained' only reorders the schedule (barriers), never values."""
+    a, b, bias, res = _mk(24, 40, 16, seed=7)
+    ac, bc = posit_encode(a, 16, 1), posit_encode(b, 16, 1)
+    slots = OS(rs1=P16_1, rs2=P16_1, rd=P16_1)
+    outs = [posit_dot(ac, bc, slots, impl=impl, bias=bias, activation="gelu",
+                      residual=res, epilogue=mode)
+            for mode in ("fused", "chained")]
+    assert (np.asarray(outs[0]) == np.asarray(outs[1])).all()
+
+
+def test_posit_dot_quire_epilogue():
+    """Quire dataflow + epilogue: exact accumulation, then f32 epilogue."""
+    from repro.core.quire import quire_matmul
+
+    a, b, bias, res = _mk(12, 64, 8, seed=8)
+    ac, bc = posit_encode(a, 16, 1), posit_encode(b, 16, 1)
+    slots = OS.uniform(P16_1, dataflow="quire")
+    got = posit_dot(ac, bc, slots, bias=bias, activation="relu", residual=res)
+    y = quire_matmul(ac, bc, P16_1, as_float=True)
+    want = posit_encode(jnp.maximum(y + bias, 0.0) + res, 16, 1)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_posit_matmul_wx_epilogue_encode():
+    a, b, bias, res = _mk(24, 40, 16, seed=9)
+    wc = posit_encode(b, 8, 0)
+    got = posit_matmul_wx(a, wc, P8_0, bias=bias, activation="relu",
+                          residual=res, out_fmt=P8_0,
+                          compute_dtype=jnp.float32)
+    y = jnp.matmul(a, posit_decode(wc, 8, 0).astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    want = posit_encode(jnp.maximum(y + bias, 0.0) + res, 8, 0)
+    assert got.dtype == jnp.uint8
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# ------------------------------------------------------------ model layers ----
+def test_apply_linear_fused_matches_manual():
+    key = jax.random.key(0)
+    p = init_linear(key, 32, 16, bias=True)
+    pol = TransPolicy.from_names(weights="p8_0")
+    q = quantize_linear(p, pol.weights)
+    x = jax.random.normal(jax.random.key(1), (4, 32), jnp.float32)
+    res = jax.random.normal(jax.random.key(2), (4, 16), jnp.float32)
+    got = apply_linear(q, x, pol, activation="relu", residual=res)
+    w = posit_decode(q["w_codes"], 8, 0).astype(jnp.float32)
+    want = (jnp.maximum(x @ w + q["b"], 0.0) + res).astype(x.dtype)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_apply_linear_chained_policy_same_values():
+    key = jax.random.key(3)
+    p = init_linear(key, 16, 24, bias=True)
+    x = jax.random.normal(jax.random.key(4), (8, 16), jnp.float32)
+    pol_f = TransPolicy.from_names(weights="p16_1")
+    pol_c = TransPolicy.from_names(weights="p16_1", epilogue="chained")
+    q = quantize_linear(p, pol_f.weights)
+    yf = apply_linear(q, x, pol_f, activation="gelu")
+    yc = apply_linear(q, x, pol_c, activation="gelu")
+    assert (np.asarray(yf) == np.asarray(yc)).all()
+
+
+def test_swiglu_and_gelu_mlp_residual_fusion():
+    """MLP outputs must equal the unfused reference computation."""
+    key = jax.random.key(5)
+    pol = TransPolicy()
+    x = jax.random.normal(jax.random.key(6), (2, 8, 16), jnp.float32)
+
+    ps = init_swiglu(key, 16, 32)
+    got = apply_swiglu(ps, x, pol, residual=x)
+    g = x @ ps["gate"]["w"]
+    u = x @ ps["up"]["w"]
+    want = (jax.nn.silu(g) * u) @ ps["down"]["w"] + x
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+    pg = init_gelu_mlp(key, 16, 32)
+    got = apply_gelu_mlp(pg, x, pol, residual=x)
+    h = jax.nn.gelu(x @ pg["up"]["w"] + pg["up"]["b"])
+    want = h @ pg["down"]["w"] + pg["down"]["b"] + x
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------- block-size rounding ----
+@pytest.mark.parametrize("M,K,N", [(4, 520, 4), (3, 7, 5), (17, 100, 33)])
+def test_gemm_small_dims_hardware_friendly_blocks(M, K, N):
+    """min(block, dim) used to hand Mosaic ragged sub-lane tiles for small
+    dims; blocks now round up to (sublane, lane) multiples and pad."""
+    rng = np.random.default_rng(10)
+    a = jnp.asarray(rng.normal(0, 1, (M, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (K, N)).astype(np.float32))
+    ac, bc = posit_encode(a, 8, 2), posit_encode(b, 8, 2)
+    esv = jnp.asarray([2, 2, 2], jnp.int32)
+    kw = dict(a_fmt=P8_0.with_es(2), b_fmt=P8_0.with_es(2),
+              out_fmt=P8_0.with_es(2))
+    got = posit_gemm(ac, bc, esv, interpret=True, **kw)
+    want = posit_gemm_ref(ac, bc, esv, **kw)
+    assert _code_ulp_diff(got, want, 8) <= 1
+    assert got.shape == (M, N)
+
+
+def test_round_block_properties():
+    from repro.kernels import round_block, sublane
+
+    assert sublane(jnp.uint8) == 32
+    assert sublane(jnp.uint16) == 16
+    assert sublane(jnp.float32) == 8
+    for dim, block, mult in [(4, 256, 8), (300, 256, 128), (17, 64, 32)]:
+        r = round_block(dim, block, mult)
+        assert r % mult == 0 and r >= min(block, dim)

@@ -1,0 +1,185 @@
+"""Exhaustive equivalence: table-driven codec (repro.core.lut) vs bit pipeline.
+
+The LUT decode tables and the bucketize-encode boundaries are constructed by
+an independent numpy mirror; these tests close the loop by comparing every
+reachable input against the jnp bit pipeline (itself validated exhaustively
+against the Fraction oracle in test_codec.py).  Decode comparisons are at the
+bit-pattern level (NaN payloads included)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import codec, lut
+from repro.core.pcsr import OperandSlots as OS, TransPolicy
+from repro.core.types import P8_0, P16_1
+
+ALL_ES = (0, 1, 2, 3)
+
+
+def _bits(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float32).view(np.uint32)
+
+
+# ----------------------------------------------------------- decode: p8 -------
+@pytest.mark.parametrize("es", ALL_ES)
+def test_lut_decode_p8_exhaustive(es):
+    codes = jnp.asarray(np.arange(256, dtype=np.uint8))
+    got = lut.lut_decode_p8(codes, es)
+    want = codec.posit_decode(codes, 8, es)
+    assert (_bits(got) == _bits(want)).all()
+
+
+def test_lut_decode_p8_bf16_castable():
+    """Every p8 table entry survives the f32 -> bf16 cast losslessly (the
+    full-MXU-speed decode contract, DESIGN.md §2)."""
+    tab = lut._p8_decode_table()
+    # round-trip through bf16 via jnp (numpy has no bf16)
+    rt = np.asarray(jnp.asarray(tab).astype(jnp.bfloat16).astype(jnp.float32))
+    ok = (rt == tab) | (np.isnan(rt) & np.isnan(tab))
+    assert ok.all()
+
+
+# ----------------------------------------------------------- decode: p16 ------
+@pytest.mark.parametrize("es", ALL_ES)
+def test_lut_decode_p16_exhaustive(es):
+    codes = jnp.asarray(np.arange(65536, dtype=np.uint16))
+    got = lut.lut_decode_p16(codes, es)
+    want = codec.posit_decode(codes, 16, es)
+    assert (_bits(got) == _bits(want)).all()
+
+
+def test_p16_split_table_is_small():
+    """The point of the two-level split: far below a flat 256 KB p16 table."""
+    l1b, l1s, lo = lut._p16_decode_tables()
+    total = l1b.nbytes + l1s.nbytes + lo.nbytes
+    assert total < 128 * 1024, total
+    # and the fallback second level covers at most 16 high bytes per es
+    assert lo.shape[1] <= 16
+
+
+# ------------------------------------------------------------- encode: p8 -----
+def _encode_sweep() -> np.ndarray:
+    """Dense f32 sweep: every rounding boundary +-1 ulp for every es (both
+    lattices), powers of two across the range, random normals at several
+    scales, subnormals, +-0, NaN/Inf."""
+    rng = np.random.default_rng(42)
+    parts = [
+        np.array([0.0, -0.0, np.inf, -np.inf, np.nan], np.float32),
+        (np.float32(2.0) ** rng.integers(-60, 60, 4000)
+         * rng.choice([-1, 1], 4000)).astype(np.float32),
+        rng.normal(0, 1, 20000).astype(np.float32),
+        rng.normal(0, 1e14, 4000).astype(np.float32),   # saturation region
+        rng.normal(0, 1e-14, 4000).astype(np.float32),  # sub-minpos region
+        np.array([1e-45, -1e-45, 1e-40, -1e-40, 2.0 ** -149, -(2.0 ** -149),
+                  2.0 ** -126, -(2.0 ** -126)], np.float32),  # subnormals
+    ]
+    for es in ALL_ES:
+        for ftz in (False, True):
+            mids = lut._p8_encode_tables(ftz)[1][es]
+            parts += [mids, np.nextafter(mids, np.float32(np.inf)),
+                      np.nextafter(mids, np.float32(-np.inf))]
+    return np.concatenate(parts).astype(np.float32)
+
+
+@pytest.mark.parametrize("es", ALL_ES)
+@pytest.mark.parametrize("ftz", [False, True])
+def test_lut_encode_p8_dense_sweep(es, ftz):
+    xs = jnp.asarray(_encode_sweep())
+    got = np.asarray(lut.lut_encode_p8(xs, es, ftz=ftz))
+    want = np.asarray(codec.posit_encode(xs, 8, es, ftz=ftz))
+    bad = got != want
+    assert not bad.any(), (np.asarray(xs)[bad][:10], got[bad][:10], want[bad][:10])
+
+
+@pytest.mark.parametrize("es", ALL_ES)
+def test_lut_encode_p8_roundtrip_fixed_points(es):
+    """encode(decode(c)) == c through the LUT pair for every code."""
+    codes = jnp.asarray(np.arange(256, dtype=np.uint8))
+    dec = lut.lut_decode_p8(codes, es)
+    enc = np.asarray(lut.lut_encode_p8(dec, es))
+    assert (enc == np.asarray(codes)).all()
+
+
+def test_encode_boundaries_are_p9_values():
+    """The bucketize boundaries are the encoding-level rounding flip points:
+    the odd codes of P(9, es) interleaving the p8 lattice (DESIGN.md §8) —
+    *not* arithmetic midpoints, which differ wherever discarded bits include
+    exponent bits.  Spot-check the known divergence: p8/es=1 rounds 2^-11 up
+    to 2^-10 (the encoding tie) although minpos=2^-12 is nearer in value."""
+    got = int(np.asarray(codec.posit_encode(jnp.float32(2.0 ** -11), 8, 1)))
+    assert got == 2  # 2^-10, the even-body side of the encoding tie
+    assert int(np.asarray(lut.lut_encode_p8(jnp.float32(2.0 ** -11), 1))) == 2
+
+
+# ------------------------------------------------------------- dynamic es -----
+def test_lut_dynamic_es_single_executable():
+    traces = []
+
+    @jax.jit
+    def dec(c, es):
+        traces.append(1)
+        return lut.lut_decode_p16(c, es)
+
+    codes = jnp.asarray(np.arange(65536, dtype=np.uint16))
+    for es in ALL_ES:
+        got = np.asarray(dec(codes, jnp.int32(es)))
+        want = np.asarray(codec.posit_decode(codes, 16, es))
+        assert (got.view(np.uint32) == want.view(np.uint32)).all()
+    assert len(traces) == 1, "dynamic es must not retrace"
+
+
+# ------------------------------------------------------- dispatch / pcsr ------
+def test_codec_impl_validation():
+    with pytest.raises(ValueError):
+        lut.resolve_codec_impl("nope")
+    with pytest.raises(ValueError):
+        OS(codec_impl="nope")
+    with pytest.raises(ValueError):
+        TransPolicy(codec_impl="nope")
+    with pytest.raises(ValueError):
+        TransPolicy(epilogue="nope")
+
+
+def test_decode_with_impl_agrees_across_impls():
+    rng = np.random.default_rng(0)
+    c8 = jnp.asarray(rng.integers(0, 256, 500).astype(np.uint8))
+    c16 = jnp.asarray(rng.integers(0, 65536, 500).astype(np.uint16))
+    for es in ALL_ES:
+        for impl in ("auto", "lut", "bits"):
+            assert (_bits(lut.decode_with_impl(c8, 8, es, impl))
+                    == _bits(codec.posit_decode(c8, 8, es))).all()
+            assert (_bits(lut.decode_with_impl(c16, 16, es, impl))
+                    == _bits(codec.posit_decode(c16, 16, es))).all()
+
+
+def test_encode_with_impl_agrees_across_impls():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 8, 2000).astype(np.float32))
+    for es in ALL_ES:
+        want8 = np.asarray(codec.posit_encode(x, 8, es))
+        want16 = np.asarray(codec.posit_encode(x, 16, es))
+        for impl in ("auto", "lut", "bits"):
+            assert (np.asarray(lut.encode_with_impl(x, 8, es, impl)) == want8).all()
+            assert (np.asarray(lut.encode_with_impl(x, 16, es, impl)) == want16).all()
+
+
+def test_posit_dot_codec_impl_bit_identical():
+    """The pcsr codec_impl knob changes lowering, never values."""
+    from repro.core.dot import posit_dot
+
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(0, 1, (16, 32)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (32, 8)).astype(np.float32))
+    ac = codec.posit_encode(a, 8, 0)
+    bc = codec.posit_encode(b, 8, 0)
+    outs = []
+    for impl in ("lut", "bits", "auto"):
+        slots = OS(rs1=P8_0, rs2=P8_0, rd=P8_0, codec_impl=impl)
+        outs.append(np.asarray(posit_dot(ac, bc, slots)))
+    assert (outs[0] == outs[1]).all() and (outs[1] == outs[2]).all()
+
+
+def test_pcsr_encode_bits_codec_impl_field():
+    word = OS(rs1=P8_0, rs2=P16_1, codec_impl="lut").encode_bits()
+    assert (word >> 22) & 0b11 == 1  # lut == index 1 in CODEC_IMPLS
