@@ -93,7 +93,7 @@ def run():
     env["PYTHONPATH"] = "src"
     out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
                          capture_output=True, text=True, timeout=600)
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    line = [ln for ln in out.stdout.splitlines() if ln.startswith("RESULT ")]
     if not line:
         emit("collectives/error", 0.0, out.stderr[-200:].replace("\n", " "))
         return False

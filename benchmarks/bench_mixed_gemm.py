@@ -1,0 +1,179 @@
+"""Mixed-precision GEMM study — the paper's Table-IV packed/multi-precision
+throughput trend, reproduced at the memory system.
+
+Four weight configurations per (M, K, N), activations held at p16:
+
+  * ``uniform-p16``  — widen-everything baseline: p16 acts x p16 weights
+  * ``mixed-p8w``    — p16 acts x p8 weights (independent es per operand)
+  * ``packed-p8w``   — p16 acts x packed-p8 weights: two codes per uint16
+                       lane (core/pack.py), half the weight words moved
+  * ``widen-first``  — the [7]-style baseline for the packed case: each
+                       conversion is its *own compiled op* (the analogue of
+                       [7]'s separate conversion instructions, same
+                       construction as bench_epilogue_fusion's chained
+                       baseline): decode A, decode+widen B into a
+                       materialized f32 tensor, then a separate matmul op
+
+Emitted per case: wall time, an analytic operand-bytes model (the actual
+mechanism behind the paper's 2.54x — conversion/widening round trips), and
+the accuracy delta vs the f32 GEMM of the unquantized operands.  Smoke mode
+(CI) asserts the packed-p8 path moves >= 1.8x fewer operand bytes than
+uniform-p16 and measures faster than the widen-first baseline.
+
+Also swept: the es grid for the mixed pair (dynamic exponent size is *data*
+— one compiled program serves every (es_a, es_b) pair, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import time
+
+from benchmarks.common import emit
+from repro.core import F32, P8_0, P16_1, pack_p8, posit_encode
+from repro.core.dot import posit_dot
+from repro.core.lut import decode_with_impl
+from repro.core.pack import packed_decode_p8
+from repro.core.pcsr import OperandSlots as OS
+
+SIZES = ((8, 1024, 1024), (64, 1024, 1024), (256, 1024, 1024))
+SMOKE_SIZES = ((8, 512, 512),)  # CI per-PR configuration
+ROUNDS = 21  # interleaved timing rounds per size
+
+
+def _interleaved_min_us(cases: dict) -> dict:
+    """Per-case best wall time, measured round-robin.
+
+    All cases are timed within the *same* round before any case repeats, so
+    scheduler/neighbor load perturbs every case alike and the cross-case
+    ratios stay honest even on throttled machines (same construction as
+    bench_epilogue_fusion's paired rounds); min over rounds then discards
+    the noise floor (see common.time_fn).
+    """
+    for fn, a, b in cases.values():
+        for _ in range(2):
+            jax.block_until_ready(fn(a, b))
+    best = {label: float("inf") for label in cases}
+    for _ in range(ROUNDS):
+        for label, (fn, a, b) in cases.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(a, b))
+            dt = time.perf_counter() - t0
+            best[label] = min(best[label], dt * 1e6)
+    return best
+
+
+def _operands(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (k, n)).astype(np.float32))
+    return a, b
+
+
+def _operand_bytes(m, k, n, a_bytes, b_bytes, widen_first=False) -> int:
+    """HBM operand-traffic model: A in + B in (+ widen-first's decode round
+    trip on B: read codes, write f32, read f32 into the matmul)."""
+    total = m * k * a_bytes + k * n * b_bytes
+    if widen_first:
+        total += k * n * (4 + 4)
+    return total
+
+
+def _rel_err(y, ref) -> float:
+    num = float(jnp.linalg.norm((y - ref).astype(jnp.float32)))
+    den = float(jnp.linalg.norm(ref.astype(jnp.float32))) or 1.0
+    return num / den
+
+
+def _size_cases(a16, b16, b8, b8p):
+    """label -> (a operand, b operand, slots | None for the widen-first
+    chain, A bytes/elt, B bytes/elt, widen-first round trips)."""
+    packed = OS(rs1=P16_1, rs2=P8_0, rd=F32, rs2_packed=True)
+    return {
+        "uniform-p16": (a16, b16, OS(rs1=P16_1, rs2=P16_1, rd=F32), 2, 2, False),
+        "mixed-p8w": (a16, b8, OS(rs1=P16_1, rs2=P8_0, rd=F32), 2, 1, False),
+        "packed-p8w": (a16, b8p, packed, 2, 1, False),
+        "widen-first": (a16, b8p, None, 2, 1, True),
+    }
+
+
+def run(smoke: bool = False):
+    sizes = SMOKE_SIZES if smoke else SIZES
+    for m, k, n in sizes:
+        a, b = _operands(m, k, n)
+        ref = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+        a16 = posit_encode(a, 16, 1)
+        b16 = posit_encode(b, 16, 1)
+        b8 = posit_encode(b, 8, 0)
+        b8p = pack_p8(b8)
+
+        # [7]-style widen-first chain: every conversion its own compiled op
+        # (separate dispatch + full materialization of the widened tensors),
+        # then a separate matmul — the two-extra-instructions dataflow that
+        # costs [7] its 2.54x in the paper
+        dec_a = jax.jit(lambda x: decode_with_impl(x, 16, 1, "auto"))
+        dec_b = jax.jit(lambda y: packed_decode_p8(y, 0))
+        mm = jax.jit(lambda af, bf: jnp.matmul(af, bf, preferred_element_type=jnp.float32))
+
+        def widen_first(ac, bc):
+            return mm(dec_a(ac), dec_b(bc))
+
+        cases = _size_cases(a16, b16, b8, b8p)
+        timed = {}
+        bytes_moved = {}
+        errs = {}
+        for label, case in cases.items():
+            ac, bc, slots, ab, bb, widen = case
+            if slots is None:
+                fn = widen_first
+            else:
+                fn = jax.jit(lambda x, y, s=slots: posit_dot(x, y, s))
+            timed[label] = (fn, ac, bc)
+            bytes_moved[label] = _operand_bytes(m, k, n, ab, bb, widen)
+            errs[label] = _rel_err(fn(ac, bc), ref)
+        us = _interleaved_min_us(timed)
+        for label in cases:
+            mflops = 2 * m * k * n / us[label]
+            derived = f"{mflops:.1f}MFLOPS bytes={bytes_moved[label]} rel_err={errs[label]:.5f}"
+            emit(f"mixed/gemm{m}x{k}x{n}/{label}", us[label], derived)
+
+        byte_ratio = bytes_moved["uniform-p16"] / bytes_moved["packed-p8w"]
+        widen_ratio = us["widen-first"] / us["packed-p8w"]
+        name = f"mixed/gemm{m}x{k}x{n}"
+        emit(f"{name}/packed_vs_uniform_bytes", us["packed-p8w"], f"bytes_ratio={byte_ratio:.2f}x")
+        emit(f"{name}/packed_vs_widen_first", us["packed-p8w"], f"measured={widen_ratio:.2f}x")
+        # the paper's packed-lane claims hold in the weight/conversion-
+        # dominated regime (small M — the serving/decode shape, the CI smoke
+        # configuration, and Table IV's own sizes): packed p8 moves >= 1.8x
+        # fewer operand bytes than uniform-p16 (the byte-model ratio
+        # (2M + 2N) / (2M + N) reaches 1.8 exactly when N >= 8M) and the
+        # fused packed path beats the widen-first conversion-op baseline.
+        # At large M the GEMM goes compute-bound, the activation term
+        # dilutes both effects, and the rows are reported unasserted.
+        if 8 * m <= n:
+            msg = f"packed-p8 must move >=1.8x fewer operand bytes, got {byte_ratio:.2f}x at {name}"
+            assert byte_ratio >= 1.8, msg
+            msg = f"packed-p8 fused must beat widen-first, got {widen_ratio:.2f}x at {name}"
+            assert widen_ratio > 1.0, msg
+
+    # es-pair sweep on the mixed case: accuracy across the dynamic-es grid,
+    # one compiled program for all pairs (es is a traced scalar)
+    m, k, n = (8, 256, 256) if smoke else (32, 512, 512)
+    a, b = _operands(m, k, n, seed=1)
+    ref = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    slots = OS(rs1=P16_1, rs2=P8_0, rd=F32)
+    fn = jax.jit(lambda x, y, ea, eb: posit_dot(x, y, slots, es_a=ea, es_b=eb))
+    for es_a in (0, 1, 2):
+        for es_b in (0, 1, 2):
+            ac = posit_encode(a, 16, es_a)
+            bc = posit_encode(b, 8, es_b)
+            err = _rel_err(fn(ac, bc, es_a, es_b), ref)
+            emit(f"mixed/es_pair/p16_{es_a}xp8_{es_b}", 0.0, f"rel_err={err:.5f}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

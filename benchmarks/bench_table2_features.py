@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
-from repro.core import P8_0, F32
+from repro.core import P8_0
 from repro.core.alu import posit_add, posit_mul
 from repro.core.codec import posit_decode, posit_encode
 from repro.core.pcsr import OperandSlots as OS

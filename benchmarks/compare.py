@@ -1,0 +1,170 @@
+"""Benchmark regression gate — diff two directories of BENCH_<name>.json.
+
+    python -m benchmarks.compare --old prev-bench --new bench-results \
+        [--threshold 0.15] [--min-us 50] [--summary out.md] [--allow-missing]
+
+CI downloads the previous main-branch artifact into ``--old`` and fails the
+job when this run regresses:
+
+* **throughput**: a row's ``us_per_call`` grew by more than ``--threshold``
+  (relative; rows under ``--min-us`` are skipped as timer noise),
+* **accuracy**: any lower-is-better metric parsed from the ``derived``
+  column (``rel_err=`` / ``*ulp=`` / ``mse=`` tokens) grew at all (beyond
+  float-print noise).
+
+Rows are matched by (bench, row name); old rows that disappeared are
+reported but don't fail (benchmarks evolve); new rows are listed as
+additions.  Runs are only compared when backend and smoke-mode match.
+The delta table is markdown — ``--summary`` appends it to a file
+($GITHUB_STEP_SUMMARY in CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import re
+import sys
+
+_ACC_KEY = re.compile(r"(\w*(?:ulp|err|mse)\w*)=([-+0-9.e]+|nan|[-+]?inf)", re.IGNORECASE)
+_ACC_EPS = 1e-9  # float-print noise floor for accuracy comparisons
+# runs only compare like-for-like: jax version drift shifts accuracy metrics
+# deterministically (XLA fusion), which must rebaseline, not fail the gate
+_META_KEYS = ("ok", "smoke", "backend", "jax")
+
+
+def load_dir(path: str) -> dict:
+    """{bench_name: {"meta": {...}, "rows": {row_name: row}}} for a dir."""
+    out = {}
+    for fn in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        name = rec.get("bench") or os.path.basename(fn)[6:-5]
+        out[name] = {
+            "meta": {k: rec.get(k) for k in _META_KEYS},
+            "rows": {r["name"]: r for r in rec.get("rows", [])},
+        }
+    return out
+
+
+def accuracy_metrics(row: dict) -> dict:
+    """Lower-is-better metrics parsed from the derived column."""
+    return {k: float(v) for k, v in _ACC_KEY.findall(row.get("derived", ""))}
+
+
+def _table_row(bench, row, metric, old, new, delta, status) -> dict:
+    return {
+        "bench": bench,
+        "row": row,
+        "metric": metric,
+        "old": old,
+        "new": new,
+        "delta": delta,
+        "status": status,
+    }
+
+
+def compare(old: dict, new: dict, *, threshold: float = 0.15, min_us: float = 50.0):
+    """Returns (table_rows, regressions); each table row is a dict."""
+    rows, regressions = [], []
+    for bench, nrec in sorted(new.items()):
+        orec = old.get(bench)
+        if orec is None:
+            rows.append(_table_row(bench, "(new benchmark)", "-", "-", "-", "-", "added"))
+            continue
+        if orec["meta"] != nrec["meta"]:
+            o_meta, n_meta = str(orec["meta"]), str(nrec["meta"])
+            rows.append(_table_row(bench, "(config mismatch)", "-", o_meta, n_meta, "-", "skipped"))
+            continue
+        for name, nrow in nrec["rows"].items():
+            orow = orec["rows"].get(name)
+            if orow is None:
+                rows.append(_table_row(bench, name, "-", "-", "-", "-", "added"))
+                continue
+            o_us, n_us = orow.get("us_per_call", 0), nrow.get("us_per_call", 0)
+            # gate rows where EITHER side crosses the noise floor — keying on
+            # the old value alone would let a 40us -> 400us blow-up escape
+            if o_us > 0 and n_us > 0 and max(o_us, n_us) >= min_us:
+                rel = (n_us - o_us) / o_us
+                status = "REGRESSION" if rel > threshold else "ok"
+                old_s, new_s = f"{o_us:.1f}", f"{n_us:.1f}"
+                row = _table_row(bench, name, "us_per_call", old_s, new_s, f"{rel:+.1%}", status)
+                rows.append(row)
+                if status != "ok":
+                    regressions.append(row)
+            o_acc, n_acc = accuracy_metrics(orow), accuracy_metrics(nrow)
+            for key in sorted(set(o_acc) | set(n_acc)):
+                ov = o_acc.get(key, float("nan"))
+                nv = n_acc.get(key, float("nan"))
+                # a metric going NaN (or vanishing from the row) IS a
+                # regression; NaN comparisons are False, so test explicitly
+                worse = (math.isnan(nv) and not math.isnan(ov)) or (
+                    nv > ov + _ACC_EPS + abs(ov) * 1e-6
+                )
+                if worse:
+                    delta = f"{nv - ov:+g}"
+                    row = _table_row(bench, name, key, f"{ov:g}", f"{nv:g}", delta, "REGRESSION")
+                    rows.append(row)
+                    regressions.append(row)
+        for name in orec["rows"]:
+            if name not in nrec["rows"]:
+                rows.append(_table_row(bench, name, "-", "-", "-", "-", "removed"))
+    return rows, regressions
+
+
+def to_markdown(rows: list, regressions: list) -> str:
+    lines = ["## Benchmark delta (old = previous main run)", ""]
+    if not rows:
+        lines.append("no comparable rows")
+    else:
+        lines.append("| bench | row | metric | old | new | Δ | status |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in rows:
+            cells = (r["bench"], r["row"], r["metric"], r["old"], r["new"], r["delta"], r["status"])
+            lines.append("| " + " | ".join(cells) + " |")
+    lines.append("")
+    verdict = f"**{len(regressions)} regression(s)**" if regressions else "**no regressions**"
+    lines.append(verdict)
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--old", required=True, help="previous-run BENCH_*.json dir")
+    ap.add_argument("--new", required=True, help="this-run BENCH_*.json dir")
+    ap.add_argument("--threshold", type=float, default=0.15, help="relative us growth that fails")
+    ap.add_argument("--min-us", type=float, default=50.0, help="skip faster rows (timer noise)")
+    ap.add_argument("--summary", default=None, help="append the markdown table to this file")
+    ap.add_argument("--allow-missing", action="store_true", help="exit 0 when --old is empty")
+    args = ap.parse_args(argv)
+
+    old = load_dir(args.old) if os.path.isdir(args.old) else {}
+    new = load_dir(args.new)
+    if not old:
+        msg = f"no previous benchmark data under {args.old!r}"
+        print(msg)
+        if args.summary:
+            with open(args.summary, "a") as f:
+                f.write(f"## Benchmark delta\n\n{msg} — gate skipped\n")
+        return 0 if args.allow_missing else 1
+    if not new:
+        print(f"no benchmark data under {args.new!r}", file=sys.stderr)
+        return 1
+
+    rows, regressions = compare(old, new, threshold=args.threshold, min_us=args.min_us)
+    md = to_markdown(rows, regressions)
+    print(md)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md)
+    if regressions:
+        print(f"FAIL: {len(regressions)} benchmark regression(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,7 @@ BENCHES = {
     "quire": "benchmarks.bench_quire_accuracy",        # beyond-paper: exact acc
     "codec": "benchmarks.bench_codec",                 # LUT vs bit-pipeline
     "epilogue": "benchmarks.bench_epilogue_fusion",    # fused vs chained layer
+    "mixed": "benchmarks.bench_mixed_gemm",            # packed/mixed precision
 }
 
 
@@ -83,6 +84,10 @@ def main(argv=None) -> None:
                     "ok": ok,
                     "smoke": args.smoke,
                     "backend": jax.default_backend(),
+                    # the regression gate only compares same-jax runs:
+                    # XLA fusion changes shift accuracy metrics
+                    # deterministically across versions (DESIGN.md §8 note)
+                    "jax": jax.__version__,
                     "elapsed_s": round(time.time() - t0, 2),
                     "rows": drain_rows(),
                 }, f, indent=1)

@@ -10,7 +10,6 @@ Policies:
   p8-weights  — weights posit(8,0) (stress case; visible but bounded gap)
 """
 import argparse
-import dataclasses
 import json
 import time
 

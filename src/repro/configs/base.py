@@ -6,7 +6,6 @@ One instance per assigned architecture lives in ``repro.configs.<arch>``;
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

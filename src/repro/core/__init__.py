@@ -32,8 +32,14 @@ from repro.core.alu import (  # noqa: F401
     posit_add, posit_mul, posit_sub, qclr, qma, qms, qneg, qround,
 )
 from repro.core.dot import (  # noqa: F401
-    ACTIVATIONS, apply_epilogue, posit_dot, posit_gemv, posit_matmul_wx,
-    posit_softmax,
+    ACTIVATIONS, FormatPlan, apply_epilogue, format_pair_plan, posit_dot,
+    posit_gemv, posit_matmul_wx, posit_softmax,
+)
+from repro.core.pack import (  # noqa: F401
+    pack_p8, packed_decode_p8, packed_half_k, split_activations, unpack_p8,
+)
+from repro.core.policy import (  # noqa: F401
+    PRECISION_PRESETS, LayerRule, PrecisionPolicy, get_precision_policy,
 )
 from repro.core.quire import (  # noqa: F401
     QuireFmt, quire_accumulate, quire_add_posit, quire_dot, quire_from_posit,

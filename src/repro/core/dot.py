@@ -23,7 +23,7 @@ decode with their (possibly traced) es. Mixed posit x float GEMMs fall out.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 from typing import Optional
 
 import jax
@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.codec import EsLike, posit_decode, posit_encode
 from repro.core.lut import decode_with_impl, encode_with_impl
+from repro.core.pack import packed_decode_p8, unpack_p8
 from repro.core.pcsr import OperandSlots
 from repro.core.types import Fmt, PositFmt, compute_dtype_for
 
@@ -71,6 +72,60 @@ def apply_epilogue(y: jax.Array, bias: Optional[jax.Array],
     return y
 
 
+@dataclasses.dataclass(frozen=True)
+class FormatPlan:
+    """Resolved dispatch plan for one (rs1, rs2) format pair (DESIGN.md §9).
+
+    The format-pair dispatch table, applied uniformly across all three
+    dataflows:
+
+        rs1 \\ rs2   p8            p16           float
+        p8          bf16 MXU      f32 MXU       bf16/f32 per float fmt
+        p16         f32 MXU       f32 MXU       f32 MXU
+        float       per float fmt f32 MXU       native (codec bypassed)
+
+    * compute dtype is the *lossless-decode* meet of the two operands
+      (`compute_dtype_for`): bf16 only when both formats decode exactly into
+      bf16, else f32 — so a mixed p8 x p16 GEMM is exact in f32 while a
+      p8 x p8 GEMM runs the MXU at full bf16 speed.
+    * a packed rs2 (two p8 codes per uint16 lane) decodes both lanes and is
+      otherwise format-identical to unpacked p8 — packing changes bytes
+      moved, never numerics.
+    * the quire dataflow additionally requires all-posit slots; its
+      accumulation is es/nbits-independent (the anchor covers every format),
+      so any posit format pair — mixed nbits, mixed es, packed — lands in
+      one exact accumulator.
+    """
+
+    compute_dtype_name: str   # "bfloat16" | "float32" — MXU/FPU datapath
+    decode_a: bool            # rs1 runs the posit codec
+    decode_b: bool            # rs2 runs the posit codec
+    packed_b: bool            # rs2 arrives as packed uint16 lanes
+    quire_ok: bool            # all-posit slots: quire dataflow is legal
+    encode_out: bool          # rd is posit: result re-encodes
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.compute_dtype_name)
+
+
+def format_pair_plan(slots: OperandSlots) -> FormatPlan:
+    """Resolve an OperandSlots pcsr into the dispatch plan for its
+    (rs1, rs2) format pair."""
+    ca = compute_dtype_for(slots.rs1)
+    cb = compute_dtype_for(slots.rs2)
+    cd = ca if ca == cb else jnp.float32
+    return FormatPlan(
+        compute_dtype_name=jnp.dtype(cd).name,
+        decode_a=isinstance(slots.rs1, PositFmt),
+        decode_b=isinstance(slots.rs2, PositFmt),
+        packed_b=slots.rs2_packed,
+        quire_ok=all(isinstance(f, PositFmt)
+                     for f in (slots.rs1, slots.rs2, slots.rd)),
+        encode_out=isinstance(slots.rd, PositFmt),
+    )
+
+
 def _decode_operand(x: jax.Array, fmt: Fmt, es: Optional[EsLike], compute_dtype,
                     codec_impl: str = "auto") -> jax.Array:
     if isinstance(fmt, PositFmt):
@@ -104,6 +159,10 @@ def _quire_dot(a, b, slots, *, es_a=None, es_b=None, es_out=None,
     if a.ndim != 2 or b.ndim != 2:
         raise NotImplementedError(
             f"quire dataflow is 2-D GEMM only, got {a.shape} @ {b.shape}")
+    if slots.rs2_packed:
+        # lane extraction is a handful of integer ops; the quire then
+        # accumulates the mixed product exactly like unpacked codes
+        b = unpack_p8(b, k=a.shape[1])
     wide = slots.rs1 if slots.rs1.nbits >= slots.rs2.nbits else slots.rs2
     kw = dict(
         es_a=slots.rs1.es if es_a is None else es_a,
@@ -163,22 +222,28 @@ def posit_dot(
                           dimension_numbers=dimension_numbers,
                           bias=bias, activation=activation, residual=residual,
                           chained=chained)
+    plan = format_pair_plan(slots)
     if compute_dtype is None:
         # lossless-decode dtype: bf16 only if *both* operands allow it
-        ca = compute_dtype_for(slots.rs1)
-        cb = compute_dtype_for(slots.rs2)
-        compute_dtype = ca if ca == cb else jnp.float32
+        compute_dtype = plan.compute_dtype
 
+    if plan.packed_b:
+        # two p8 codes per uint16 lane (core/pack.py split-K layout): decode
+        # both lanes, trim the odd-K pad row back to rs1's contraction length
+        if dimension_numbers is not None:
+            raise NotImplementedError(
+                "packed rs2 supports plain (.., K) @ (Kh, N) contractions")
+        bf = packed_decode_p8(
+            b, slots.rs2.es if es_b is None else es_b,
+            codec_impl=slots.codec_impl, k=a.shape[-1]).astype(compute_dtype)
+    else:
+        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype, slots.codec_impl)
+    af = _decode_operand(a, slots.rs1, es_a, compute_dtype, slots.codec_impl)
     if impl == "unfused":
         # Materialize full decoded tensors in HBM (optimization barrier keeps XLA
         # from re-fusing them into the matmul — this is the point of the baseline).
-        af = _decode_operand(a, slots.rs1, es_a, compute_dtype, slots.codec_impl)
-        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype, slots.codec_impl)
         af = jax.lax.optimization_barrier(af)
         bf = jax.lax.optimization_barrier(bf)
-    else:
-        af = _decode_operand(a, slots.rs1, es_a, compute_dtype, slots.codec_impl)
-        bf = _decode_operand(b, slots.rs2, es_b, compute_dtype, slots.codec_impl)
 
     if dimension_numbers is None:
         y = jnp.matmul(af, bf, preferred_element_type=jnp.float32)
@@ -208,6 +273,7 @@ def posit_matmul_wx(
     es_out: Optional[EsLike] = None,
     codec_impl: str = "auto",
     epilogue: str = "fused",
+    packed: bool = False,
 ) -> jax.Array:
     """x @ decode(W) — the weights-only fast path used by TransLinear.
 
@@ -216,11 +282,20 @@ def posit_matmul_wx(
     gemm -> bias -> activation -> residual -> encode, one HBM write).
     For p8 weights the decode is bf16-exact, so the MXU runs at full bf16
     speed.  ``epilogue="chained"`` is the materialize-every-stage baseline.
+    ``packed=True`` takes w_codes as (ceil(K/2), N) uint16 packed p8 lanes
+    (core/pack.py) — half the weight bytes through the memory system,
+    bit-identical numerics.
     """
     if compute_dtype is None:
         compute_dtype = compute_dtype_for(w_fmt)
-    wf = decode_with_impl(w_codes, w_fmt.nbits,
-                          w_fmt.es if es is None else es, codec_impl)
+    if packed:
+        if w_fmt.nbits != 8:
+            raise ValueError(f"packed weights require p8, got {w_fmt}")
+        wf = packed_decode_p8(w_codes, w_fmt.es if es is None else es,
+                              codec_impl=codec_impl, k=x.shape[-1])
+    else:
+        wf = decode_with_impl(w_codes, w_fmt.nbits,
+                              w_fmt.es if es is None else es, codec_impl)
     chained = epilogue == "chained"
     if chained:
         wf = jax.lax.optimization_barrier(wf)

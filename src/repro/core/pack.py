@@ -1,0 +1,93 @@
+"""Packed posit-8 lanes — two p8 codes per 16-bit word (DESIGN.md §9).
+
+The paper's multi/mixed-precision lever: narrow posit operands share wider
+vector lanes, so one op moves (and one decode step produces) two values.  Here
+the memory-system analogue: a p8 weight matrix travels through HBM/VMEM as
+uint16 lanes holding two codes each, halving the *word count* the BlockSpec
+pipeline moves versus a widen-to-p16 layout (and matching the PVU's packed
+posit vector lanes, which PERCIVAL lacks).
+
+**Split-K layout.** For a (K, N) weight matrix with half-K ``Kh = ceil(K/2)``:
+
+    packed[r, c] = codes[r, c]  |  codes[r + Kh, c] << 8        (r < Kh)
+
+i.e. the low byte carries row ``r`` and the high byte carries row ``r + Kh``
+(an odd K pads one zero row — 0-codes decode to 0.0 and contribute nothing to
+any accumulator).  Split-K rather than interleaved-K so consumers never need
+strided slices: lane extraction gives two *contiguous* (Kh, N) operand halves,
+and a GEMM becomes
+
+    A @ decode(packed) == A[:, :Kh] @ decode(lo) + A[:, Kh:] @ decode(hi)
+
+— two full-width MXU contractions per tile, no gather/interleave step
+(``kernels/posit_gemm`` maps the two A halves as two BlockSpecs over the same
+array).  Packing applies along the *contraction* axis of the last two dims;
+leading (stacked-layer) batch dims pass through untouched.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import EsLike
+from repro.core.lut import decode_with_impl
+
+
+def packed_half_k(k: int) -> int:
+    """Rows of the packed array for a K-row unpacked operand."""
+    return (k + 1) // 2
+
+
+def pack_p8(codes: jax.Array) -> jax.Array:
+    """(..., K, N) uint8 p8 codes -> (..., ceil(K/2), N) uint16 packed lanes."""
+    k = codes.shape[-2]
+    kh = packed_half_k(k)
+    lo = codes[..., :kh, :].astype(jnp.uint16)
+    hi = codes[..., kh:, :].astype(jnp.uint16)
+    if k % 2:  # zero-pad the missing high lane of the last row
+        pad = [(0, 0)] * (codes.ndim - 2) + [(0, 1), (0, 0)]
+        hi = jnp.pad(hi, pad)
+    return lo | (hi << jnp.uint16(8))
+
+
+def unpack_p8(packed: jax.Array, k: Optional[int] = None) -> jax.Array:
+    """Inverse of ``pack_p8``: (..., Kh, N) uint16 -> (..., K, N) uint8 codes.
+
+    ``k`` trims the zero pad row of an odd-K pack (default: 2*Kh).
+    """
+    lo = (packed & jnp.uint16(0xFF)).astype(jnp.uint8)
+    hi = (packed >> jnp.uint16(8)).astype(jnp.uint8)
+    out = jnp.concatenate([lo, hi], axis=-2)
+    if k is not None:
+        out = out[..., :k, :]
+    return out
+
+
+def packed_decode_p8(packed: jax.Array, es: EsLike, *,
+                     codec_impl: str = "auto",
+                     k: Optional[int] = None) -> jax.Array:
+    """Decode both lanes of a packed array -> (..., K, N) f32.
+
+    One byte-extract per lane (``unpack_p8`` — the single home of the lane
+    layout outside the Pallas kernel body), then the p8 decode (the PR-2 LUT
+    gather under ``codec_impl in ("auto", "lut")`` on gather-friendly
+    backends) — the decode cost is identical to unpacked codes; only the
+    bytes moved halve.
+    """
+    return decode_with_impl(unpack_p8(packed, k), 8, es, codec_impl)
+
+
+def split_activations(x: jax.Array, kh: int) -> tuple[jax.Array, jax.Array]:
+    """Split the contraction axis of ``x`` (..., K) into the (lo, hi) halves
+    matching a split-K packed weight: ``x_lo`` pairs with the low lanes
+    (rows [0, Kh)), ``x_hi`` with the high lanes (rows [Kh, 2*Kh); zero-padded
+    when K is odd)."""
+    k = x.shape[-1]
+    x_lo = x[..., :kh]
+    x_hi = x[..., kh:]
+    if k < 2 * kh:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, 2 * kh - k)]
+        x_hi = jnp.pad(x_hi, pad)
+    return x_lo, x_hi

@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.types import BF16, F32, Fmt, PositFmt, get_format
+from repro.core.types import F32, Fmt, PositFmt, get_format
 
 
 # Accumulation dataflows a dot-like op can run under (repro.core.dot):
@@ -60,6 +60,10 @@ class OperandSlots:
     rd: Fmt = F32
     dataflow: str = "fused"
     codec_impl: str = "auto"
+    # Packed-lane storage for the weight slot (DESIGN.md §9): rs2 travels as
+    # uint16 lanes holding two p8 codes each (core/pack.py split-K layout).
+    # Static, like dataflow — it changes operand shapes and the lowered kernel.
+    rs2_packed: bool = False
 
     def __post_init__(self):
         if self.dataflow not in DATAFLOWS:
@@ -68,6 +72,11 @@ class OperandSlots:
         if self.codec_impl not in CODEC_IMPLS:
             raise ValueError(
                 f"codec_impl must be one of {CODEC_IMPLS}, got {self.codec_impl!r}")
+        if self.rs2_packed and not (
+                isinstance(self.rs2, PositFmt) and self.rs2.nbits == 8):
+            raise ValueError(
+                f"rs2_packed requires a p8 rs2 (two codes per 16-bit lane), "
+                f"got {self.rs2}")
 
     @classmethod
     def uniform(cls, fmt: Fmt, dataflow: str = "fused",
@@ -81,11 +90,14 @@ class OperandSlots:
     def with_codec_impl(self, codec_impl: str) -> "OperandSlots":
         return dataclasses.replace(self, codec_impl=codec_impl)
 
+    def with_packed(self, rs2_packed: bool = True) -> "OperandSlots":
+        return dataclasses.replace(self, rs2_packed=rs2_packed)
+
     def encode_bits(self) -> int:
         """Pack into the paper's 4x(1+1+3)-bit register layout (for display),
         plus our dataflow extension in bits 20-21 (00 fused / 01 unfused /
-        10 quire) and the codec_impl extension in bits 22-23 (00 auto /
-        01 lut / 10 bits)."""
+        10 quire), the codec_impl extension in bits 22-23 (00 auto /
+        01 lut / 10 bits) and the rs2 packed-lane bit in bit 24."""
         word = 0
         for i, f in enumerate((self.rs1, self.rs2, self.rs3, self.rd)):
             pfmt = 1 if isinstance(f, PositFmt) else 0
@@ -96,6 +108,7 @@ class OperandSlots:
             word |= pes << (8 + 3 * i)
         word |= DATAFLOWS.index(self.dataflow) << 20
         word |= CODEC_IMPLS.index(self.codec_impl) << 22
+        word |= int(self.rs2_packed) << 24
         return word
 
 
@@ -140,8 +153,17 @@ class TransPolicy:
     # bias/activation/residual/encode with the GEMM, "chained" materializes
     # each stage (the benchmark baseline).
     epilogue: str = "fused"
+    # Packed-lane weight storage (core/pack.py): p8 weight codes travel two
+    # per 16-bit lane through the memory system (DESIGN.md §9).  Only
+    # meaningful for p8 weights; quantize_params / apply_linear consult it.
+    pack_weights: bool = False
 
     def __post_init__(self):
+        if self.pack_weights and not (
+                self.weights is not None and self.weights.nbits == 8):
+            raise ValueError(
+                "pack_weights requires p8 weights (two codes per lane), "
+                f"got weights={self.weights}")
         if self.codec_impl not in CODEC_IMPLS:
             raise ValueError(
                 f"codec_impl must be one of {CODEC_IMPLS}, got {self.codec_impl!r}")
@@ -158,9 +180,11 @@ class TransPolicy:
     def from_names(cls, compute_dtype: str = "f32",
                    exact_collectives: bool = False,
                    codec_impl: str = "auto", epilogue: str = "fused",
+                   pack_weights: bool = False,
                    **roles: Optional[str]) -> "TransPolicy":
         kw = {"exact_collectives": exact_collectives,
-              "codec_impl": codec_impl, "epilogue": epilogue}
+              "codec_impl": codec_impl, "epilogue": epilogue,
+              "pack_weights": pack_weights}
         for role, name in roles.items():
             if name is None or name == "none":
                 kw[role] = None
@@ -182,6 +206,8 @@ class TransPolicy:
             parts.append(f"codec={self.codec_impl}")
         if self.epilogue != "fused":
             parts.append(f"epilogue={self.epilogue}")
+        if self.pack_weights:
+            parts.append("packed_weights")
         return " ".join(parts)
 
 

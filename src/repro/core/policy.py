@@ -1,0 +1,201 @@
+"""Per-layer precision policies — the pcsr, scheduled over a model.
+
+A single ``TransPolicy`` gives every linear layer the same weight format.
+The paper's precision-scalability story (and the 2.54x GEMM headline) comes
+from *mixing* formats: attention projections at p16 where accuracy is
+sensitive, MLP weights at packed p8 where bytes dominate, independent es per
+operand.  ``PrecisionPolicy`` expresses that as an ordered rule list mapping
+layer *paths* (glob patterns over names like ``"blocks/attn/wq"``) to a
+weight format + packed-lane flag, over a base ``TransPolicy`` that keeps
+supplying every non-weight role (kv_cache, gradients, compute dtype, ...).
+
+Resolution order (DESIGN.md §9):
+
+1. rules are scanned **in declaration order**; the first pattern that
+   ``fnmatch``-matches the layer path wins,
+2. a matching rule replaces only ``weights`` / ``pack_weights`` on the base
+   policy (a rule with ``weights=None`` pins the layer to the base format),
+3. no match -> the base policy unchanged.
+
+A ``PrecisionPolicy`` duck-types ``TransPolicy`` (attribute access for
+non-weight roles delegates to the base), so the whole launch/model stack —
+``make_train_step``, serving cache init, collectives — accepts one without
+changes; only ``models.layers.resolve_policy`` (called with the layer path at
+each linear call site) sees the per-layer view.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import functools
+from typing import Optional, Tuple
+
+from repro.core.pcsr import TransPolicy
+from repro.core.types import PositFmt, get_format
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerRule:
+    """One per-layer override: glob pattern -> (weight format, packed flag)."""
+
+    pattern: str                        # fnmatch glob over the layer path
+    weights: Optional[PositFmt] = None  # None = keep the base policy's format
+    packed: bool = False                # packed-p8 lane storage (core/pack.py)
+
+    def __post_init__(self):
+        if self.packed and (self.weights is None or self.weights.nbits != 8):
+            raise ValueError(
+                f"packed rules require p8 weights, got {self.weights} "
+                f"for pattern {self.pattern!r}")
+
+
+def _rule(pattern: str, fmt: Optional[str], packed: bool = False) -> LayerRule:
+    f = get_format(fmt) if fmt is not None else None
+    if f is not None and not isinstance(f, PositFmt):
+        raise ValueError(f"layer rules take posit formats, got {fmt!r}")
+    return LayerRule(pattern, f, packed)
+
+
+def _pattern_matches(path: str, pattern: str) -> bool:
+    """True when ``pattern`` fnmatch-matches ``path`` or any '/'-suffix of it.
+
+    Layer paths appear in two spellings: the call-site logical path
+    ("mlp/gate") and the param-tree path at quantize time
+    ("blocks/mlp/gate").  Suffix matching makes an anchored rule like
+    "mlp/gate=p8_0" resolve identically in both, so quantize-time and
+    decode-time formats can never diverge.
+    """
+    if fnmatch.fnmatchcase(path, pattern):
+        return True
+    return fnmatch.fnmatchcase(path, "*/" + pattern)
+
+
+@functools.lru_cache(maxsize=4096)
+def _resolve(policy: "PrecisionPolicy", path: str) -> TransPolicy:
+    rule = policy.rule_for(path)
+    if rule is None or rule.weights is None:
+        # no rule, or a weights=None rule: the layer keeps the base format
+        # (a None rule *pins* the layer — it stops later rules from firing)
+        return policy.base
+    return dataclasses.replace(
+        policy.base, weights=rule.weights, pack_weights=rule.packed)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Ordered per-layer weight-format rules over a base ``TransPolicy``."""
+
+    base: TransPolicy = TransPolicy()
+    rules: Tuple[LayerRule, ...] = ()
+    name: str = "custom"
+
+    def rule_for(self, path: str) -> Optional[LayerRule]:
+        for rule in self.rules:
+            if _pattern_matches(path, rule.pattern):
+                return rule
+        return None
+
+    def policy_for(self, path: str) -> TransPolicy:
+        """The concrete TransPolicy a layer at ``path`` runs under."""
+        return _resolve(self, path)
+
+    def with_base(self, base: TransPolicy) -> "PrecisionPolicy":
+        """Re-seat the rules over a different base policy (keeps the base's
+        non-weight roles: kv_cache, gradients, compute dtype, ...)."""
+        return dataclasses.replace(self, base=base)
+
+    def describe(self) -> str:
+        parts = [f"precision={self.name}", self.base.describe()]
+        for r in self.rules:
+            fmt = r.weights.name if r.weights else "base"
+            parts.append(
+                f"{r.pattern}->{fmt}{'(packed)' if r.packed else ''}")
+        return " ".join(parts)
+
+    def __getattr__(self, item: str):
+        # duck-type TransPolicy: non-weight attribute reads fall through to
+        # the base (only called when normal dataclass lookup misses)
+        if item.startswith("__"):
+            raise AttributeError(item)
+        return getattr(object.__getattribute__(self, "base"), item)
+
+
+# ------------------------------------------------------------------ presets ----
+
+def _preset(name: str, base: TransPolicy, *rules: LayerRule) -> "PrecisionPolicy":
+    return PrecisionPolicy(base=base, rules=tuple(rules), name=name)
+
+
+#: Named per-layer precision presets (launch/hillclimb search dimension,
+#: ``serve.py --precision-policy``).  Every preset's weight schedule lives in
+#: its *rules* (with a catch-all), never only in the base: ``with_base`` /
+#: the ``base=`` overlay replaces the base wholesale (it supplies the
+#: non-weight roles), and a schedule carried there would be silently lost.
+PRECISION_PRESETS = {
+    # every linear at p16_1 — the accuracy-first uniform configuration
+    "uniform-p16": _preset(
+        "uniform-p16", TransPolicy.from_names(weights="p16_1"),
+        _rule("*", "p16_1"),
+    ),
+    # every linear at p8_0, bf16 MXU — the bytes-first uniform configuration
+    "p8-weights": _preset(
+        "p8-weights",
+        TransPolicy.from_names(weights="p8_0", compute_dtype="bf16"),
+        _rule("*", "p8_0"),
+    ),
+    # p8 weights in packed lanes: half the weight words through HBM/VMEM
+    "p8-packed": _preset(
+        "p8-packed",
+        TransPolicy.from_names(weights="p8_0", compute_dtype="bf16",
+                               pack_weights=True),
+        _rule("*", "p8_0", packed=True),
+    ),
+    # the mixed profile: accuracy-sensitive attention projections (incl.
+    # encoder-decoder self/cross attention) stay p16, byte-dominated
+    # MLP/MoE/head weights drop to packed p8, everything else p16
+    "attn-p16-mlp-p8": _preset(
+        "attn-p16-mlp-p8", TransPolicy.from_names(weights="p16_1"),
+        _rule("*attn*", "p16_1"),
+        _rule("*self*", "p16_1"),
+        _rule("*cross*", "p16_1"),
+        _rule("*mlp*", "p8_0", packed=True),
+        _rule("*moe*", "p8_0", packed=True),
+        _rule("*ffn*", "p8_0", packed=True),
+        _rule("lm_head*", "p8_0", packed=True),
+        _rule("*", "p16_1"),
+    ),
+}
+
+
+def get_precision_policy(name_or_spec: str,
+                         base: Optional[TransPolicy] = None) -> PrecisionPolicy:
+    """Look up a preset by name, or parse an inline rule spec.
+
+    Spec grammar: comma-separated ``pattern=fmt[:packed]`` entries, applied
+    in order (first match wins), e.g.::
+
+        --precision-policy "attn-p16-mlp-p8"
+        --precision-policy "*attn*=p16_1,*mlp*=p8_0:packed,*=p16_1"
+
+    ``base`` (when given) supplies every non-weight role — e.g. the serving
+    ``--policy`` keeps its kv_cache/compute_dtype while the precision policy
+    schedules the weights.
+    """
+    if name_or_spec in PRECISION_PRESETS:
+        pol = PRECISION_PRESETS[name_or_spec]
+        return pol if base is None else pol.with_base(base)
+    if "=" not in name_or_spec:
+        raise KeyError(
+            f"unknown precision policy {name_or_spec!r}; presets: "
+            f"{sorted(PRECISION_PRESETS)} (or a pattern=fmt[:packed],... spec)")
+    rules = []
+    for part in name_or_spec.split(","):
+        pattern, _, fmt = part.partition("=")
+        if not fmt:
+            raise ValueError(f"malformed precision rule {part!r}")
+        fmt, _, mod = fmt.partition(":")
+        if mod not in ("", "packed"):
+            raise ValueError(f"unknown rule modifier {mod!r} in {part!r}")
+        rules.append(_rule(pattern.strip(), fmt.strip(), packed=mod == "packed"))
+    return PrecisionPolicy(base=base if base is not None else TransPolicy(),
+                           rules=tuple(rules), name=name_or_spec)

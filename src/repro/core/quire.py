@@ -171,7 +171,8 @@ def _scatter(q: jax.Array, parts, n_limbs: int) -> jax.Array:
     L = n_limbs
     lids = lax.broadcasted_iota(jnp.int32, (1,) * max(q.ndim - 1, 0) + (L,),
                                 max(q.ndim - 1, 0))
-    b = lambda x: x[..., None]
+    def b(x):
+        return x[..., None]
     contrib = (jnp.where(b(idx) == lids, b(g0), 0)
                + jnp.where(b(idx) == lids - 1, b(g1), 0)
                + jnp.where(b(idx) == lids - 2, b(g2), 0))

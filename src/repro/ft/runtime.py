@@ -28,7 +28,7 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
-from repro.checkpoint.ckpt import CheckpointManager, latest_checkpoint
+from repro.checkpoint.ckpt import CheckpointManager
 
 
 def with_retries(fn: Callable, *, retries: int = 3, base_delay: float = 0.5,

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dot import posit_dot
+from repro.core.lut import resolve_codec_impl
+from repro.core.pack import unpack_p8
 from repro.core.pcsr import OperandSlots
 from repro.kernels.posit_gemm.posit_gemm import posit_gemm
 
@@ -40,6 +42,11 @@ def gemm(
     if impl == "quire" or (impl == "auto" and slots.dataflow == "quire"):
         from repro.kernels.posit_quire_gemm.ops import quire_gemm
 
+        if slots.rs2_packed:
+            # lane extraction is cheap integer ops; the quire kernel then
+            # sees plain p8 codes (its accumulation is format-independent)
+            b = unpack_p8(b, k=a.shape[1])
+            slots = slots.with_packed(False)
         return quire_gemm(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
                           bias=bias, activation=activation, residual=residual,
                           impl="auto", interpret=interpret, **block_kw)
@@ -56,11 +63,16 @@ def gemm(
             [_es(es_a, slots.rs1), _es(es_b, slots.rs2), _es(es_out, slots.rd)],
             dtype=jnp.int32,
         )
+        # in-kernel lane decode: the LUT gather off-TPU (interpret), the bit
+        # pipeline on Mosaic (gathers are hostile in-kernel, DESIGN.md §8)
+        codec_impl = ("bits" if _on_tpu()
+                      else resolve_codec_impl(slots.codec_impl, 8, "decode"))
         return posit_gemm(
             a, b, es,
             a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
             bias=bias, activation=activation, residual=residual,
-            interpret=interpret, **block_kw,
+            interpret=interpret, b_packed=slots.rs2_packed,
+            codec_impl=codec_impl, **block_kw,
         )
     if impl == "xla":
         return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,

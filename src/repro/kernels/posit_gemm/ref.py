@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.core.codec import posit_decode, posit_encode
 from repro.core.dot import apply_epilogue
+from repro.core.pack import packed_decode_p8
 from repro.core.types import Fmt, PositFmt, compute_dtype_for
 
 
@@ -17,6 +18,7 @@ def posit_gemm_ref(
     bias: Optional[jax.Array] = None,
     residual: Optional[jax.Array] = None,
     activation: str = "none",
+    b_packed: bool = False,
 ) -> jax.Array:
     if compute_dtype_name is None:
         ca, cb = compute_dtype_for(a_fmt), compute_dtype_for(b_fmt)
@@ -25,7 +27,11 @@ def posit_gemm_ref(
         compute_dtype = jnp.dtype(compute_dtype_name)
     es = jnp.asarray(es, jnp.int32)
     af = (posit_decode(a, a_fmt.nbits, es[0]) if isinstance(a_fmt, PositFmt) else a)
-    bf = (posit_decode(b, b_fmt.nbits, es[1]) if isinstance(b_fmt, PositFmt) else b)
+    if b_packed:
+        bf = packed_decode_p8(b, es[1], codec_impl="bits", k=a.shape[1])
+    else:
+        bf = (posit_decode(b, b_fmt.nbits, es[1])
+              if isinstance(b_fmt, PositFmt) else b)
     y = jnp.dot(
         af.astype(compute_dtype), bf.astype(compute_dtype),
         preferred_element_type=jnp.float32,

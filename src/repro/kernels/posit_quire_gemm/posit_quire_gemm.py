@@ -71,8 +71,11 @@ def _quire_gemm_kernel(
     nb, sb, gb, zb, rb = _decode_fields(b_ref[...], b_fmt.nbits, eb)
 
     def step(kk, q):
-        col = lambda x: lax.dynamic_slice_in_dim(x, kk, 1, axis=1)  # (bm, 1)
-        row = lambda x: lax.dynamic_slice_in_dim(x, kk, 1, axis=0)  # (1, bn)
+        def col(x):
+            return lax.dynamic_slice_in_dim(x, kk, 1, axis=1)  # (bm, 1)
+
+        def row(x):
+            return lax.dynamic_slice_in_dim(x, kk, 1, axis=0)  # (1, bn)
         parts = _product_parts(
             (col(na), col(sa), col(ga), col(za), col(ra)),
             (row(nb), row(sb), row(gb), row(zb), row(rb)),

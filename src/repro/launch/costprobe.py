@@ -24,13 +24,11 @@ import dataclasses
 import json
 import sys
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs import get_arch, get_shape
 from repro.core.pcsr import TransPolicy
 from repro.launch.mesh import make_production_mesh
-from repro.launch.dryrun import lower_cell, parse_collectives, _parse_policy
+from repro.launch.dryrun import (cost_analysis_dict, lower_cell,
+                                 parse_collectives, _parse_policy)
 from repro.models.unroll import unroll_mode
 
 
@@ -61,7 +59,7 @@ def _measure(cfg, shape, mesh, policy, grad_sync):
         lowered = lower_cell(cfg, shape, mesh, policy=policy,
                              grad_sync=grad_sync, force_micro=1)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return {
         "flops": cost.get("flops", 0.0),

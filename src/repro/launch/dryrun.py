@@ -111,6 +111,16 @@ def parse_collectives(hlo_text: str) -> dict:
                 "by_dtype": dict(v["by_dtype"])} for k, v in stats.items()}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: newer jax returns a
+    flat dict, older (and some backends) a one-element list of dicts — the
+    ``run_cell`` AttributeError of CHANGES.md (PR 2).  Normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def lower_cell(cfg: ModelCfg, shape: ShapeCfg, mesh, *,
                policy: TransPolicy, grad_sync: str = "gspmd",
                force_micro: int | None = None):
@@ -199,7 +209,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     print(mem)
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     print({k: v for k, v in cost.items()
            if k in ("flops", "bytes accessed") and isinstance(v, (int, float))})
 

@@ -15,6 +15,7 @@ import json
 
 from repro.configs import get_arch, get_shape
 from repro.core.pcsr import TransPolicy
+from repro.core.policy import PRECISION_PRESETS, get_precision_policy
 from repro.launch import costprobe
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops
 
@@ -48,19 +49,40 @@ VARIANTS = {
                           cfg_override={"ssm_chunk": 128}),
 }
 
+# Per-layer precision schedules (core/policy.py) as a hillclimb search
+# dimension: every preset becomes a variant (over the bf16 datapath), and
+# --precision-policy overlays any preset/spec onto any variant's policy.
+VARIANTS.update({
+    f"prec_{name.replace('-', '_')}": dict(
+        policy=pol.with_base(dataclasses.replace(
+            pol.base, compute_dtype="bf16")),
+        cfg_override={})
+    for name, pol in PRECISION_PRESETS.items()
+})
 
-def run_variant(cell: str, variant: str) -> dict:
+
+def run_variant(cell: str, variant: str,
+                precision_policy: str | None = None) -> dict:
     arch, shape_name = CELLS[cell]
     v = VARIANTS[variant]
     cfg = get_arch(arch)
     if v["cfg_override"]:
         cfg = dataclasses.replace(cfg, **v["cfg_override"])
+    policy = v["policy"]
+    if precision_policy:
+        # overlay a per-layer weight schedule onto the variant's base policy
+        base = policy.base if hasattr(policy, "base") else policy
+        policy = get_precision_policy(precision_policy, base=base)
 
     # monkey-patch costprobe's binding so probe_cell sees the override
     orig = costprobe.get_arch
-    costprobe.get_arch = lambda name: cfg if name == arch else orig(name)
+
+    def _arch_override(name):
+        return cfg if name == arch else orig(name)
+
+    costprobe.get_arch = _arch_override
     try:
-        res = costprobe.probe_cell(arch, shape_name, policy=v["policy"])
+        res = costprobe.probe_cell(arch, shape_name, policy=policy)
     finally:
         costprobe.get_arch = orig
 
@@ -87,14 +109,20 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True, choices=sorted(CELLS))
     ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--precision-policy", default=None,
+                    help="per-layer weight schedule overlay: preset name or "
+                         "pattern=fmt[:packed],... spec (core/policy.py)")
     ap.add_argument("--out-dir", default="experiments/hillclimb")
     args = ap.parse_args(argv)
-    res = run_variant(args.cell, args.variant)
+    res = run_variant(args.cell, args.variant,
+                      precision_policy=args.precision_policy)
     print(json.dumps({k: v for k, v in res.items()
                       if not isinstance(v, (list, dict))}, indent=1))
     os.makedirs(args.out_dir, exist_ok=True)
-    with open(os.path.join(args.out_dir,
-                           f"{args.cell}__{args.variant}.json"), "w") as f:
+    tag = f"{args.cell}__{args.variant}"
+    if args.precision_policy:
+        tag += f"__{args.precision_policy.replace('*', '_').replace('/', '_')}"
+    with open(os.path.join(args.out_dir, f"{tag}.json"), "w") as f:
         json.dump(res, f, indent=1)
 
 

@@ -11,6 +11,13 @@ table-driven fast path vs the bit pipeline, repro.core.lut) and
 ``--epilogue`` the layer dataflow (fused keeps gemm->bias->act->residual->
 encode in one op per layer; chained materializes each stage, the baseline
 bench_epilogue_fusion measures against).
+
+``--precision-policy`` schedules *per-layer* weight formats over the base
+policy (core/policy.py): a preset name (uniform-p16 | p8-weights |
+p8-packed | attn-p16-mlp-p8) or an inline ``pattern=fmt[:packed],...`` spec.
+``--quantize-weights`` converts the float weights to real posit storage
+under that schedule (packed-p8 lanes where the policy says so) instead of
+the straight-through fake-quant path, and reports the weight-byte savings.
 """
 from __future__ import annotations
 
@@ -24,7 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core.policy import get_precision_policy
 from repro.launch.train import _parse_policy
+from repro.models.layers import policy_weight_bytes, quantize_params
 from repro.models.registry import build_model
 
 
@@ -41,6 +50,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default="none")
+    ap.add_argument("--precision-policy", default=None,
+                    help="per-layer weight schedule: preset name or "
+                         "pattern=fmt[:packed],... spec (core/policy.py)")
+    ap.add_argument("--quantize-weights", action="store_true",
+                    help="store weights as posit codes (packed-p8 lanes "
+                         "where the policy says so) instead of fake-quant")
     ap.add_argument("--codec-impl", default="auto", choices=("auto", "lut", "bits"))
     ap.add_argument("--epilogue", default="fused", choices=("fused", "chained"))
     ap.add_argument("--seed", type=int, default=0)
@@ -52,8 +67,14 @@ def main(argv=None):
     policy = dataclasses.replace(
         _parse_policy(args.policy),
         codec_impl=args.codec_impl, epilogue=args.epilogue)
+    if args.precision_policy:
+        policy = get_precision_policy(args.precision_policy, base=policy)
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
+    weight_report = {}
+    if args.quantize_weights:
+        weight_report = policy_weight_bytes(params, policy)
+        params = quantize_params(params, policy)
     S_max = args.prompt_len + args.gen
 
     rng = np.random.default_rng(args.seed)
@@ -91,6 +112,7 @@ def main(argv=None):
         "decode_tok_per_s": round(args.batch * (args.gen - 1) / dt, 1),
         "kv_cache_bytes": kv_b,
         "kv_bytes_per_token": kv_b // (args.batch * S_max),
+        **weight_report,
         "sample_tokens": np.stack([np.asarray(t) for t in out_tokens], 1)[0][:8]
         .tolist(),
     }))

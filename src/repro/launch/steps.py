@@ -11,8 +11,7 @@ Two gradient-sync modes (DESIGN.md §5):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelCfg, ShapeCfg
 from repro.core.pcsr import TransPolicy
 from repro.core.types import PositFmt
-from repro.models.registry import Model, build_model
+from repro.models.registry import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
 from repro.optim.schedule import cosine_warmup
 

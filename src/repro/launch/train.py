@@ -10,7 +10,6 @@ straggler monitor, auto-resume) -> metrics log.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 

@@ -133,14 +133,20 @@ def make_mask(S: int, T: int, *, causal: bool, window: int,
 def apply_attention(params: dict, cfg: AttnCfg, x: jax.Array,
                     policy: TransPolicy, *,
                     xattn_kv: Optional[jax.Array] = None,
-                    positions: Optional[jax.Array] = None) -> jax.Array:
-    """Training / prefill full-sequence attention. x: (B, S, D)."""
+                    positions: Optional[jax.Array] = None,
+                    path: str = "attn") -> jax.Array:
+    """Training / prefill full-sequence attention. x: (B, S, D).
+
+    ``path`` names this attention instance for per-layer policy
+    resolution ("attn" | "self" | "cross" — must match the param-tree
+    key so quantize-time and apply-time formats agree, DESIGN.md §9).
+    """
     B, S, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
-    q = _split_heads(apply_linear(params["wq"], x, policy), H, hd)
+    q = _split_heads(apply_linear(params["wq"], x, policy, path=f"{path}/wq"), H, hd)
     kv_src = xattn_kv if cfg.is_cross else x
-    k = _split_heads(apply_linear(params["wk"], kv_src, policy), Hkv, hd)
-    v = _split_heads(apply_linear(params["wv"], kv_src, policy), Hkv, hd)
+    k = _split_heads(apply_linear(params["wk"], kv_src, policy, path=f"{path}/wk"), Hkv, hd)
+    v = _split_heads(apply_linear(params["wv"], kv_src, policy, path=f"{path}/wv"), Hkv, hd)
     if cfg.use_rope and not cfg.is_cross:
         if positions is None:
             positions = jnp.arange(S)[None]
@@ -149,12 +155,14 @@ def apply_attention(params: dict, cfg: AttnCfg, x: jax.Array,
     out = _sdpa(q, k, v, hd ** -0.5,
                 causal=cfg.causal and not cfg.is_cross,
                 window=cfg.window if (cfg.window and not cfg.is_cross) else None)
-    return apply_linear(params["wo"], out.reshape(B, S, H * hd), policy)
+    return apply_linear(params["wo"], out.reshape(B, S, H * hd), policy,
+                        path=f"{path}/wo")
 
 
 def apply_attention_dynwin(params: dict, cfg: AttnCfg, x: jax.Array,
                            policy: TransPolicy, *, window, rope_base,
-                           positions: Optional[jax.Array] = None) -> jax.Array:
+                           positions: Optional[jax.Array] = None,
+                           path: str = "attn") -> jax.Array:
     """apply_attention with window / rope_base as *traced* per-layer scalars.
 
     Lets heterogeneous layer patterns (gemma3 5-local:1-global) run under one
@@ -162,16 +170,17 @@ def apply_attention_dynwin(params: dict, cfg: AttnCfg, x: jax.Array,
     """
     B, S, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
-    q = _split_heads(apply_linear(params["wq"], x, policy), H, hd)
-    k = _split_heads(apply_linear(params["wk"], x, policy), Hkv, hd)
-    v = _split_heads(apply_linear(params["wv"], x, policy), Hkv, hd)
+    q = _split_heads(apply_linear(params["wq"], x, policy, path=f"{path}/wq"), H, hd)
+    k = _split_heads(apply_linear(params["wk"], x, policy, path=f"{path}/wk"), Hkv, hd)
+    v = _split_heads(apply_linear(params["wv"], x, policy, path=f"{path}/wv"), Hkv, hd)
     if cfg.use_rope:
         if positions is None:
             positions = jnp.arange(S)[None]
         q = apply_rope(q, positions, rope_base)
         k = apply_rope(k, positions, rope_base)
     out = _sdpa(q, k, v, hd ** -0.5, causal=True, window=window)
-    return apply_linear(params["wo"], out.reshape(B, S, H * hd), policy)
+    return apply_linear(params["wo"], out.reshape(B, S, H * hd), policy,
+                        path=f"{path}/wo")
 
 
 # ------------------------------------------------------------- KV cache -------
@@ -208,14 +217,15 @@ def _load(cache_arr, policy):
 
 def prefill_attention(params: dict, cfg: AttnCfg, x: jax.Array, cache: dict,
                       policy: TransPolicy,
-                      xattn_kv: Optional[jax.Array] = None) -> tuple:
+                      xattn_kv: Optional[jax.Array] = None,
+                      path: str = "attn") -> tuple:
     """Full-sequence attention that also fills the KV cache. x: (B, S, D)."""
     B, S, _ = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
-    q = _split_heads(apply_linear(params["wq"], x, policy), H, hd)
+    q = _split_heads(apply_linear(params["wq"], x, policy, path=f"{path}/wq"), H, hd)
     kv_src = xattn_kv if cfg.is_cross else x
-    k = _split_heads(apply_linear(params["wk"], kv_src, policy), Hkv, hd)
-    v = _split_heads(apply_linear(params["wv"], kv_src, policy), Hkv, hd)
+    k = _split_heads(apply_linear(params["wk"], kv_src, policy, path=f"{path}/wk"), Hkv, hd)
+    v = _split_heads(apply_linear(params["wv"], kv_src, policy, path=f"{path}/wv"), Hkv, hd)
     if cfg.use_rope and not cfg.is_cross:
         pos = jnp.arange(S)[None]
         q = apply_rope(q, pos, cfg.rope_base)
@@ -224,7 +234,8 @@ def prefill_attention(params: dict, cfg: AttnCfg, x: jax.Array, cache: dict,
     out = _sdpa(q, k, v, hd ** -0.5,
                 causal=cfg.causal and not cfg.is_cross,
                 window=cfg.window if (cfg.window and not cfg.is_cross) else None)
-    y = apply_linear(params["wo"], out.reshape(B, S, H * hd), policy)
+    y = apply_linear(params["wo"], out.reshape(B, S, H * hd), policy,
+                        path=f"{path}/wo")
     cache = dict(cache)
     kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)  # (B,Hkv,T,hd)
     Sc = cache["k"].shape[2]
@@ -242,7 +253,7 @@ def prefill_attention(params: dict, cfg: AttnCfg, x: jax.Array, cache: dict,
 def decode_attention_step(params: dict, cfg: AttnCfg, x_t: jax.Array,
                           cache: dict, pos, policy: TransPolicy,
                           *, rolling: bool = False,
-                          abs_pos=None) -> tuple:
+                          abs_pos=None, path: str = "attn") -> tuple:
     """One decode step. x_t: (B, 1, D); pos: scalar int32 *cache write index*.
 
     rolling=True: the cache is a circular window buffer (gemma3 local layers):
@@ -252,15 +263,16 @@ def decode_attention_step(params: dict, cfg: AttnCfg, x_t: jax.Array,
     """
     B, _, _ = x_t.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
-    q = _split_heads(apply_linear(params["wq"], x_t, policy), H, hd)   # (B,1,H,hd)
+    q = _split_heads(apply_linear(params["wq"], x_t, policy,
+                                  path=f"{path}/wq"), H, hd)   # (B,1,H,hd)
     if cfg.is_cross:
         # cross-attention reads the (already prefilled) encoder cache only
         k = _load(cache["k"], policy)   # (B,Hkv,T,hd)
         v = _load(cache["v"], policy)
         new_cache = cache
     else:
-        kn = _split_heads(apply_linear(params["wk"], x_t, policy), Hkv, hd)
-        vn = _split_heads(apply_linear(params["wv"], x_t, policy), Hkv, hd)
+        kn = _split_heads(apply_linear(params["wk"], x_t, policy, path=f"{path}/wk"), Hkv, hd)
+        vn = _split_heads(apply_linear(params["wv"], x_t, policy, path=f"{path}/wv"), Hkv, hd)
         if cfg.use_rope:
             p1 = jnp.full((1, 1), pos if abs_pos is None else abs_pos, jnp.int32)
             q = apply_rope(q, p1, cfg.rope_base)
@@ -289,5 +301,6 @@ def decode_attention_step(params: dict, cfg: AttnCfg, x_t: jax.Array,
     scores = jnp.where(valid, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgt,bktd->bkgd", p, v).reshape(B, 1, H * hd)
-    y = apply_linear(params["wo"], out.astype(x_t.dtype), policy)
+    y = apply_linear(params["wo"], out.astype(x_t.dtype), policy,
+                     path=f"{path}/wo")
     return y, new_cache

@@ -9,8 +9,6 @@ a self KV cache (posit-compressible) and a prefilled cross KV cache.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -82,7 +80,8 @@ def encode(params: dict, frames: jax.Array, cfg: ModelCfg,
            policy: TransPolicy, *, remat: bool = True) -> jax.Array:
     """frames: (B, T_enc, D) stub embeddings -> encoder states (B, T_enc, D)."""
     T = frames.shape[1]
-    x = apply_linear(params["frame_proj"], frames, policy)
+    x = apply_linear(params["frame_proj"], frames, policy,
+                     path="frame_proj")
     x = x + sinusoidal_positions(T, cfg.d_model)[None].astype(x.dtype)
     ecfg = _enc_attn_cfg(cfg)
 
@@ -111,9 +110,9 @@ def decode_train(params: dict, tokens: jax.Array, enc_out: jax.Array,
     def body(x, p):
         x = maybe_shard(x, "residual")
         h = apply_layernorm(p["ln1"], x)
-        x = x + attn.apply_attention(p["self"], scfg, h, policy)
+        x = x + attn.apply_attention(p["self"], scfg, h, policy, path="self")
         h = apply_layernorm(p["ln2"], x)
-        x = x + attn.apply_attention(p["cross"], ccfg, h, policy,
+        x = x + attn.apply_attention(p["cross"], ccfg, h, policy, path="cross",
                                      xattn_kv=enc_out)
         h = apply_layernorm(p["ln3"], x)
         return apply_gelu_mlp(p["mlp"], h, policy, residual=x), None
@@ -146,9 +145,11 @@ def init_dec_cache(params: dict, frames: jax.Array, cfg: ModelCfg,
 
     def per_layer(p):
         c = attn.init_kv_cache(B, T, ccfg, policy)
-        k = apply_linear(p["cross"]["wk"], enc_out, policy) \
+        k = apply_linear(p["cross"]["wk"], enc_out, policy,
+                         path="cross/wk") \
             .reshape(B, T, cfg.n_kv, cfg.hd)
-        v = apply_linear(p["cross"]["wv"], enc_out, policy) \
+        v = apply_linear(p["cross"]["wv"], enc_out, policy,
+                         path="cross/wv") \
             .reshape(B, T, cfg.n_kv, cfg.hd)
         c["k"] = attn._store(c["k"], k.transpose(0, 2, 1, 3), 0, policy)
         c["v"] = attn._store(c["v"], v.transpose(0, 2, 1, 3), 0, policy)
@@ -164,7 +165,6 @@ def init_dec_cache(params: dict, frames: jax.Array, cfg: ModelCfg,
 
 def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                 policy: TransPolicy) -> tuple[jax.Array, dict]:
-    B = token_t.shape[0]
     pos = cache["pos"]
     x = apply_embedding(params["embed"], token_t[:, None])
     x = x + params["pos_embed"][(pos % MAX_TGT)][None, None].astype(x.dtype)
@@ -173,10 +173,12 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
     def body(x_carry, layer):
         p, cself, ccross = layer
         h = apply_layernorm(p["ln1"], x_carry)
-        a, c2 = attn.decode_attention_step(p["self"], scfg, h, cself, pos, policy)
+        a, c2 = attn.decode_attention_step(p["self"], scfg, h, cself, pos, policy,
+                                           path="self")
         x2 = x_carry + a
         h = apply_layernorm(p["ln2"], x2)
-        a2, _ = attn.decode_attention_step(p["cross"], ccfg, h, ccross, pos, policy)
+        a2, _ = attn.decode_attention_step(p["cross"], ccfg, h, ccross, pos, policy,
+                                            path="cross")
         x2 = x2 + a2
         h = apply_layernorm(p["ln3"], x2)
         return apply_gelu_mlp(p["mlp"], h, policy, residual=x2), c2

@@ -15,12 +15,25 @@ import jax.numpy as jnp
 from repro.core.codec import posit_encode
 from repro.core.dot import apply_epilogue, posit_matmul_wx
 from repro.core.lut import decode_with_impl
+from repro.core.pack import pack_p8, packed_decode_p8
 from repro.core.pcsr import TransPolicy
-from repro.core.types import PositFmt, compute_dtype_for
+from repro.core.types import PositFmt
 
 
 def _compute_dtype(policy: TransPolicy):
     return jnp.float32 if policy.compute_dtype == "f32" else jnp.bfloat16
+
+
+def resolve_policy(policy, path: str = "") -> TransPolicy:
+    """Per-layer policy resolution (DESIGN.md §9).
+
+    A ``PrecisionPolicy`` (core/policy.py) resolves through its rule list for
+    the given layer path; a plain ``TransPolicy`` passes through unchanged.
+    Every linear call site hands its path here, so one object can schedule
+    p16 attention x packed-p8 MLP across a whole model.
+    """
+    resolve = getattr(policy, "policy_for", None)
+    return resolve(path) if resolve is not None else policy
 
 
 # ------------------------------------------------------------------ linear ----
@@ -35,22 +48,40 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
     return p
 
 
-def quantize_linear(p: dict, fmt: PositFmt) -> dict:
-    """Convert a float linear param dict to posit storage (serving path)."""
-    q = {"w_codes": posit_encode(p["w"].astype(jnp.float32), fmt.nbits, fmt.es)}
+def quantize_linear(p: dict, fmt: PositFmt, *, packed: bool = False) -> dict:
+    """Convert a float linear param dict to posit storage (serving path).
+
+    ``packed=True`` stores p8 codes two-per-uint16-lane (core/pack.py):
+    half the weight words at rest and on the wire, identical numerics.
+    """
+    codes = posit_encode(p["w"].astype(jnp.float32), fmt.nbits, fmt.es)
+    if packed:
+        if fmt.nbits != 8:
+            raise ValueError(f"packed weight storage requires p8, got {fmt}")
+        q = {"w_packed": pack_p8(codes)}
+    else:
+        q = {"w_codes": codes}
     if "b" in p:
         q["b"] = p["b"]  # biases stay float: O(d) storage, numerically sensitive
     return q
 
 
-def effective_weight(p: dict, policy: TransPolicy, es=None) -> jax.Array:
+def effective_weight(p: dict, policy: TransPolicy, es=None, path: str = "") -> jax.Array:
     """The weight as seen by the matmul datapath.
 
-    * posit codes       -> decode (exact; bf16 target for p8)
+    * posit codes       -> decode (exact; bf16 target for p8); packed lanes
+                           decode both bytes (bit-identical to unpacked)
     * float + posit pol -> straight-through quantize (training: master weights
                            stay f32, forward sees posit-rounded values)
     * float, no policy  -> as-is (IEEE bypass)
     """
+    policy = resolve_policy(policy, path)
+    if "w_packed" in p:
+        fmt = policy.weights
+        assert fmt is not None and fmt.nbits == 8, \
+            "packed params need a p8 policy.weights"
+        return packed_decode_p8(p["w_packed"], fmt.es if es is None else es,
+                                codec_impl=policy.codec_impl)
     if "w_codes" in p:
         fmt = policy.weights
         assert fmt is not None, "posit-coded params need policy.weights"
@@ -69,29 +100,128 @@ def effective_weight(p: dict, policy: TransPolicy, es=None) -> jax.Array:
 
 def apply_linear(p: dict, x: jax.Array, policy: TransPolicy, es=None, *,
                  activation: str = "none",
-                 residual: Optional[jax.Array] = None) -> jax.Array:
+                 residual: Optional[jax.Array] = None,
+                 path: str = "") -> jax.Array:
     """y = act(x @ W + b) + residual, epilogue fused with the GEMM.
 
     Posit-coded weights route through ``posit_matmul_wx`` so the decode, the
     matmul and the whole epilogue stay one fused op (one kernel launch / HBM
-    write on the serving path); ``policy.epilogue == "chained"`` materializes
-    every stage instead (the benchmark baseline).
+    write on the serving path); packed-p8 storage ("w_packed") moves half the
+    weight words and decodes both lanes in the same fused op.
+    ``policy.epilogue == "chained"`` materializes every stage instead (the
+    benchmark baseline).  ``path`` is this layer's name for per-layer
+    ``PrecisionPolicy`` resolution (DESIGN.md §9).
     """
+    policy = resolve_policy(policy, path)
     cd = _compute_dtype(policy)
-    if "w_codes" in p:
+    packed = "w_packed" in p
+    if packed or "w_codes" in p:
         fmt = policy.weights
         assert fmt is not None, "posit-coded params need policy.weights"
         return posit_matmul_wx(
-            x.astype(cd), p["w_codes"], fmt, es=es, compute_dtype=cd,
+            x.astype(cd), p["w_packed"] if packed else p["w_codes"], fmt,
+            es=es, compute_dtype=cd,
             bias=p.get("b"), activation=activation, residual=residual,
             codec_impl=policy.codec_impl, epilogue=policy.epilogue,
-            out_dtype=x.dtype)
+            out_dtype=x.dtype, packed=packed)
     w = effective_weight(p, policy, es).astype(cd)
     y = jnp.matmul(x.astype(cd), w, preferred_element_type=jnp.float32)
     if "b" in p or activation != "none" or residual is not None:
         y = apply_epilogue(y, p.get("b"), activation, residual,
                            chained=policy.epilogue == "chained")
     return y.astype(x.dtype)
+
+
+# linear-shaped param-dict keys quantize_params recognizes: the {"w": ...}
+# convention plus MoE's stacked expert tensors (effective_weight handles
+# "<name>_codes" for those; packing applies to plain linears only).
+_MOE_WEIGHT_KEYS = ("w_gate", "w_up", "w_down")
+
+# Param paths quantize_params must leave alone even though they look like
+# linears: SSM causal-conv kernels are {"w", "b"} dicts consumed raw by
+# _causal_conv (O(width*C) storage — not worth posit-coding anyway).
+_RAW_WEIGHT_PATTERNS = ("*conv*",)
+
+
+def _walk_linears(tree, path=""):
+    """Yield (path, parent, key_kind) for every linear-shaped param dict."""
+    if isinstance(tree, dict):
+        if "w" in tree and getattr(tree["w"], "ndim", 0) >= 2:
+            yield path, tree, "w"
+        for k in _MOE_WEIGHT_KEYS:
+            if k in tree and getattr(tree[k], "ndim", 0) >= 2:
+                yield (f"{path}/{k}" if path else k), tree, k
+        for k, v in tree.items():
+            if k in ("w",) + _MOE_WEIGHT_KEYS:
+                continue
+            yield from _walk_linears(v, f"{path}/{k}" if path else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk_linears(v, f"{path}/{i}" if path else str(i))
+
+
+def quantize_params(params, policy):
+    """Quantize every linear weight to its per-layer policy format.
+
+    Walks the param tree; each linear dict {"w": ...} at path P becomes posit
+    storage per ``resolve_policy(policy, P)`` — packed-p8 lanes when the
+    resolved policy says ``pack_weights`` (and the contraction dim is even;
+    odd dims keep unpacked codes), plain codes otherwise, untouched when the
+    resolved weights format is None.  MoE expert stacks ("w_gate"/"w_up"/
+    "w_down") quantize to "<name>_codes" (unpacked — the expert einsum path
+    reads whole tensors).  Returns a new tree; float master params are not
+    modified.
+    """
+    import fnmatch
+
+    out = _copy_dicts(params)
+    for path, parent, key in _walk_linears(out, ""):
+        if any(fnmatch.fnmatchcase(path, pat) for pat in _RAW_WEIGHT_PATTERNS):
+            continue
+        pol = resolve_policy(policy, path)
+        fmt = pol.weights
+        if fmt is None:
+            continue
+        if key == "w":
+            packed = (pol.pack_weights and fmt.nbits == 8
+                      and parent["w"].shape[-2] % 2 == 0)
+            q = quantize_linear(parent, fmt, packed=packed)
+            parent.pop("w")
+            parent.update(q)
+        else:  # stacked MoE expert weights
+            parent[key + "_codes"] = posit_encode(
+                parent.pop(key).astype(jnp.float32), fmt.nbits, fmt.es)
+    return out
+
+
+def _copy_dicts(tree):
+    """Deep-copy the dict/list spine of a param tree (leaves shared)."""
+    if isinstance(tree, dict):
+        return {k: _copy_dicts(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_copy_dicts(v) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(_copy_dicts(v) for v in tree)
+    return tree
+
+
+def policy_weight_bytes(params, policy) -> dict:
+    """Storage model: linear-weight bytes at rest under ``policy`` vs f32.
+
+    The Table-IV memory-savings number at model scale — packed p8 counts one
+    byte per value (two codes per uint16 lane)."""
+    import fnmatch
+
+    f32_b = policy_b = 0
+    for path, parent, key in _walk_linears(params, ""):
+        w = parent[key]
+        n = int(w.size)
+        f32_b += 4 * n
+        pol = resolve_policy(policy, path)
+        fmt = pol.weights
+        raw = any(fnmatch.fnmatchcase(path, pat) for pat in _RAW_WEIGHT_PATTERNS)
+        policy_b += n * (fmt.storage_bytes if fmt is not None and not raw else 4)
+    return {"weight_bytes_f32": f32_b, "weight_bytes_policy": policy_b}
 
 
 # ------------------------------------------------------------------- norms ----
@@ -155,13 +285,16 @@ def init_swiglu(key, d: int, f: int) -> dict:
 
 
 def apply_swiglu(p: dict, x: jax.Array, policy: TransPolicy, *,
-                 residual: Optional[jax.Array] = None) -> jax.Array:
+                 residual: Optional[jax.Array] = None,
+                 path: str = "mlp") -> jax.Array:
     """silu fuses into the gate GEMM's epilogue; an optional block residual
     fuses into the down-projection (3 fused ops per MLP instead of 6+)."""
-    g = apply_linear(p["gate"], x, policy, activation="silu")
-    u = apply_linear(p["up"], x, policy)
+    g = apply_linear(p["gate"], x, policy, activation="silu",
+                     path=f"{path}/gate")
+    u = apply_linear(p["up"], x, policy, path=f"{path}/up")
     h = g * u
-    return apply_linear(p["down"], h, policy, residual=residual)
+    return apply_linear(p["down"], h, policy, residual=residual,
+                        path=f"{path}/down")
 
 
 def init_gelu_mlp(key, d: int, f: int, *, bias: bool = True) -> dict:
@@ -173,11 +306,14 @@ def init_gelu_mlp(key, d: int, f: int, *, bias: bool = True) -> dict:
 
 
 def apply_gelu_mlp(p: dict, x: jax.Array, policy: TransPolicy, *,
-                   residual: Optional[jax.Array] = None) -> jax.Array:
+                   residual: Optional[jax.Array] = None,
+                   path: str = "mlp") -> jax.Array:
     """gelu fuses into the up-projection epilogue; optional block residual
     fuses into the down-projection."""
-    h = apply_linear(p["up"], x, policy, activation="gelu")
-    return apply_linear(p["down"], h, policy, residual=residual)
+    h = apply_linear(p["up"], x, policy, activation="gelu",
+                     path=f"{path}/up")
+    return apply_linear(p["down"], h, policy, residual=residual,
+                        path=f"{path}/down")
 
 
 # -------------------------------------------------------------- embeddings ----

@@ -34,7 +34,7 @@ def init_moe(key, d: int, f: int, n_experts: int) -> dict:
 def _expert_weight(p, name, policy: TransPolicy):
     return effective_weight(
         {"w": p[name]} if name in p else {"w_codes": p[name + "_codes"]},
-        policy)
+        policy, path=f"moe/{name}")
 
 
 def apply_moe(p: dict, x: jax.Array, *, top_k: int, capacity_factor: float,
@@ -42,10 +42,13 @@ def apply_moe(p: dict, x: jax.Array, *, top_k: int, capacity_factor: float,
     """x: (B, S, D) -> (same shape, aux load-balancing loss)."""
     B, S, D = x.shape
     T = B * S
-    E = p["w_gate"].shape[0]
+    # experts may be stored as float ("w_gate") or posit codes after
+    # quantize_params ("w_gate_codes") — same (E, D, F) shape either way
+    E = (p["w_gate"] if "w_gate" in p else p["w_gate_codes"]).shape[0]
     xf = x.reshape(T, D)
 
-    logits = apply_linear(p["router"], xf, policy).astype(jnp.float32)  # (T, E)
+    logits = apply_linear(p["router"], xf, policy,
+                          path="moe/router").astype(jnp.float32)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_e = jax.lax.top_k(probs, top_k)                          # (T, k)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)

@@ -11,13 +11,9 @@ prefix (assignment: modality frontends are stubs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Callable
 
 from repro.configs.base import ModelCfg
-from repro.core.pcsr import TransPolicy
 from repro.models import encdec, transformer
 
 
@@ -46,8 +42,6 @@ def build_model(cfg: ModelCfg) -> Model:
             decode_step=lambda p, tok, cache, pol: encdec.decode_step(
                 p, tok, cache, cfg, pol),
         )
-
-    lm_family = cfg.family if cfg.family != "vlm" else "dense"
 
     def loss(p, b, pol):
         return transformer.lm_loss(p, b, cfg, pol)

@@ -140,15 +140,15 @@ def apply_ssm(p: dict, cfg: SSMCfg, x: jax.Array, policy: TransPolicy) -> jax.Ar
     n_chunks = -(-S // L)
     Sp = n_chunks * L
 
-    z = apply_linear(p["z_proj"], x, policy)
-    xs_r = _causal_conv(apply_linear(p["x_proj"], x, policy),
+    z = apply_linear(p["z_proj"], x, policy, path="ssm/z_proj")
+    xs_r = _causal_conv(apply_linear(p["x_proj"], x, policy, path="ssm/x_proj"),
                         p["conv_x"]["w"], p["conv_x"]["b"])
-    Bm = _causal_conv(apply_linear(p["B_proj"], x, policy),
+    Bm = _causal_conv(apply_linear(p["B_proj"], x, policy, path="ssm/B_proj"),
                       p["conv_B"]["w"], p["conv_B"]["b"])     # (B, S, N)
-    Cm = _causal_conv(apply_linear(p["C_proj"], x, policy),
+    Cm = _causal_conv(apply_linear(p["C_proj"], x, policy, path="ssm/C_proj"),
                       p["conv_C"]["w"], p["conv_C"]["b"])     # (B, S, N)
     xs = xs_r.reshape(B, S, nh, hp)
-    dt = apply_linear(p["dt_proj"], x, policy)
+    dt = apply_linear(p["dt_proj"], x, policy, path="ssm/dt_proj")
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, S, nh)
     A = -jnp.exp(p["A_log"])                       # (nh,) negative
 
@@ -197,7 +197,7 @@ def apply_ssm(p: dict, cfg: SSMCfg, x: jax.Array, policy: TransPolicy) -> jax.Ar
     y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, nh, hp)[:, :S]
     y = y + xs.reshape(B, Sp, nh, hp)[:, :S] * p["D"][None, None, :, None]
     y = _gated_rmsnorm(y.reshape(B, S, di), z, p["norm_g"])
-    return apply_linear(p["out_proj"], y.astype(x.dtype), policy)
+    return apply_linear(p["out_proj"], y.astype(x.dtype), policy, path="ssm/out_proj")
 
 
 # ------------------------------------------------------------- decode step ----
@@ -216,11 +216,11 @@ def decode_ssm_step(p: dict, cfg: SSMCfg, x_t: jax.Array, state: dict,
     """x_t: (B, 1, D) -> (B, 1, D); O(1) state update."""
     B = x_t.shape[0]
     di, N, nh, hp = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
-    z = apply_linear(p["z_proj"], x_t, policy)
-    x_in = apply_linear(p["x_proj"], x_t, policy)[:, 0].astype(jnp.float32)
+    z = apply_linear(p["z_proj"], x_t, policy, path="ssm/z_proj")
+    x_in = apply_linear(p["x_proj"], x_t, policy, path="ssm/x_proj")[:, 0].astype(jnp.float32)
     bc_in = jnp.concatenate(
-        [apply_linear(p["B_proj"], x_t, policy)[:, 0],
-         apply_linear(p["C_proj"], x_t, policy)[:, 0]], -1).astype(jnp.float32)
+        [apply_linear(p["B_proj"], x_t, policy, path="ssm/B_proj")[:, 0],
+         apply_linear(p["C_proj"], x_t, policy, path="ssm/C_proj")[:, 0]], -1).astype(jnp.float32)
     hist = jnp.concatenate([state["conv"], x_in[:, None, :]], axis=1)
     histBC = jnp.concatenate([state["convBC"], bc_in[:, None, :]], axis=1)
     wBC = jnp.concatenate([p["conv_B"]["w"], p["conv_C"]["w"]], -1)
@@ -230,7 +230,7 @@ def decode_ssm_step(p: dict, cfg: SSMCfg, x_t: jax.Array, state: dict,
     bct = jax.nn.silu(jnp.einsum("bwc,wc->bc", histBC, wBC) + bBC)
     Bt, Ct = bct[:, :N], bct[:, N:]
     dtt = jax.nn.softplus(
-        apply_linear(p["dt_proj"], x_t, policy)[:, 0].astype(jnp.float32)
+        apply_linear(p["dt_proj"], x_t, policy, path="ssm/dt_proj")[:, 0].astype(jnp.float32)
         + p["dt_bias"])  # (B, nh)
     A = -jnp.exp(p["A_log"])
     decay = jnp.exp(dtt * A)                                    # (B, nh)
@@ -238,6 +238,6 @@ def decode_ssm_step(p: dict, cfg: SSMCfg, x_t: jax.Array, state: dict,
         state["h"], decay, jnp.einsum("bn,bhp,bh->bhpn", Bt, xt, dtt), policy)
     y = jnp.einsum("bhpn,bn->bhp", h, Ct) + xt * p["D"][None, :, None]
     y = _gated_rmsnorm(y.reshape(B, 1, di), z, p["norm_g"])
-    out = apply_linear(p["out_proj"], y.astype(x_t.dtype), policy)
+    out = apply_linear(p["out_proj"], y.astype(x_t.dtype), policy, path="ssm/out_proj")
     new_state = {"h": h, "conv": hist[:, 1:], "convBC": histBC[:, 1:]}
     return out, new_state

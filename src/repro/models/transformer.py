@@ -10,7 +10,6 @@ per-layer scalar arrays fed as scan xs, or segment boundaries.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
@@ -24,7 +23,7 @@ from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.attention import AttnCfg
 from repro.models.shardhooks import maybe_shard
-from repro.models.unroll import scan_or_unroll, unrolled
+from repro.models.unroll import scan_or_unroll
 from repro.models.layers import (apply_embedding, apply_linear, apply_rmsnorm,
                                  apply_swiglu, embedding_logits, init_embedding,
                                  init_linear, init_rmsnorm, init_swiglu)
@@ -162,7 +161,8 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelCfg,
     """tokens: (B, S) -> hidden (B, S_total, D), aux loss. (vlm: patches prefix)."""
     x = apply_embedding(params["embed"], tokens)
     if patch_embeds is not None:
-        pe = apply_linear(params["patch_proj"], patch_embeds, policy)
+        pe = apply_linear(params["patch_proj"], patch_embeds, policy,
+                          path="patch_proj")
         x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
     B, S, _ = x.shape
     aux_total = jnp.float32(0.0)
@@ -271,7 +271,8 @@ def logits_fn(params: dict, h: jax.Array, cfg: ModelCfg,
               policy: TransPolicy) -> jax.Array:
     if cfg.tie_embeddings:
         return embedding_logits(params["embed"], h)
-    return apply_linear(params["lm_head"], h, policy).astype(jnp.float32)
+    return apply_linear(params["lm_head"], h, policy,
+                        path="lm_head").astype(jnp.float32)
 
 
 def lm_loss(params: dict, batch: dict, cfg: ModelCfg, policy: TransPolicy,
@@ -463,7 +464,8 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelCfg,
     cache = init_cache(cfg, B, S_max, policy)
     x = apply_embedding(params["embed"], tokens)
     if patch_embeds is not None:
-        pe = apply_linear(params["patch_proj"], patch_embeds, policy)
+        pe = apply_linear(params["patch_proj"], patch_embeds, policy,
+                          path="patch_proj")
         x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
 
     if cfg.family in ("dense", "moe", "gemma3", "vlm"):

@@ -44,10 +44,14 @@ def scan_or_unroll(f, init, xs, length=None):
         return jax.lax.scan(f, init, xs, length=length)
     if xs is None:
         n = length
-        get = lambda i: None
+
+        def get(i):
+            return None
     else:
         n = jax.tree.leaves(xs)[0].shape[0]
-        get = lambda i: jax.tree.map(lambda a: a[i], xs)
+
+        def get(i):
+            return jax.tree.map(lambda a: a[i], xs)
     carry = init
     ys = []
     for i in range(n):

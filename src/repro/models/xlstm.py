@@ -60,13 +60,14 @@ def apply_mlstm(p: dict, cfg: XLSTMCfg, x: jax.Array, policy: TransPolicy) -> ja
     n_chunks = -(-S // L)
     Sp = n_chunks * L
 
-    ug = apply_linear(p["up"], x, policy)
+    ug = apply_linear(p["up"], x, policy, path="blk/up")
     xi, z = ug[..., :di], ug[..., di:]
-    q = apply_linear(p["wq"], xi, policy).reshape(B, S, nh, hd)
-    k = apply_linear(p["wk"], xi, policy).reshape(B, S, nh, hd) * (hd ** -0.5)
-    v = apply_linear(p["wv"], xi, policy).reshape(B, S, nh, hd)
-    ig = apply_linear(p["wi"], xi, policy).astype(jnp.float32)      # (B,S,nh) log-space
-    fg = jax.nn.log_sigmoid(apply_linear(p["wf"], xi, policy).astype(jnp.float32))
+    q = apply_linear(p["wq"], xi, policy, path="blk/wq").reshape(B, S, nh, hd)
+    k = apply_linear(p["wk"], xi, policy, path="blk/wk").reshape(B, S, nh, hd) * (hd ** -0.5)
+    v = apply_linear(p["wv"], xi, policy, path="blk/wv").reshape(B, S, nh, hd)
+    ig = apply_linear(p["wi"], xi, policy,
+                      path="blk/wi").astype(jnp.float32)  # (B,S,nh) log-space
+    fg = jax.nn.log_sigmoid(apply_linear(p["wf"], xi, policy, path="blk/wf").astype(jnp.float32))
 
     if Sp != S:
         pad4 = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
@@ -125,7 +126,7 @@ def apply_mlstm(p: dict, cfg: XLSTMCfg, x: jax.Array, policy: TransPolicy) -> ja
         .reshape(B, S, di)
     y = apply_rmsnorm(p["norm"], y.astype(x.dtype))
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
-    return apply_linear(p["down"], y, policy)
+    return apply_linear(p["down"], y, policy, path="blk/down")
 
 
 def init_mlstm_state(B: int, cfg: XLSTMCfg) -> dict:
@@ -141,14 +142,14 @@ def decode_mlstm_step(p: dict, cfg: XLSTMCfg, x_t: jax.Array, state: dict,
                       policy: TransPolicy) -> tuple[jax.Array, dict]:
     B = x_t.shape[0]
     nh, hd, di = cfg.n_heads, cfg.head_dim, cfg.d_inner
-    ug = apply_linear(p["up"], x_t, policy)
+    ug = apply_linear(p["up"], x_t, policy, path="blk/up")
     xi, z = ug[..., :di], ug[..., di:]
-    q = apply_linear(p["wq"], xi, policy).reshape(B, nh, hd).astype(jnp.float32)
-    k = (apply_linear(p["wk"], xi, policy).reshape(B, nh, hd) * (hd ** -0.5)) \
+    q = apply_linear(p["wq"], xi, policy, path="blk/wq").reshape(B, nh, hd).astype(jnp.float32)
+    k = (apply_linear(p["wk"], xi, policy, path="blk/wk").reshape(B, nh, hd) * (hd ** -0.5)) \
         .astype(jnp.float32)
-    v = apply_linear(p["wv"], xi, policy).reshape(B, nh, hd).astype(jnp.float32)
-    ig = apply_linear(p["wi"], xi, policy).astype(jnp.float32).reshape(B, nh)
-    fg = jax.nn.log_sigmoid(apply_linear(p["wf"], xi, policy).astype(jnp.float32)) \
+    v = apply_linear(p["wv"], xi, policy, path="blk/wv").reshape(B, nh, hd).astype(jnp.float32)
+    ig = apply_linear(p["wi"], xi, policy, path="blk/wi").astype(jnp.float32).reshape(B, nh)
+    fg = jax.nn.log_sigmoid(apply_linear(p["wf"], xi, policy, path="blk/wf").astype(jnp.float32)) \
         .reshape(B, nh)
     m_new = jnp.maximum(state["m"] + fg, ig)
     decay = jnp.exp(state["m"] + fg - m_new)
@@ -161,7 +162,7 @@ def decode_mlstm_step(p: dict, cfg: XLSTMCfg, x_t: jax.Array, state: dict,
     y = y / jnp.maximum(den, jnp.exp(-m_new))[:, :, None]
     y = apply_rmsnorm(p["norm"], y.reshape(B, 1, di).astype(x_t.dtype))
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype)
-    return apply_linear(p["down"], y, policy), {"C": C, "n": n, "m": m_new}
+    return apply_linear(p["down"], y, policy, path="blk/down"), {"C": C, "n": n, "m": m_new}
 
 
 # --------------------------------------------------------------- sLSTM --------
@@ -187,7 +188,7 @@ def apply_slstm(p: dict, cfg: XLSTMCfg, x: jax.Array, policy: TransPolicy) -> ja
     B, S, d = x.shape
     nh = cfg.n_heads
     dh = d // nh
-    gates_x = apply_linear(p["wx"], x, policy).astype(jnp.float32)  # (B,S,4d)
+    gates_x = apply_linear(p["wx"], x, policy, path="blk/wx").astype(jnp.float32)  # (B,S,4d)
 
     def step(carry, gx):
         c, n, m, h = carry                      # each (B, nh, dh) / m: (B,nh,dh)
@@ -210,10 +211,10 @@ def apply_slstm(p: dict, cfg: XLSTMCfg, x: jax.Array, policy: TransPolicy) -> ja
     _, hs = jax.lax.scan(step, init, gates_x.transpose(1, 0, 2))
     y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
     y = apply_rmsnorm(p["norm"], x + y)
-    u = apply_linear(p["ffn_up"], y, policy)
+    u = apply_linear(p["ffn_up"], y, policy, path="blk/ffn_up")
     f = u.shape[-1] // 2
     h = jax.nn.gelu(u[..., :f].astype(jnp.float32)).astype(x.dtype) * u[..., f:]
-    return apply_linear(p["ffn_down"], h, policy)
+    return apply_linear(p["ffn_down"], h, policy, path="blk/ffn_down")
 
 
 def init_slstm_state(B: int, cfg: XLSTMCfg) -> dict:
@@ -227,7 +228,7 @@ def decode_slstm_step(p: dict, cfg: XLSTMCfg, x_t: jax.Array, state: dict,
     B, _, d = x_t.shape
     nh = cfg.n_heads
     dh = d // nh
-    gx = apply_linear(p["wx"], x_t, policy).astype(jnp.float32)[:, 0]
+    gx = apply_linear(p["wx"], x_t, policy, path="blk/wx").astype(jnp.float32)[:, 0]
     rec = jnp.einsum("bhd,hde->bhe", state["h"], p["r"]).reshape(B, nh, 4 * dh)
     g = gx.reshape(B, nh, 4 * dh) + rec
     zt = jnp.tanh(g[..., :dh])
@@ -241,8 +242,8 @@ def decode_slstm_step(p: dict, cfg: XLSTMCfg, x_t: jax.Array, state: dict,
     n_new = f_s * state["n"] + i_s
     h_new = ot * c_new / jnp.maximum(n_new, 1.0)
     y = apply_rmsnorm(p["norm"], x_t + h_new.reshape(B, 1, d).astype(x_t.dtype))
-    u = apply_linear(p["ffn_up"], y, policy)
+    u = apply_linear(p["ffn_up"], y, policy, path="blk/ffn_up")
     f = u.shape[-1] // 2
     h = jax.nn.gelu(u[..., :f].astype(jnp.float32)).astype(x_t.dtype) * u[..., f:]
-    out = apply_linear(p["ffn_down"], h, policy)
+    out = apply_linear(p["ffn_down"], h, policy, path="blk/ffn_down")
     return out, {"c": c_new, "n": n_new, "m": m_new, "h": h_new}

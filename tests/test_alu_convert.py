@@ -12,7 +12,7 @@ except ImportError:  # pragma: no cover
     given = settings = st = None
 
 from repro.core import alu, convert, ref_codec
-from repro.core.codec import posit_decode, posit_encode
+from repro.core.codec import posit_decode
 
 
 # --------------------------------------------------------------------- ALU ----

@@ -1,0 +1,117 @@
+"""benchmarks/compare.py — the CI benchmark regression gate."""
+import json
+
+import pytest
+
+from benchmarks import compare as cmp
+
+
+def _write(dirpath, bench, rows, *, ok=True, smoke=True, backend="cpu"):
+    rec = {"bench": bench, "ok": ok, "smoke": smoke, "backend": backend,
+           "elapsed_s": 1.0, "rows": rows}
+    (dirpath / f"BENCH_{bench}.json").write_text(json.dumps(rec))
+
+
+def _row(name, us, derived=""):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    old = tmp_path / "old"
+    new = tmp_path / "new"
+    old.mkdir()
+    new.mkdir()
+    return old, new
+
+
+def test_identical_runs_pass(dirs):
+    old, new = dirs
+    rows = [_row("g/x", 100.0, "rel_err=0.01000")]
+    _write(old, "mixed", rows)
+    _write(new, "mixed", rows)
+    rc = cmp.main(["--old", str(old), "--new", str(new)])
+    assert rc == 0
+
+
+def test_throughput_regression_fails(dirs):
+    old, new = dirs
+    _write(old, "mixed", [_row("g/x", 100.0)])
+    _write(new, "mixed", [_row("g/x", 130.0)])  # +30% > 15% gate
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 1
+    # within the gate -> pass
+    _write(new, "mixed", [_row("g/x", 110.0)])
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 0
+
+
+def test_small_rows_skipped_as_noise(dirs):
+    old, new = dirs
+    _write(old, "mixed", [_row("g/tiny", 10.0)])
+    _write(new, "mixed", [_row("g/tiny", 40.0)])  # 4x, but under --min-us
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 0
+    assert cmp.main(["--old", str(old), "--new", str(new),
+                     "--min-us", "5"]) == 1
+
+
+def test_accuracy_regression_fails(dirs):
+    old, new = dirs
+    _write(old, "quire", [_row("dot", 500.0, "mean_ulp=0.0 rel_err=0.00900")])
+    _write(new, "quire", [_row("dot", 500.0, "mean_ulp=2.0 rel_err=0.00900")])
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 1
+    # equal accuracy passes
+    _write(new, "quire", [_row("dot", 500.0, "mean_ulp=0.0 rel_err=0.00900")])
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 0
+    # improvement passes
+    _write(new, "quire", [_row("dot", 500.0, "mean_ulp=0.0 rel_err=0.00100")])
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 0
+
+
+def test_accuracy_nan_or_vanished_metric_fails(dirs):
+    old, new = dirs
+    _write(old, "mixed", [_row("g/x", 500.0, "rel_err=0.00123")])
+    # metric collapses to NaN -> regression
+    _write(new, "mixed", [_row("g/x", 500.0, "rel_err=nan")])
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 1
+    # metric goes to inf -> regression
+    _write(new, "mixed", [_row("g/x", 500.0, "rel_err=inf")])
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 1
+    # metric vanishes from the row entirely -> regression
+    _write(new, "mixed", [_row("g/x", 500.0, "")])
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 1
+
+
+def test_missing_old_dir(dirs, tmp_path):
+    _, new = dirs
+    _write(new, "mixed", [_row("g/x", 100.0)])
+    missing = str(tmp_path / "nope")
+    assert cmp.main(["--old", missing, "--new", str(new)]) == 1
+    assert cmp.main(["--old", missing, "--new", str(new),
+                     "--allow-missing"]) == 0
+
+
+def test_added_removed_rows_and_config_mismatch(dirs):
+    old, new = dirs
+    _write(old, "mixed", [_row("g/old_only", 100.0)])
+    _write(new, "mixed", [_row("g/new_only", 100.0)])
+    _write(new, "table4", [_row("g/x", 100.0)])  # whole bench is new
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 0
+    rows, regs = cmp.compare(cmp.load_dir(str(old)), cmp.load_dir(str(new)))
+    status = {(r["bench"], r["row"]): r["status"] for r in rows}
+    assert status[("mixed", "g/new_only")] == "added"
+    assert status[("mixed", "g/old_only")] == "removed"
+    assert status[("table4", "(new benchmark)")] == "added"
+    # smoke vs full runs never compare
+    _write(new, "mixed", [_row("g/old_only", 900.0)], smoke=False)
+    assert cmp.main(["--old", str(old), "--new", str(new)]) == 0
+
+
+def test_summary_markdown(dirs, tmp_path):
+    old, new = dirs
+    _write(old, "mixed", [_row("g/x", 100.0)])
+    _write(new, "mixed", [_row("g/x", 130.0)])
+    summary = tmp_path / "summary.md"
+    rc = cmp.main(["--old", str(old), "--new", str(new),
+                   "--summary", str(summary)])
+    assert rc == 1
+    text = summary.read_text()
+    assert "| bench |" in text and "REGRESSION" in text

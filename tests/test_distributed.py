@@ -34,7 +34,8 @@ else:
     from jax.experimental.shard_map import shard_map as _sm
     _sm_kw = {"check_rep": False}
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("pod", "data"))
 rng = np.random.default_rng(0)
 M = 1 << 14
 x = jnp.asarray(rng.normal(0, 1e-3, (8, M)).astype(np.float32))
@@ -104,7 +105,7 @@ def child_results():
     r = subprocess.run([sys.executable, "-c", _CHILD], env=env,
                        capture_output=True, text=True, timeout=600,
                        cwd=os.path.dirname(os.path.dirname(__file__)))
-    lines = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")]
+    lines = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")]
     assert lines, f"child failed:\n{r.stderr[-2000:]}"
     return json.loads(lines[0][7:])
 
@@ -136,7 +137,6 @@ def test_exact_compressed_psum_accurate(child_results):
 def test_ftz_matches_rne_to_zero_union():
     """ftz encode == RNE against {0} U posits (checked vs oracle + midpoint)."""
     n, es = 16, 1
-    minpos = 2.0 ** -(14 << es >> es * 0)  # placeholder; compute properly below
     from repro.core.types import PositFmt
     fmt = PositFmt(n, es)
     xs = np.array([0.0, fmt.minpos / 4, fmt.minpos / 2, fmt.minpos * 0.51,

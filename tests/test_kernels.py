@@ -11,7 +11,6 @@ import pytest
 
 from repro.core import F32, BF16, P8_0, P8_2, P16_1, P16_2
 from repro.core.codec import posit_decode, posit_encode
-from repro.core.pcsr import OperandSlots as OS
 from repro.kernels.posit_gemm.posit_gemm import posit_gemm
 from repro.kernels.posit_gemm.ref import posit_gemm_ref
 from repro.kernels.posit_codec.posit_codec import decode_kernel, encode_kernel

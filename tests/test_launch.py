@@ -1,13 +1,16 @@
 """Launch-layer unit tests: collective parsing, sharding rules, roofline math,
-param counting — everything that doesn't need 512 devices."""
-import numpy as np
+param counting, the dry-run cell driver — everything that doesn't need 512
+devices."""
+import dataclasses
+
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import SHAPES, cells, get_arch, get_shape, list_archs
-from repro.launch.dryrun import parse_collectives
+from repro.configs import cells, get_arch, get_shape
+from repro.launch import dryrun
+from repro.launch.dryrun import cost_analysis_dict, parse_collectives
+from repro.launch.mesh import make_mesh_compat
 from repro.launch.roofline import analyse, model_flops, param_count
 from repro.launch.sharding import param_spec
 
@@ -107,6 +110,43 @@ def test_model_flops_scaling():
     assert abs(tr / pf - 3.0) < 1e-6
     # decode: 128 tokens vs 1M -> tiny
     assert dc < pf / 1000
+
+
+def test_cost_analysis_dict_normalizes_list():
+    """Older jax returns cost_analysis() as a one-element list of dicts —
+    the run_cell AttributeError this helper fixes."""
+    class FakeCompiled:
+        def __init__(self, ret):
+            self._ret = ret
+
+        def cost_analysis(self):
+            return self._ret
+
+    assert cost_analysis_dict(FakeCompiled({"flops": 1.0})) == {"flops": 1.0}
+    assert cost_analysis_dict(FakeCompiled([{"flops": 2.0}])) == {"flops": 2.0}
+    assert cost_analysis_dict(FakeCompiled([])) == {}
+    assert cost_analysis_dict(FakeCompiled(None)) == {}
+
+
+def test_dryrun_run_cell(monkeypatch):
+    """The dry-run driver end to end on a reduced cell and a 1-chip mesh:
+    lower, compile, extract memory/cost/collectives without error (covers
+    the cost_analysis list/dict normalization in situ)."""
+    cfg = get_arch("phi3-mini-3.8b").reduced()
+    shape = dataclasses.replace(
+        get_shape("decode_32k"), seq_len=64, global_batch=4)
+    mesh = make_mesh_compat((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])
+    monkeypatch.setattr(dryrun, "get_arch", lambda name: cfg)
+    monkeypatch.setattr(dryrun, "get_shape", lambda name: shape)
+    monkeypatch.setattr(dryrun, "make_production_mesh",
+                        lambda *, multi_pod: mesh)
+    res = dryrun.run_cell("phi3-mini-3.8b", "decode_32k", multi_pod=False,
+                          policy=dryrun._parse_policy("p8-serve"))
+    assert "error" not in res
+    assert res["n_chips"] == 1
+    assert res["flops_per_device"] >= 0
+    assert res["memory"]["argument_bytes"] > 0
 
 
 def test_roofline_analyse():

@@ -1,0 +1,405 @@
+"""Mixed-precision subsystem tests (DESIGN.md §9).
+
+* packed-p8 lanes: pack/unpack roundtrip, exhaustive dual-lane decode
+  bit-exactness vs the unpacked codec
+* mixed p8 x p16 operand formats: exhaustive product correctness vs the
+  ref_codec Fraction oracle across all es pairs; fused == unfused;
+  format-pair dispatch plan
+* packed Pallas GEMM kernel vs its jnp oracle (interpret mode)
+* quire-dataflow mixed dot: bit-exact vs the exact Fraction sum
+* per-layer PrecisionPolicy resolution + packed quantized layers
+"""
+from fractions import Fraction
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BF16, F32, P8_0, P16_1, OperandSlots, TransPolicy, posit_decode,
+    posit_dot, posit_encode,
+)
+from repro.core import ref_codec
+from repro.core.dot import format_pair_plan
+from repro.core.pack import (
+    pack_p8, packed_decode_p8, packed_half_k, split_activations, unpack_p8,
+)
+from repro.core.pcsr import OperandSlots as OS
+from repro.core.policy import (
+    PRECISION_PRESETS, LayerRule, PrecisionPolicy, get_precision_policy,
+)
+from repro.core.types import PositFmt
+from repro.kernels.posit_gemm.ops import gemm
+from repro.kernels.posit_gemm.ref import posit_gemm_ref
+
+
+def _bits(x):
+    return np.asarray(x).view(np.uint32)
+
+
+# ---------------------------------------------------------------- packing ----
+
+@pytest.mark.parametrize("k", [6, 7, 16])
+def test_pack_unpack_roundtrip(k):
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.integers(0, 256, (k, 5)).astype(np.uint8))
+    p = pack_p8(c)
+    assert p.shape == (packed_half_k(k), 5) and p.dtype == jnp.uint16
+    assert (np.asarray(unpack_p8(p, k)) == np.asarray(c)).all()
+
+
+def test_pack_stacked_leading_dims():
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.integers(0, 256, (3, 8, 4)).astype(np.uint8))
+    assert (np.asarray(unpack_p8(pack_p8(c))) == np.asarray(c)).all()
+
+
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_packed_decode_exhaustive_bit_exact(es):
+    """All 65536 (lo, hi) lane combinations decode bit-identically to the
+    unpacked p8 codec — both lanes, every code, including NaR/zero."""
+    lanes = jnp.arange(65536, dtype=jnp.uint16).reshape(2, 32768)
+    got = packed_decode_p8(lanes, es)  # (4, 32768): lo rows then hi rows
+    lo = (np.arange(65536, dtype=np.uint16) & 0xFF).astype(np.uint8)
+    hi = (np.arange(65536, dtype=np.uint16) >> 8).astype(np.uint8)
+    want_lo = posit_decode(jnp.asarray(lo.reshape(2, 32768)), 8, es)
+    want_hi = posit_decode(jnp.asarray(hi.reshape(2, 32768)), 8, es)
+    assert (_bits(got[:2]) == _bits(want_lo)).all()
+    assert (_bits(got[2:]) == _bits(want_hi)).all()
+
+
+def test_split_activations_pairs_lanes():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (3, 7)).astype(np.float32))
+    kh = packed_half_k(7)
+    xl, xh = split_activations(x, kh)
+    assert xl.shape == xh.shape == (3, kh)
+    assert (np.asarray(xh[:, -1]) == 0).all()  # odd-K pad column is zero
+
+
+# --------------------------------------------------- mixed operand formats ----
+
+@pytest.mark.parametrize("es_a", [0, 1, 2, 3])
+@pytest.mark.parametrize("es_b", [0, 1, 2, 3])
+def test_p8_x_p16_products_vs_ref_oracle(es_a, es_b):
+    """Exhaustive p8 codes x sampled p16 codes: the f32 datapath product
+    equals the correctly-rounded product of the ref_codec oracle values.
+
+    Every posit decode is exact in f64 and products carry <= 20 significand
+    bits, so the f64 oracle product rounded to f32 is the RNE of the exact
+    product — which is what one f32 FPU multiply must produce.
+    """
+    rng = np.random.default_rng(es_a * 4 + es_b)
+    a8 = np.arange(256, dtype=np.uint8)                     # exhaustive p8
+    b16 = rng.integers(0, 1 << 16, 256).astype(np.uint16)   # sampled p16
+    va = np.asarray(posit_decode(jnp.asarray(a8), 8, es_a))
+    vb = np.asarray(posit_decode(jnp.asarray(b16), 16, es_b))
+    # oracle decode must agree exactly first
+    for i in (0, 1, 128, 255):
+        rv = ref_codec.ref_decode_float(int(a8[i]), 8, es_a)
+        assert (np.isnan(rv) and np.isnan(va[i])) or rv == va[i]
+    got = np.asarray(jnp.multiply(jnp.asarray(va)[:, None],
+                                  jnp.asarray(vb)[None, :]))
+    want = (va.astype(np.float64)[:, None]
+            * vb.astype(np.float64)[None, :]).astype(np.float32)
+    assert (_bits(got) == _bits(want)).all()
+
+
+@pytest.mark.parametrize("es_a", [0, 1, 2, 3])
+@pytest.mark.parametrize("es_b", [0, 1, 2, 3])
+def test_mixed_dot_all_es_pairs(es_a, es_b):
+    """p16 x p8 GEMM through the pcsr equals the decode-then-matmul
+    reference, fused == unfused, for every es pair."""
+    rng = np.random.default_rng(10 + es_a * 4 + es_b)
+    a = jnp.asarray(rng.normal(0, 1, (6, 12)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (12, 5)).astype(np.float32))
+    ac = posit_encode(a, 16, es_a)
+    bc = posit_encode(b, 8, es_b)
+    slots = OS(rs1=P16_1, rs2=P8_0, rd=F32)
+    y_f = posit_dot(ac, bc, slots, es_a=es_a, es_b=es_b, impl="fused")
+    y_u = posit_dot(ac, bc, slots, es_a=es_a, es_b=es_b, impl="unfused")
+    want = jnp.matmul(
+        posit_decode(ac, 16, es_a),
+        posit_decode(bc, 8, es_b).astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    assert (_bits(y_f) == _bits(want)).all()
+    assert (_bits(y_u) == _bits(want)).all()
+
+
+def test_packed_dot_matches_unpacked():
+    """Packing is a storage transform: bit-identical results, fewer bytes."""
+    rng = np.random.default_rng(3)
+    for k in (16, 17):  # even + odd contraction dims
+        a = jnp.asarray(rng.normal(0, 1, (8, k)).astype(np.float32))
+        b = jnp.asarray(rng.normal(0, 1, (k, 6)).astype(np.float32))
+        ac = posit_encode(a, 16, 1)
+        bc = posit_encode(b, 8, 0)
+        y_packed = posit_dot(ac, pack_p8(bc),
+                             OS(rs1=P16_1, rs2=P8_0, rd=F32, rs2_packed=True))
+        y_plain = posit_dot(ac, bc, OS(rs1=P16_1, rs2=P8_0, rd=F32))
+        assert (_bits(y_packed) == _bits(y_plain)).all(), k
+
+
+def test_format_pair_plan_table():
+    """The DESIGN.md §9 dispatch table, spot-checked."""
+    p88 = format_pair_plan(OS(rs1=P8_0, rs2=P8_0, rd=P8_0))
+    assert p88.compute_dtype_name == "bfloat16" and p88.quire_ok
+    p816 = format_pair_plan(OS(rs1=P8_0, rs2=P16_1, rd=P16_1))
+    assert p816.compute_dtype_name == "float32" and p816.quire_ok
+    pf = format_pair_plan(OS(rs1=F32, rs2=P8_0, rd=F32))
+    assert pf.compute_dtype_name == "float32" and not pf.quire_ok
+    assert not pf.decode_a and pf.decode_b and not pf.encode_out
+    pb = format_pair_plan(OS(rs1=BF16, rs2=P8_0, rd=F32))
+    assert pb.compute_dtype_name == "bfloat16"
+    pk = format_pair_plan(OS(rs1=P16_1, rs2=P8_0, rd=F32, rs2_packed=True))
+    assert pk.packed_b
+
+
+def test_packed_requires_p8():
+    with pytest.raises(ValueError):
+        OS(rs1=P16_1, rs2=P16_1, rd=F32, rs2_packed=True)
+    with pytest.raises(ValueError):
+        TransPolicy.from_names(weights="p16_1", pack_weights=True)
+
+
+# ------------------------------------------------------------ packed kernel ----
+
+@pytest.mark.parametrize("k", [33, 64])
+def test_packed_kernel_vs_ref(k):
+    """Pallas packed GEMM (interpret) vs the jnp oracle: bit-exact for posit
+    rd (the encode swallows tile-order f32 last-bit wobble is NOT assumed —
+    posit outputs compare exactly; float rd compares to 1e-5 rel)."""
+    rng = np.random.default_rng(k)
+    a = jnp.asarray(rng.normal(0, 1, (16, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (k, 12)).astype(np.float32))
+    ac = posit_encode(a, 16, 1)
+    bp = pack_p8(posit_encode(b, 8, 0))
+    es = jnp.asarray([1, 0, 1], jnp.int32)
+    slots = OS(rs1=P16_1, rs2=P8_0, rd=P16_1, rs2_packed=True)
+    y_k = gemm(ac, bp, slots, impl="pallas")
+    y_r = posit_gemm_ref(ac, bp, es, a_fmt=P16_1, b_fmt=P8_0, out_fmt=P16_1,
+                         b_packed=True)
+    assert (np.asarray(y_k) == np.asarray(y_r)).all()
+
+
+def test_packed_kernel_epilogue():
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.normal(0, 1, (8, 32)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (32, 8)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(0, 1, (8,)).astype(np.float32))
+    ac = posit_encode(a, 16, 1)
+    bp = pack_p8(posit_encode(b, 8, 0))
+    es = jnp.asarray([1, 0, 1], jnp.int32)
+    slots = OS(rs1=P16_1, rs2=P8_0, rd=P16_1, rs2_packed=True)
+    y_k = gemm(ac, bp, slots, impl="pallas", bias=bias, activation="relu")
+    y_r = posit_gemm_ref(ac, bp, es, a_fmt=P16_1, b_fmt=P8_0, out_fmt=P16_1,
+                         b_packed=True, bias=bias, activation="relu")
+    assert (np.asarray(y_k) == np.asarray(y_r)).all()
+
+
+# ------------------------------------------------------- quire mixed exact ----
+
+def test_quire_mixed_dot_exact_vs_fraction():
+    """p16 x p8 dot under dataflow="quire": the posit result is the single
+    RNE of the exact Fraction sum of the mixed products."""
+    rng = np.random.default_rng(7)
+    K = 24
+    ac = rng.integers(0, 1 << 16, K).astype(np.uint16)
+    bc = rng.integers(0, 256, K).astype(np.uint8)
+    # exclude NaR to test the numeric path (NaR propagation is tested below)
+    ac[ac == 0x8000] = 1
+    bc[bc == 0x80] = 1
+    slots = OS(rs1=P16_1, rs2=P8_0, rd=P16_1, dataflow="quire")
+    got = posit_dot(jnp.asarray(ac)[None, :], jnp.asarray(bc)[:, None], slots)
+    acc = Fraction(0)
+    for x, y in zip(ac, bc):
+        acc += (ref_codec.ref_decode(int(x), 16, 1)
+                * ref_codec.ref_decode(int(y), 8, 0))
+    want = ref_codec.ref_encode_exact(acc, 16, 1)
+    assert int(np.asarray(got)[0, 0]) == want
+
+
+def test_quire_mixed_dot_packed_and_nar():
+    """Packed rs2 unpacks into the same exact quire; NaR propagates."""
+    rng = np.random.default_rng(8)
+    K = 16
+    a = jnp.asarray(rng.normal(0, 1, (4, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (K, 4)).astype(np.float32))
+    ac = posit_encode(a, 16, 1)
+    bc = posit_encode(b, 8, 0)
+    slots = OS(rs1=P16_1, rs2=P8_0, rd=P16_1, dataflow="quire")
+    y_plain = posit_dot(ac, bc, slots)
+    y_packed = posit_dot(ac, pack_p8(bc), slots.with_packed())
+    assert (np.asarray(y_plain) == np.asarray(y_packed)).all()
+    bc_nar = np.asarray(bc).copy()
+    bc_nar[0, 0] = 0x80  # NaR weight poisons column 0 only
+    y_nar = posit_dot(ac, jnp.asarray(bc_nar), slots)
+    assert (np.asarray(y_nar)[:, 0] == 0x8000).all()
+    assert (np.asarray(y_nar)[:, 1:] == np.asarray(y_plain)[:, 1:]).all()
+
+
+# --------------------------------------------------------- per-layer policy ----
+
+def test_precision_policy_resolution_order():
+    base = TransPolicy.from_names(weights="p16_1", kv_cache="p8_0",
+                                  compute_dtype="bf16")
+    pol = PrecisionPolicy(base=base, rules=(
+        LayerRule("*attn/wq", PositFmt(16, 2)),
+        LayerRule("*attn*", PositFmt(16, 1)),
+        LayerRule("*mlp*", PositFmt(8, 0), packed=True),
+    ))
+    # first match wins, in declaration order
+    assert pol.policy_for("blocks/attn/wq").weights == PositFmt(16, 2)
+    assert pol.policy_for("blocks/attn/wk").weights == PositFmt(16, 1)
+    mlp = pol.policy_for("blocks/mlp/gate")
+    assert mlp.weights == PositFmt(8, 0) and mlp.pack_weights
+    # no match -> base unchanged
+    assert pol.policy_for("lm_head") == base
+    # non-weight roles delegate to the base (duck-typed TransPolicy)
+    assert pol.kv_cache == base.kv_cache
+    assert pol.compute_dtype == "bf16"
+    assert "precision=" in pol.describe()
+
+
+def test_precision_presets_and_spec_parsing():
+    for name in ("uniform-p16", "p8-weights", "p8-packed", "attn-p16-mlp-p8"):
+        pol = get_precision_policy(name)
+        assert pol.name == name
+    mixed = get_precision_policy("attn-p16-mlp-p8")
+    assert mixed.policy_for("blocks/attn/wq").weights.nbits == 16
+    mlp = mixed.policy_for("blocks/mlp/down")
+    assert mlp.weights.nbits == 8 and mlp.pack_weights
+    spec = get_precision_policy("*mlp*=p8_0:packed,*=p16_1")
+    assert spec.policy_for("x/mlp/up").pack_weights
+    assert spec.policy_for("anything").weights == PositFmt(16, 1)
+    with pytest.raises(KeyError):
+        get_precision_policy("no-such-preset")
+    with pytest.raises(ValueError):
+        LayerRule("*", PositFmt(16, 1), packed=True)  # packed requires p8
+    # overlay keeps the new base's non-weight roles
+    base = TransPolicy.from_names(kv_cache="p8_0", compute_dtype="bf16")
+    over = get_precision_policy("attn-p16-mlp-p8", base=base)
+    assert over.kv_cache == base.kv_cache
+
+
+def test_preset_schedule_survives_base_overlay():
+    """Preset weight schedules live in rules, so overlaying a serving base
+    (which supplies kv_cache/compute roles) keeps the schedule intact."""
+    base = TransPolicy.from_names(kv_cache="p8_0", compute_dtype="bf16")
+    p = get_precision_policy("p8-packed", base=base)
+    r = p.policy_for("blocks/mlp/gate")
+    assert r.weights is not None and r.weights.nbits == 8 and r.pack_weights
+    assert p.kv_cache == base.kv_cache
+    # the mixed preset's p16 fallback covers unmatched layers, and
+    # encoder-decoder self-attention counts as attention
+    m = get_precision_policy("attn-p16-mlp-p8", base=TransPolicy())
+    assert m.policy_for("blocks/ssm/x_proj").weights == PositFmt(16, 1)
+    assert m.policy_for("dec_blocks/self/wq").weights == PositFmt(16, 1)
+
+
+def test_none_rule_pins_base_format():
+    """A weights=None rule pins the layer to the base format (it does NOT
+    strip quantization) and stops later rules from firing."""
+    base = TransPolicy.from_names(weights="p16_1")
+    pol = PrecisionPolicy(base=base, rules=(
+        LayerRule("*attn*"),                       # pin attention at base
+        LayerRule("*", PositFmt(8, 0), packed=True),
+    ))
+    assert pol.policy_for("blocks/attn/wq") == base
+    assert pol.policy_for("blocks/mlp/up").weights == PositFmt(8, 0)
+
+
+def test_anchored_rule_matches_tree_and_callsite_paths():
+    """Anchored (non-*) patterns match both the call-site logical path and
+    the param-tree path, so quantize-time and decode-time formats agree."""
+    from repro.models.layers import quantize_params
+
+    pol = get_precision_policy("mlp/up=p8_0:packed,*=p16_1")
+    # call-site spelling and tree spelling resolve identically
+    assert pol.policy_for("mlp/up").pack_weights
+    assert pol.policy_for("blocks/mlp/up").pack_weights
+    assert pol.policy_for("blocks/attn/wq").weights == PositFmt(16, 1)
+    params = {"blocks": {"mlp": {"up": {"w": jnp.ones((8, 4), jnp.float32)}}}}
+    q = quantize_params(params, pol)
+    assert "w_packed" in q["blocks"]["mlp"]["up"]
+
+
+def test_cross_attention_quantize_apply_agreement():
+    """Cross-attention params quantize under the tree path ("cross/wq") and
+    apply under the same spelling (attention's ``path="cross"``), so a
+    *cross*-targeting rule yields identical formats on both sides — the
+    p16-codes-decoded-as-p8 corruption scenario cannot occur."""
+    from repro.models import attention as attn
+    from repro.models.layers import quantize_params
+
+    cfg = attn.AttnCfg(d_model=32, n_heads=4, n_kv=2, head_dim=8,
+                       is_cross=True, causal=False, use_rope=False)
+    params = {"cross": attn.init_attention(jax.random.key(0), cfg)}
+    pol = get_precision_policy("*cross*=p8_0,*=p16_1")
+    q = quantize_params(params, pol)
+    assert q["cross"]["wq"]["w_codes"].dtype == jnp.uint8  # p8 per the rule
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(0, 1, (2, 6, 32)).astype(np.float32))
+    kv = jnp.asarray(rng.normal(0, 1, (2, 5, 32)).astype(np.float32))
+    y_q = attn.apply_attention(q["cross"], cfg, x, pol, xattn_kv=kv,
+                               path="cross")
+    # oracle: same math with the p8-rounded weights as plain floats
+    deq = {
+        name: {"w": posit_decode(q["cross"][name]["w_codes"], 8, 0)}
+        for name in ("wq", "wk", "wv", "wo")
+    }
+    y_ref = attn.apply_attention(deq, cfg, x, TransPolicy(), xattn_kv=kv)
+    np.testing.assert_allclose(np.asarray(y_q), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_params_skips_raw_conv_weights():
+    """SSM causal-conv {"w","b"} dicts are consumed raw — never quantized."""
+    from repro.models.layers import quantize_params
+
+    params = {"ssm": {"conv_x": {"w": jnp.ones((4, 8), jnp.float32),
+                                 "b": jnp.zeros((8,), jnp.float32)},
+                      "x_proj": {"w": jnp.ones((8, 8), jnp.float32)}}}
+    q = quantize_params(params, get_precision_policy("p8-weights"))
+    assert "w" in q["ssm"]["conv_x"]          # untouched
+    assert "w_codes" in q["ssm"]["x_proj"]    # quantized
+
+
+def test_apply_linear_packed_layer():
+    """A packed-quantized layer computes bit-identically to unpacked codes."""
+    from repro.models.layers import apply_linear, init_linear, quantize_linear
+
+    rng = np.random.default_rng(9)
+    p = init_linear(jax.random.key(0), 32, 16, bias=True)
+    x = jnp.asarray(rng.normal(0, 1, (4, 32)).astype(np.float32))
+    pol = TransPolicy.from_names(weights="p8_0", compute_dtype="bf16",
+                                 pack_weights=True)
+    q_plain = quantize_linear(p, pol.weights)
+    q_packed = quantize_linear(p, pol.weights, packed=True)
+    assert "w_packed" in q_packed and q_packed["w_packed"].dtype == jnp.uint16
+    y_plain = apply_linear(q_plain, x, pol, activation="gelu")
+    y_packed = apply_linear(q_packed, x, pol, activation="gelu")
+    assert (_bits(y_plain) == _bits(y_packed)).all()
+
+
+def test_quantize_params_per_layer():
+    """quantize_params routes each layer per the resolved policy: packed p8
+    for MLP weights, p16 codes for attention, per the mixed preset."""
+    from repro.models.layers import quantize_params
+
+    params = {
+        "blocks": {
+            "attn": {"wq": {"w": jnp.ones((8, 8), jnp.float32)}},
+            "mlp": {"up": {"w": jnp.ones((8, 16), jnp.float32)}},
+        },
+        "lm_head": {"w": jnp.ones((8, 10), jnp.float32)},
+        "norm": {"g": jnp.ones((8,), jnp.float32)},
+    }
+    pol = get_precision_policy("attn-p16-mlp-p8")
+    q = quantize_params(params, pol)
+    assert q["blocks"]["attn"]["wq"]["w_codes"].dtype == jnp.uint16
+    assert q["blocks"]["mlp"]["up"]["w_packed"].shape == (4, 16)
+    assert q["lm_head"]["w_packed"].dtype == jnp.uint16
+    assert "g" in q["norm"]  # non-linear params untouched
+    assert "w" in params["blocks"]["mlp"]["up"]  # source tree not mutated

@@ -312,5 +312,5 @@ def test_ssm_quire_state_close_to_f32_and_differentiable():
     assert bool(jnp.isfinite(apply_ssm(p, cfg, xs, pol_q)).all())
     g = jax.grad(lambda pp: apply_ssm(pp, cfg, xs, pol_q).sum())(p)
     leaves = jax.tree.leaves(g)
-    assert all(bool(jnp.isfinite(l).all()) for l in leaves)  # STE keeps grads
-    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves)  # STE keeps grads
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves)
