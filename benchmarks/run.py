@@ -38,6 +38,7 @@ BENCHES = {
     "codec": "benchmarks.bench_codec",                 # LUT vs bit-pipeline
     "epilogue": "benchmarks.bench_epilogue_fusion",    # fused vs chained layer
     "mixed": "benchmarks.bench_mixed_gemm",            # packed/mixed precision
+    "serving": "benchmarks.bench_serving",             # engine + attn dispatch
 }
 
 

@@ -43,6 +43,15 @@ CODEC_IMPLS = ("auto", "lut", "bits")
 # "chained" materializes each stage — the [7]-style round-trip baseline.
 EPILOGUES = ("fused", "chained")
 
+# Decode-step attention implementations (models.attention /
+# kernels.posit_attention.ops): "kernel" routes each step through the
+# flash-decode front door (Pallas on TPU, length-bounded tiled XLA path
+# elsewhere — the cache is decoded tile-wise at the attention boundary, never
+# materialized in full); "xla" is the in-model full-cache decode + dense
+# einsum baseline; "auto" resolves to "kernel" wherever the kernel contract
+# covers the layer (everything except non-rolling sliding-window caches).
+ATTN_IMPLS = ("auto", "kernel", "xla")
+
 
 @dataclasses.dataclass(frozen=True)
 class OperandSlots:
@@ -157,6 +166,11 @@ class TransPolicy:
     # per 16-bit lane through the memory system (DESIGN.md §9).  Only
     # meaningful for p8 weights; quantize_params / apply_linear consult it.
     pack_weights: bool = False
+    # Decode-step attention dispatch (DESIGN.md §10): "kernel" sends every
+    # decode step through kernels.posit_attention.ops (tile-wise in-VMEM
+    # decode), "xla" keeps the full-cache-decode einsum path, "auto" picks
+    # kernel wherever its contract covers the layer.
+    attn_impl: str = "auto"
 
     def __post_init__(self):
         if self.pack_weights and not (
@@ -170,6 +184,9 @@ class TransPolicy:
         if self.epilogue not in EPILOGUES:
             raise ValueError(
                 f"epilogue must be one of {EPILOGUES}, got {self.epilogue!r}")
+        if self.attn_impl not in ATTN_IMPLS:
+            raise ValueError(
+                f"attn_impl must be one of {ATTN_IMPLS}, got {self.attn_impl!r}")
 
     def fmt_for(self, role: str) -> Optional[PositFmt]:
         if role not in ROLES:
@@ -180,11 +197,11 @@ class TransPolicy:
     def from_names(cls, compute_dtype: str = "f32",
                    exact_collectives: bool = False,
                    codec_impl: str = "auto", epilogue: str = "fused",
-                   pack_weights: bool = False,
+                   pack_weights: bool = False, attn_impl: str = "auto",
                    **roles: Optional[str]) -> "TransPolicy":
         kw = {"exact_collectives": exact_collectives,
               "codec_impl": codec_impl, "epilogue": epilogue,
-              "pack_weights": pack_weights}
+              "pack_weights": pack_weights, "attn_impl": attn_impl}
         for role, name in roles.items():
             if name is None or name == "none":
                 kw[role] = None
@@ -208,6 +225,8 @@ class TransPolicy:
             parts.append(f"epilogue={self.epilogue}")
         if self.pack_weights:
             parts.append("packed_weights")
+        if self.attn_impl != "auto":
+            parts.append(f"attn={self.attn_impl}")
         return " ".join(parts)
 
 

@@ -1,25 +1,128 @@
-"""Front door for posit-KV decode attention: pallas on TPU, XLA oracle on CPU."""
+"""Front door for posit-KV decode attention.
+
+Implementations (one contract: flash decode over a possibly-ragged KV cache,
+``lengths``-masked per batch row, posit codes decoded tile-wise — the full
+cache is never materialized in float):
+
+* ``pallas`` — the TPU flash kernel (posit_attention.py): codes stream
+  HBM->VMEM and are decoded in VMEM right before the dot.
+* ``tiled``  — the off-TPU serving path: an online-softmax ``while_loop``
+  over S tiles with a *dynamic* trip count ``ceil(max(lengths)/block_s)``,
+  so per-step decode work scales with the longest live sequence in the
+  batch, not with ``S_max``.
+* ``xla``    — the pure-jnp oracle (ref.py): full-cache decode + dense
+  softmax.  Numerics ground truth for tests.
+* ``auto``   — pallas on TPU, tiled elsewhere.
+
+``kv_bits=0`` means a float KV cache: every path bypasses the codec and
+just upcasts tiles (the ragged masking / tiling contract is unchanged).
+``rolling=True`` is circular-buffer validity (gemma3 local layers): every
+slot written so far is valid, i.e. lengths are clamped to the buffer size.
+"""
 from __future__ import annotations
 
-import jax
+import functools
 
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import posit_decode
 from repro.kernels.posit_attention.posit_attention import posit_decode_attention
 from repro.kernels.posit_attention.ref import posit_decode_attention_ref
+
+_NEG_INF = -1e30
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@functools.partial(jax.jit, static_argnames=("kv_bits", "scale", "block_s"))
+def posit_decode_attention_tiled(
+    q: jax.Array,          # (B, Hq, d) float
+    k_codes: jax.Array,    # (B, Hkv, S, d) posit codes (float when kv_bits=0)
+    v_codes: jax.Array,    # (B, Hkv, S, d)
+    lengths: jax.Array,    # (B,) int32 — valid KV length per batch row
+    es,                    # int32 scalar — pcsr pes for the KV cache
+    *,
+    kv_bits: int,
+    scale: float | None = None,
+    block_s: int = 256,
+) -> jax.Array:
+    """Length-bounded flash decode in plain XLA (the kernel contract off-TPU).
+
+    ``lax.while_loop`` with trip count ``ceil(max(lengths)/block_s)``: tiles
+    past the longest live row are never sliced, decoded, or dotted — decode
+    bytes per step follow the *ragged* occupancy, not the allocated S_max.
+    Rows with length 0 return zeros.
+    """
+    B, Hq, d = q.shape
+    _, Hkv, S, _ = k_codes.shape
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bs = min(block_s, S)
+    S_p = -(-S // bs) * bs
+    if S_p != S:  # padded tail is masked off via lengths
+        pad = [(0, 0), (0, 0), (0, S_p - S), (0, 0)]
+        k_codes = jnp.pad(k_codes, pad)
+        v_codes = jnp.pad(v_codes, pad)
+
+    qg = q.reshape(B, Hkv, g, d).astype(jnp.float32) * scale
+    lengths = jnp.asarray(lengths, jnp.int32)
+    # traced tile count, clamped so an over-long row can't spin the loop
+    n_live = -(-jnp.minimum(jnp.max(lengths), S) // bs)
+
+    def decode_tile(codes):
+        if kv_bits:
+            return posit_decode(codes, kv_bits, es).astype(jnp.float32)
+        return codes.astype(jnp.float32)
+
+    def body(carry):
+        i, m, l, acc = carry
+        kt = decode_tile(jax.lax.dynamic_slice_in_dim(k_codes, i * bs, bs, 2))
+        vt = decode_tile(jax.lax.dynamic_slice_in_dim(v_codes, i * bs, bs, 2))
+        s = jnp.einsum("bkgd,bktd->bkgt", qg, kt)           # (B,Hkv,g,bs)
+        pos = i * bs + jnp.arange(bs)
+        valid = pos[None, :] < lengths[:, None]             # (B,bs)
+        s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        # explicit zero for masked slots: an all-masked row keeps m at
+        # _NEG_INF, where exp(s - m) == 1 would leak a uniform average
+        p = jnp.where(valid[:, None, None, :], jnp.exp(s - m_new), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bkgt,bktd->bkgd", p, vt)
+        return i + 1, m_new, l, acc
+
+    init = (jnp.int32(0),
+            jnp.full((B, Hkv, g, 1), _NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, g, 1), jnp.float32),
+            jnp.zeros((B, Hkv, g, d), jnp.float32))
+    *_, l, acc = jax.lax.while_loop(lambda c: c[0] < n_live, body, init)
+    out = acc / jnp.where(l == 0, 1.0, l)
+    return out.reshape(B, Hq, d).astype(q.dtype)
+
+
 def decode_attention(q, k_codes, v_codes, lengths, es, *, kv_bits,
-                     scale=None, impl="auto", interpret=None, block_s=512):
+                     scale=None, impl="auto", interpret=None, block_s=512,
+                     rolling=False):
+    """Dispatch one decode-attention step; see module docstring for impls."""
+    if rolling:
+        # circular window buffer: every slot written so far is valid
+        lengths = jnp.minimum(jnp.asarray(lengths, jnp.int32),
+                              k_codes.shape[2])
     if impl == "auto":
-        impl = "pallas" if _on_tpu() else "xla"
+        impl = "pallas" if _on_tpu() else "tiled"
     if impl == "pallas":
         if interpret is None:
             interpret = not _on_tpu()
         return posit_decode_attention(
             q, k_codes, v_codes, lengths, es,
             kv_bits=kv_bits, scale=scale, block_s=block_s, interpret=interpret)
+    if impl == "tiled":
+        return posit_decode_attention_tiled(
+            q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale,
+            block_s=min(block_s, 256))
     return posit_decode_attention_ref(
         q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale)

@@ -53,8 +53,12 @@ def _attn_kernel(
     length = len_ref[b]
 
     q = q_ref[...].astype(jnp.float32)                      # (1, d)
-    k = posit_decode(k_ref[0], kv_bits, es_ref[0]).astype(jnp.float32)  # (bs, d)
-    v = posit_decode(v_ref[0], kv_bits, es_ref[0]).astype(jnp.float32)  # (bs, d)
+    if kv_bits:
+        k = posit_decode(k_ref[0], kv_bits, es_ref[0]).astype(jnp.float32)
+        v = posit_decode(v_ref[0], kv_bits, es_ref[0]).astype(jnp.float32)
+    else:  # kv_bits=0: float KV cache — no codec, tile-wise astype only
+        k = k_ref[0].astype(jnp.float32)                    # (bs, d)
+        v = v_ref[0].astype(jnp.float32)
 
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1, bs)
     pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
@@ -63,7 +67,9 @@ def _attn_kernel(
     m_prev = m_ref[0, 0]
     m_new = jnp.maximum(m_prev, jnp.max(scores))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(scores - m_new)                              # (1, bs)
+    # explicit zero for masked slots: a fully-masked row keeps m at _NEG_INF,
+    # where exp(scores - m) == 1 would leak a uniform average of stale V
+    p = jnp.where(pos < length, jnp.exp(scores - m_new), 0.0)   # (1, bs)
     l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p)
     acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
         p, v, preferred_element_type=jnp.float32)
@@ -71,7 +77,10 @@ def _attn_kernel(
 
     @pl.when(s_idx == n_s - 1)
     def _emit():
-        o_ref[...] = (acc_ref[...] / l_ref[0, 0]).astype(o_ref.dtype)
+        l = l_ref[0, 0]
+        # length-0 rows (free engine slots) emit exact zeros, not 0/0
+        o_ref[...] = (acc_ref[...] / jnp.where(l == 0, 1.0, l)) \
+            .astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -81,11 +90,11 @@ def _attn_kernel(
 def posit_decode_attention(
     q: jax.Array,          # (B, Hq, d) float
     k_codes: jax.Array,    # (B, Hkv, S, d) uint8/uint16 posit codes
-    v_codes: jax.Array,    # (B, Hkv, S, d)
+    v_codes: jax.Array,    # (B, Hkv, S, d)  (float arrays when kv_bits=0)
     lengths: jax.Array,    # (B,) int32 — valid KV length per batch row
     es,                    # int32 scalar — pcsr pes for the KV cache
     *,
-    kv_bits: int,
+    kv_bits: int,          # 8 | 16 posit codes; 0 = float KV (codec bypassed)
     scale: float | None = None,
     block_s: int = 512,
     interpret: bool = False,

@@ -11,18 +11,29 @@ def posit_decode_attention_ref(
     q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
     lengths: jax.Array, es, *, kv_bits: int, scale: float | None = None,
 ) -> jax.Array:
+    """kv_bits: 8/16 posit codes, or 0 = float KV cache (codec bypassed)."""
     B, Hq, d = q.shape
     _, Hkv, S, _ = k_codes.shape
     g = Hq // Hkv
     if scale is None:
         scale = 1.0 / (d ** 0.5)
-    k = posit_decode(k_codes, kv_bits, es).astype(jnp.float32)
-    v = posit_decode(v_codes, kv_bits, es).astype(jnp.float32)
+    if kv_bits:
+        k = posit_decode(k_codes, kv_bits, es).astype(jnp.float32)
+        v = posit_decode(v_codes, kv_bits, es).astype(jnp.float32)
+    else:
+        k = k_codes.astype(jnp.float32)
+        v = v_codes.astype(jnp.float32)
     k = jnp.repeat(k, g, axis=1)  # (B, Hq, S, d)
     v = jnp.repeat(v, g, axis=1)
     scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k) * scale
-    pos = jnp.arange(S)[None, None, :]
-    scores = jnp.where(pos < lengths[:, None, None], scores, -1e30)
-    p = jax.nn.softmax(scores, axis=-1)
+    valid = (jnp.arange(S)[None, None, :] < lengths[:, None, None])
+    scores = jnp.where(valid, scores, -1e30)
+    # explicit masked-softmax so a length-0 row returns exact zeros (same
+    # contract as the kernel/tiled paths); for live rows the masked slots
+    # underflow to 0 in a plain softmax too, so numerics are unchanged
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
     out = jnp.einsum("bhs,bhsd->bhd", p, v)
     return out.astype(q.dtype)

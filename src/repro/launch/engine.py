@@ -1,0 +1,328 @@
+"""Slot-based continuous-batching serving engine over the ragged KV cache.
+
+The decode batch is a fixed grid of ``max_slots`` slots sharing one model
+cache (``model.init_cache(max_slots, S_max, policy)``).  Requests arrive on a
+queue (Poisson arrivals in the benchmark driver), are *prefilled into a free
+slot* the moment one exists (B=1 prefill, then a scatter of that row into the
+batch cache — no other slot is touched or stalled), decode lockstep as one
+batch while each row masks by its own ``len``, and are evicted (slot recycled)
+on EOS or max-length.  This is exactly the memory-system serving shape the
+posit KV cache is for: decode attention is HBM-bound, the cache stores 8/16-bit
+posit codes, and the flash-decode kernel path decodes tiles on the fly
+(``TransPolicy.attn_impl``, DESIGN.md §10).
+
+The engine is model-agnostic over the decoder families (dense / moe / gemma3 /
+vlm / zamba / xlstm): anything ``build_model`` returns with a ``prefill`` entry
+point.  Greedy decoding is ``temperature=0``; otherwise temperature / top-k
+sampling with a per-engine PRNG key.
+
+Timing note: prefill compiles once per distinct prompt length — drivers that
+care about compile time should draw prompt lengths from a small set (the
+benchmark uses a handful of buckets).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request."""
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32 token ids
+    max_new_tokens: int = 16
+    arrival_time: float = 0.0       # seconds since engine start
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class Completion:
+    """Per-request serving record (tokens + latency breakdown)."""
+    rid: int
+    prompt_len: int
+    tokens: list                    # generated token ids (includes EOS if hit)
+    arrival_time: float
+    admitted_time: float
+    finished_time: float
+    token_times: list               # absolute emission time of each token
+
+    @property
+    def queue_s(self) -> float:
+        return self.admitted_time - self.arrival_time
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token (arrival -> first sampled token)."""
+        return self.token_times[0] - self.arrival_time
+
+    def per_token_s(self) -> list:
+        """Inter-token latencies (first token measured from admission)."""
+        starts = [self.admitted_time] + self.token_times[:-1]
+        return [t - s for s, t in zip(starts, self.token_times)]
+
+
+def poisson_requests(n: int, *, arrival_rate: float, prompt_lens=(16, 24, 32),
+                     max_new_tokens: int = 16, vocab: int = 32000,
+                     seed: int = 0) -> list:
+    """n requests with exponential inter-arrival times (rate = req/s).
+
+    ``arrival_rate <= 0`` means everything arrives at t=0 (closed-loop /
+    offline batch).  Prompt lengths cycle through ``prompt_lens`` buckets so
+    prefill compiles a bounded number of programs.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        plen = int(prompt_lens[i % len(prompt_lens)])
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, (plen,)).astype(np.int32),
+            max_new_tokens=max_new_tokens, arrival_time=t))
+    return reqs
+
+
+def _write_slot(full, one, slot):
+    """Scatter row 0 of the B=1 cache ``one`` into row ``slot`` of ``full``.
+
+    The batch axis of each leaf is found structurally: it is the unique axis
+    where the two shapes differ (the single-request cache was built with the
+    same S_max/layout, B=1).  Leaves with identical shapes (the scalar
+    ``pos`` counter) are shared state the engine manages itself and are left
+    untouched.
+    """
+    def wr(f, o):
+        if f.shape == o.shape:
+            return f
+        axes = [i for i, (a, b) in enumerate(zip(f.shape, o.shape)) if a != b]
+        if len(axes) != 1 or o.shape[axes[0]] != 1:
+            raise ValueError(
+                f"ambiguous batch axis for cache leaf {f.shape} vs {o.shape}")
+        return jax.lax.dynamic_update_slice_in_dim(f, o, slot, axis=axes[0])
+    return jax.tree.map(wr, full, one)
+
+
+def _sample(logits, key, temperature: float, top_k: int):
+    """(B, V) logits -> (B,) tokens. temperature==0 is greedy argmax."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
+class ContinuousBatchingEngine:
+    """Admission + decode + eviction over a fixed slot grid.
+
+    Drive it either with :meth:`run` (wall-clock loop honoring request
+    arrival times) or manually with :meth:`submit` / :meth:`admit` /
+    :meth:`step` (deterministic staggered-admission tests).
+    """
+
+    def __init__(self, model, params, policy, *, max_slots: int, S_max: int,
+                 eos_id: Optional[int] = None, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0,
+                 prefill_kwargs: Optional[Callable] = None):
+        if model.prefill is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no prefill entry point")
+        self.model, self.params, self.policy = model, params, policy
+        self.max_slots, self.S_max = max_slots, S_max
+        self.eos_id, self.temperature, self.top_k = eos_id, temperature, top_k
+        # per-arg callable for families needing extra prefill inputs (vlm
+        # patch embeds); receives the Request, returns a kwargs dict
+        self._prefill_kwargs = prefill_kwargs or (lambda req: {})
+        self._init_state(seed)
+
+        # the cache is donated: decode updates the KV buffers in place
+        # instead of copying S_max-sized arrays every step (the engine never
+        # reads a pre-step cache again; on backends without donation support
+        # this degrades to the copy)
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c, policy),
+            donate_argnums=(2,))
+        # the pre-write cache is donated too: admission must not copy the
+        # whole S_max cache to update one row
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+        # compiled per distinct prompt length (admission is on the serving
+        # critical path; drivers bucket prompt lengths to bound retraces)
+        self._prefill = jax.jit(
+            lambda p, toks, kw: model.prefill(p, toks, policy,
+                                              S_max=S_max, **kw))
+
+    def _init_state(self, seed: int) -> None:
+        self._key = jax.random.key(seed)
+        self.cache = self.model.init_cache(self.max_slots, self.S_max,
+                                           self.policy)
+        self.lens = np.zeros((self.max_slots,), np.int32)
+        self.last_token = jnp.zeros((self.max_slots,), jnp.int32)
+        self.active = np.zeros((self.max_slots,), bool)
+        self.slot_req: list = [None] * self.max_slots
+        self.slot_tokens: list = [[] for _ in range(self.max_slots)]
+        self.slot_token_times: list = [[] for _ in range(self.max_slots)]
+        self.slot_admitted = np.zeros((self.max_slots,), np.float64)
+        self.queue: list = []          # pending Requests (FIFO)
+        self.completions: list = []
+        self.steps = 0                 # decode steps executed
+
+    def reset(self, seed: int = 0) -> None:
+        """Clear all serving state but keep the compiled decode/write programs.
+
+        Equivalence tests use this to run staggered-admission and
+        single-request workloads through the *same executables*: XLA:CPU
+        compiles are not bit-stable across program instances, so comparing
+        tokens across two engines (or against a hand-rolled B=1 loop) can
+        flip a near-tied greedy argmax; within one engine the comparison is
+        deterministic."""
+        self._init_state(seed)
+
+    # ------------------------------------------------------------- admission --
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def free_slots(self) -> list:
+        return [i for i in range(self.max_slots) if not self.active[i]]
+
+    def admit(self, now: float = 0.0, clock: Optional[Callable] = None) -> int:
+        """Prefill queued requests into free slots; returns #admitted.
+
+        The first token of each admitted request is sampled from the prefill
+        logits immediately (it is emitted by this call, not by the next
+        decode step).  ``clock`` (when given) re-reads the time after the
+        prefill executes so the first token's emission time — and therefore
+        TTFT — includes prefill cost; without it both stamps use ``now``.
+        """
+        admitted = 0
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            t_admit = clock() if clock else now
+            if req.prompt_len + req.max_new_tokens > self.S_max:
+                raise ValueError(
+                    f"request {req.rid}: prompt {req.prompt_len} + "
+                    f"max_new {req.max_new_tokens} exceeds S_max {self.S_max}")
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, one_cache = self._prefill(
+                self.params, tokens, self._prefill_kwargs(req))
+            # true cache occupancy after prefill (vlm rows include the patch
+            # prefix; recurrent families report their prompt length)
+            row_len = int(one_cache["lens"][0])
+            if row_len + req.max_new_tokens > self.S_max:
+                raise ValueError(
+                    f"request {req.rid}: prefill occupies {row_len} cache "
+                    f"rows (incl. any prefix) + max_new "
+                    f"{req.max_new_tokens} exceeds S_max {self.S_max}")
+            if self.max_slots == 1:
+                # every leaf shape matches the B=1 prefill cache, so the
+                # structural scatter below would be a silent no-op — the
+                # single-request cache *is* the batch cache
+                self.cache = one_cache
+            else:
+                self.cache = self._write(self.cache, one_cache,
+                                         jnp.int32(slot))
+            tok = int(self._next_token(logits)[0])  # blocks on the prefill
+            t_first = clock() if clock else now
+            self.lens[slot] = row_len
+            self.last_token = self.last_token.at[slot].set(tok)
+            self.active[slot] = True
+            self.slot_req[slot] = req
+            self.slot_tokens[slot] = [tok]
+            self.slot_token_times[slot] = [t_first]
+            self.slot_admitted[slot] = t_admit
+            self._sync_lens()
+            admitted += 1
+            self._maybe_finish(slot, tok, t_first)  # max_new_tokens == 1
+        return admitted
+
+    def _next_token(self, logits):
+        self._key, sub = jax.random.split(self._key)
+        return _sample(logits, sub, self.temperature, self.top_k)
+
+    def _sync_lens(self) -> None:
+        """Engine slot lengths are authoritative: push them into the cache's
+        per-row positions (freed/recycled slots reset; decode_step increments
+        every row, active or not).
+
+        The copy is load-bearing: ``jnp.asarray`` of a host numpy array can
+        be zero-copy on CPU, and ``self.lens`` is mutated in place every
+        step — an aliased buffer races with the async decode dispatch."""
+        self.cache["lens"] = jnp.asarray(self.lens.copy(), jnp.int32)
+
+    # --------------------------------------------------------------- decode ---
+    def step(self, now: float = 0.0) -> int:
+        """One decode step over the whole slot grid; returns #tokens emitted."""
+        if not self.active.any():
+            return 0
+        logits, self.cache = self._decode(self.params, self.last_token,
+                                          self.cache)
+        self.steps += 1
+        toks = self._next_token(logits)
+        self.lens += 1          # mirror decode_step's per-row increment
+        emitted = 0
+        toks_np = np.asarray(toks)
+        last_np = np.asarray(self.last_token).copy()
+        for slot in range(self.max_slots):
+            if not self.active[slot]:
+                continue
+            tok = int(toks_np[slot])
+            self.slot_tokens[slot].append(tok)
+            self.slot_token_times[slot].append(now)
+            last_np[slot] = tok
+            emitted += 1
+            self._maybe_finish(slot, tok, now)
+        self.last_token = jnp.asarray(last_np)
+        return emitted
+
+    def _maybe_finish(self, slot: int, tok: int, now: float) -> bool:
+        req = self.slot_req[slot]
+        done = len(self.slot_tokens[slot]) >= req.max_new_tokens
+        done |= self.eos_id is not None and tok == self.eos_id
+        done |= self.lens[slot] + 1 >= self.S_max  # no room for another write
+        if done:
+            self.completions.append(Completion(
+                rid=req.rid, prompt_len=req.prompt_len,
+                tokens=list(self.slot_tokens[slot]),
+                arrival_time=req.arrival_time,
+                admitted_time=float(self.slot_admitted[slot]),
+                finished_time=now,
+                token_times=list(self.slot_token_times[slot])))
+            self.active[slot] = False
+            self.slot_req[slot] = None
+        return done
+
+    # ------------------------------------------------------------------ run ---
+    def run(self, requests: list, *, clock: Optional[Callable] = None) -> list:
+        """Serve ``requests`` (sorted by arrival_time) to completion.
+
+        ``clock`` defaults to wall time from the first call; arrivals are
+        honored against it, so with a Poisson workload the decode batch
+        genuinely breathes (slots drain and refill mid-flight)."""
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        t0 = time.perf_counter()
+        clock = clock or (lambda: time.perf_counter() - t0)
+        done_target = len(self.completions) + len(pending)
+        while len(self.completions) < done_target:
+            now = clock()
+            while pending and pending[0].arrival_time <= now:
+                self.submit(pending.pop(0))
+            if self.queue and self.free_slots():
+                self.admit(clock=clock)
+            if self.active.any():
+                self.step(now=clock())
+            elif pending:
+                # idle: nothing active, next request not yet arrived
+                time.sleep(min(0.001, pending[0].arrival_time - now))
+        return list(self.completions)

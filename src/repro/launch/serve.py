@@ -1,29 +1,36 @@
-"""Serving driver: batched prefill + decode with a transprecision KV cache.
+"""Serving driver: static batched prefill+decode, or continuous batching.
 
+    # static (lockstep) batch
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --reduced \
         --batch 4 --prompt-len 32 --gen 16 --policy p8-serve
 
-Reports tokens/s and the KV-cache HBM footprint under the selected pcsr policy
-(the paper's Table-IV memory-savings, at the serving bottleneck).
+    # continuous batching over the ragged posit KV cache (launch/engine.py)
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-34b --reduced \
+        --continuous --max-slots 4 --arrival-rate 8 --requests 16 \
+        --policy p8-serve --attn-impl kernel
 
-``--codec-impl`` selects the codec lowering (auto | lut | bits — the
-table-driven fast path vs the bit pipeline, repro.core.lut) and
-``--epilogue`` the layer dataflow (fused keeps gemm->bias->act->residual->
-encode in one op per layer; chained materializes each stage, the baseline
-bench_epilogue_fusion measures against).
+Reports tokens/s and the KV-cache HBM footprint under the selected pcsr policy
+(the paper's Table-IV memory savings, at the serving bottleneck).  Decode
+throughput is measured *warm*: the first decode step (jit compile) is timed
+separately as ``compile_s`` and excluded from ``decode_tok_per_s``.
+
+``--attn-impl`` selects the decode attention dispatch (DESIGN.md §10):
+``kernel`` routes every step through the flash-decode front door
+(``kernels.posit_attention.ops`` — Pallas on TPU, length-bounded tiled XLA
+elsewhere), ``xla`` keeps the full-cache-decode einsum, ``auto`` picks per
+layer.  ``--codec-impl`` selects the codec lowering (auto | lut | bits) and
+``--epilogue`` the layer dataflow (fused | chained).
 
 ``--precision-policy`` schedules *per-layer* weight formats over the base
-policy (core/policy.py): a preset name (uniform-p16 | p8-weights |
-p8-packed | attn-p16-mlp-p8) or an inline ``pattern=fmt[:packed],...`` spec.
-``--quantize-weights`` converts the float weights to real posit storage
-under that schedule (packed-p8 lanes where the policy says so) instead of
-the straight-through fake-quant path, and reports the weight-byte savings.
+policy (core/policy.py); ``--quantize-weights`` converts the float weights to
+real posit storage under that schedule and reports the weight-byte savings.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import sys
 import time
 
 import jax
@@ -32,14 +39,156 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.policy import get_precision_policy
+from repro.launch.engine import (ContinuousBatchingEngine, Request,
+                                 poisson_requests)
 from repro.launch.train import _parse_policy
 from repro.models.layers import policy_weight_bytes, quantize_params
 from repro.models.registry import build_model
 
+_KV_CONTAINERS = ("kv", "shared_kv", "self", "cross")
+
 
 def cache_bytes(cache) -> int:
+    """Total bytes of every array in the cache (bookkeeping included)."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
                if hasattr(x, "size"))
+
+
+def kv_cache_bytes(cache) -> int:
+    """Bytes of the K/V arrays only.
+
+    ``len``/``pos``/``lens`` bookkeeping and recurrent state (ssm / xlstm /
+    quire carries) are not KV cache and must not inflate the paper's
+    kv-bytes-per-token claim — only leaves named ``k``/``v`` inside a KV
+    container count.
+    """
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        keys = [p.key for p in path if hasattr(p, "key")]
+        if keys and keys[-1] in ("k", "v") \
+                and any(k in _KV_CONTAINERS for k in keys[:-1]):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def _percentile_ms(xs, q) -> float:
+    return round(float(np.percentile(np.asarray(xs), q)) * 1e3, 2) if xs else 0.0
+
+
+def _serve_static(args, cfg, model, params, policy, rng, S_max):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
+    decode = jax.jit(lambda p, t, c: model.decode_step(p, t, c, policy))
+    compile_s = None
+
+    if cfg.family == "whisper":
+        batch = {"frames": jnp.asarray(rng.normal(
+            0, 1, (args.batch, cfg.enc_frames, cfg.d_model)).astype(np.float32)),
+            "tokens": tokens}
+        t0 = time.time()
+        cache = model.init_cache(params, batch, policy, S_max)
+        # teacher-force the full decoder prompt: every prompt token passes
+        # through decode_step (the old path fed tokens[:, 0] and silently
+        # dropped the rest of the prompt).  The first step pays jit compile;
+        # time it apart so prefill_s stays a throughput number.
+        tc = time.time()
+        logits, cache = decode(params, tokens[:, 0], cache)
+        jax.block_until_ready(logits)
+        compile_s = time.time() - tc
+        for i in range(1, args.prompt_len):
+            logits, cache = decode(params, tokens[:, i], cache)
+        jax.block_until_ready(logits)
+        print(json.dumps({"prefill_s": round(time.time() - t0 - compile_s, 3)}))
+    else:
+        kw = {}
+        if cfg.family == "vlm":
+            kw["patch_embeds"] = jnp.asarray(rng.normal(
+                0, 1, (args.batch, cfg.n_patches, cfg.d_model)).astype(np.float32))
+        t0 = time.time()
+        logits, cache = model.prefill(params, tokens, policy, S_max=S_max, **kw)
+        print(json.dumps({"prefill_s": round(time.time() - t0, 3)}))
+
+    tok = jnp.argmax(logits, -1)
+    out_tokens = [tok]
+    timed_steps = args.gen - 1
+    if compile_s is None:
+        # warm up one step before the throughput clock: the first decode call
+        # pays jit compile, which used to be silently folded into tokens/s
+        # (whisper is already warm from teacher-forcing the prompt)
+        t0 = time.time()
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits, -1)
+        jax.block_until_ready(tok)
+        compile_s = time.time() - t0
+        out_tokens.append(tok)
+        timed_steps -= 1
+
+    timed_steps = max(timed_steps, 0)
+    t0 = time.time()
+    for _ in range(timed_steps):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits, -1)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = max(time.time() - t0, 1e-9)
+
+    return {
+        "mode": "static",
+        "decode_tok_per_s": round(args.batch * timed_steps / dt, 1),
+        "compile_s": round(compile_s, 3),
+        "sample_tokens": np.stack([np.asarray(t) for t in out_tokens], 1)[0][:8]
+        .tolist(),
+    }, cache
+
+
+def _serve_continuous(args, cfg, model, params, policy, rng, S_max):
+    if model.prefill is None:
+        sys.exit(f"--continuous needs a prefill entry point "
+                 f"(family {cfg.family!r} has none)")
+    max_slots = args.max_slots or args.batch
+    n_req = args.requests or 2 * max_slots
+    prefill_kwargs = None
+    if cfg.family == "vlm":
+        patches = jnp.asarray(rng.normal(
+            0, 1, (1, cfg.n_patches, cfg.d_model)).astype(np.float32))
+        prefill_kwargs = lambda req: {"patch_embeds": patches}  # noqa: E731
+
+    eng = ContinuousBatchingEngine(
+        model, params, policy, max_slots=max_slots, S_max=S_max,
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+        prefill_kwargs=prefill_kwargs)
+
+    # warm the executables (prefill at the prompt length + the grid decode)
+    # before the serving clock starts; report compile time separately
+    t0 = time.time()
+    eng.submit(Request(rid=-1, prompt=np.zeros((args.prompt_len,), np.int32),
+                       max_new_tokens=min(2, args.gen)))
+    eng.admit()
+    eng.step()
+    eng.reset(seed=args.seed)
+    compile_s = time.time() - t0
+
+    reqs = poisson_requests(
+        n_req, arrival_rate=args.arrival_rate, prompt_lens=(args.prompt_len,),
+        max_new_tokens=args.gen, vocab=cfg.vocab, seed=args.seed)
+    t0 = time.time()
+    completions = eng.run(reqs)
+    makespan = max(time.time() - t0, 1e-9)
+
+    n_tokens = sum(len(c.tokens) for c in completions)
+    per_tok = [t for c in completions for t in c.per_token_s()]
+    return {
+        "mode": "continuous",
+        "requests": len(completions),
+        "max_slots": max_slots,
+        "arrival_rate": args.arrival_rate,
+        "decode_tok_per_s": round(n_tokens / makespan, 1),
+        "decode_steps": eng.steps,
+        "compile_s": round(compile_s, 3),
+        "p50_token_ms": _percentile_ms(per_tok, 50),
+        "p95_token_ms": _percentile_ms(per_tok, 95),
+        "p50_queue_ms": _percentile_ms([c.queue_s for c in completions], 50),
+        "sample_tokens": completions[0].tokens[:8] if completions else [],
+    }, eng.cache
 
 
 def main(argv=None):
@@ -50,6 +199,17 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default="none")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching via launch/engine.py")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = all at t=0)")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="decode slot grid size (default: --batch)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests to serve (default: 2*slots)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples (with --top-k)")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--precision-policy", default=None,
                     help="per-layer weight schedule: preset name or "
                          "pattern=fmt[:packed],... spec (core/policy.py)")
@@ -58,6 +218,8 @@ def main(argv=None):
                          "where the policy says so) instead of fake-quant")
     ap.add_argument("--codec-impl", default="auto", choices=("auto", "lut", "bits"))
     ap.add_argument("--epilogue", default="fused", choices=("fused", "chained"))
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=("auto", "kernel", "xla"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -66,7 +228,8 @@ def main(argv=None):
         cfg = cfg.reduced()
     policy = dataclasses.replace(
         _parse_policy(args.policy),
-        codec_impl=args.codec_impl, epilogue=args.epilogue)
+        codec_impl=args.codec_impl, epilogue=args.epilogue,
+        attn_impl=args.attn_impl)
     if args.precision_policy:
         policy = get_precision_policy(args.precision_policy, base=policy)
     model = build_model(cfg)
@@ -75,46 +238,28 @@ def main(argv=None):
     if args.quantize_weights:
         weight_report = policy_weight_bytes(params, policy)
         params = quantize_params(params, policy)
-    S_max = args.prompt_len + args.gen
+    # vlm rows carry the patch prefix in the same cache — budget for it
+    S_max = args.prompt_len + args.gen + \
+        (cfg.n_patches if cfg.family == "vlm" else 0)
 
     rng = np.random.default_rng(args.seed)
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
-
-    if cfg.family == "whisper":
-        batch = {"frames": jnp.asarray(rng.normal(
-            0, 1, (args.batch, cfg.enc_frames, cfg.d_model)).astype(np.float32)),
-            "tokens": tokens}
-        cache = model.init_cache(params, batch, policy, S_max)
-        logits, cache = model.decode_step(params, tokens[:, 0], cache, policy)
+    if args.continuous:
+        report, cache = _serve_continuous(args, cfg, model, params, policy,
+                                          rng, S_max)
+        n_rows = args.max_slots or args.batch
     else:
-        kw = {}
-        if cfg.family == "vlm":
-            kw["patch_embeds"] = jnp.asarray(rng.normal(
-                0, 1, (args.batch, cfg.n_patches, cfg.d_model)).astype(np.float32))
-        t0 = time.time()
-        logits, cache = model.prefill(params, tokens, policy, S_max=S_max, **kw)
-        print(json.dumps({"prefill_s": round(time.time() - t0, 3)}))
+        report, cache = _serve_static(args, cfg, model, params, policy,
+                                      rng, S_max)
+        n_rows = args.batch
 
-    decode = jax.jit(lambda p, t, c: model.decode_step(p, t, c, policy))
-    tok = jnp.argmax(logits, -1)
-    out_tokens = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits, -1)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-
-    kv_b = cache_bytes(cache)
+    kv_b = kv_cache_bytes(cache)
     print(json.dumps({
         "arch": cfg.name, "policy": policy.describe(),
-        "decode_tok_per_s": round(args.batch * (args.gen - 1) / dt, 1),
+        **report,
         "kv_cache_bytes": kv_b,
-        "kv_bytes_per_token": kv_b // (args.batch * S_max),
+        "cache_bytes_total": cache_bytes(cache),
+        "kv_bytes_per_token": kv_b // (n_rows * S_max),
         **weight_report,
-        "sample_tokens": np.stack([np.asarray(t) for t in out_tokens], 1)[0][:8]
-        .tolist(),
     }))
 
 

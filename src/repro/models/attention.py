@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.codec import posit_decode, posit_encode
 from repro.core.pcsr import TransPolicy
+from repro.kernels.posit_attention import ops as attn_ops
 from repro.models.layers import apply_linear, apply_rope, init_linear
 from repro.models.unroll import scan_or_unroll, unrolled
 
@@ -198,12 +199,24 @@ def init_kv_cache(B: int, S_max: int, cfg: AttnCfg, policy: TransPolicy) -> dict
 
 
 def _store(cache_arr, new, pos, policy):
-    """Write (B, Hkv, s, hd) `new` at sequence offset pos (scalar or (B,))."""
+    """Write (B, Hkv, s, hd) ``new`` at sequence offset ``pos``.
+
+    ``pos`` is either a scalar (lockstep batch / prefill block write) or a
+    (B,) vector of per-row write indices with s == 1 (ragged decode: every
+    row of a continuous batch sits at its own sequence position).  Per-row
+    writes use a scatter; out-of-bounds rows (recycled engine slots past
+    S_max) are dropped by JAX scatter semantics.
+    """
     fmt = policy.kv_cache
     if fmt is not None:
         new = posit_encode(new.astype(jnp.float32), fmt.nbits, fmt.es)
     else:
         new = new.astype(cache_arr.dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        B = cache_arr.shape[0]
+        return cache_arr.at[jnp.arange(B), :, pos].set(new[:, :, 0],
+                                                       mode="drop")
     return jax.lax.dynamic_update_slice(
         cache_arr, new, (0, 0, pos, 0))
 
@@ -250,16 +263,49 @@ def prefill_attention(params: dict, cfg: AttnCfg, x: jax.Array, cache: dict,
     return y, cache
 
 
+def resolve_attn_impl(policy: TransPolicy, cfg: AttnCfg, *,
+                      rolling: bool = False) -> str:
+    """Resolve ``policy.attn_impl`` for one decode-step attention layer.
+
+    "kernel" routes the step through ``kernels.posit_attention.ops`` (Pallas
+    flash decode on TPU, length-bounded tiled XLA path elsewhere — the cache
+    is decoded tile-wise, never materialized in full).  The kernel contract
+    covers per-row ``len`` masking, rolling (circular-buffer) windows, and
+    read-only cross caches; a non-rolling sliding window (a windowed layer
+    whose cache is larger than the window) needs the windowed mask only the
+    xla path implements.
+    """
+    impl = getattr(policy, "attn_impl", "auto")
+    if impl == "xla":
+        return "xla"
+    if cfg.window > 0 and not rolling and not cfg.is_cross:
+        if impl == "kernel":
+            # refuse rather than silently measure xla-vs-xla: the kernel
+            # has no windowed mask for a cache larger than the window
+            raise ValueError(
+                "attn_impl='kernel' cannot serve a non-rolling "
+                f"sliding-window layer (window={cfg.window}); use a "
+                "window-sized rolling cache or attn_impl='auto'/'xla'")
+        return "xla"
+    return "kernel"
+
+
 def decode_attention_step(params: dict, cfg: AttnCfg, x_t: jax.Array,
                           cache: dict, pos, policy: TransPolicy,
                           *, rolling: bool = False,
                           abs_pos=None, path: str = "attn") -> tuple:
-    """One decode step. x_t: (B, 1, D); pos: scalar int32 *cache write index*.
+    """One decode step. x_t: (B, 1, D); pos: the *cache write index* — an
+    int32 scalar (lockstep batch) or a (B,) vector (ragged continuous batch,
+    every row at its own position).
 
     rolling=True: the cache is a circular window buffer (gemma3 local layers):
     every slot written so far is valid and the window bound is implicit in the
     buffer size. ``abs_pos`` is the absolute sequence position for RoPE when it
-    differs from the write index (defaults to pos).
+    differs from the write index (defaults to pos; scalar or (B,)).
+
+    Masking is uniformly ``cache["len"]``-driven per batch row (cross reads
+    the prefilled length; self counts the token written this step), so ragged
+    batches attend correctly on every path.
     """
     B, _, _ = x_t.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
@@ -267,40 +313,53 @@ def decode_attention_step(params: dict, cfg: AttnCfg, x_t: jax.Array,
                                   path=f"{path}/wq"), H, hd)   # (B,1,H,hd)
     if cfg.is_cross:
         # cross-attention reads the (already prefilled) encoder cache only
-        k = _load(cache["k"], policy)   # (B,Hkv,T,hd)
-        v = _load(cache["v"], policy)
         new_cache = cache
+        lens = cache["len"]
     else:
         kn = _split_heads(apply_linear(params["wk"], x_t, policy, path=f"{path}/wk"), Hkv, hd)
         vn = _split_heads(apply_linear(params["wv"], x_t, policy, path=f"{path}/wv"), Hkv, hd)
         if cfg.use_rope:
-            p1 = jnp.full((1, 1), pos if abs_pos is None else abs_pos, jnp.int32)
+            ap = jnp.asarray(pos if abs_pos is None else abs_pos, jnp.int32)
+            p1 = jnp.broadcast_to(jnp.atleast_1d(ap)[:, None], (B, 1))
             q = apply_rope(q, p1, cfg.rope_base)
             kn = apply_rope(kn, p1, cfg.rope_base)
         new_cache = dict(cache)
         new_cache["k"] = _store(cache["k"], kn.transpose(0, 2, 1, 3), pos, policy)
         new_cache["v"] = _store(cache["v"], vn.transpose(0, 2, 1, 3), pos, policy)
-        new_cache["len"] = cache["len"] + 1
-        k = _load(new_cache["k"], policy)
-        v = _load(new_cache["v"], policy)
+        # clamp at the buffer size: a slot never holds more than S_cache valid
+        # positions (rolling buffers wrap; recycled engine slots would
+        # otherwise grow `len` without bound between eviction and reuse)
+        new_cache["len"] = jnp.minimum(cache["len"] + 1, cache["k"].shape[2])
+        lens = new_cache["len"]
 
-    S_max = k.shape[2]
-    qf = q.reshape(B, Hkv, H // Hkv, hd).astype(jnp.float32) * (hd ** -0.5)
-    scores = jnp.einsum("bkgd,bktd->bkgt", qf, k)
-    t = jnp.arange(S_max)[None, None, None, :]
-    if cfg.is_cross:
-        valid = t < cache["len"][:, None, None, None]
-    elif rolling:
-        # circular buffer: every slot written so far is valid (window implicit)
-        ap = pos if abs_pos is None else abs_pos
-        valid = t < jnp.minimum(ap + 1, S_max)
+    impl = resolve_attn_impl(policy, cfg, rolling=rolling)
+    if impl == "kernel":
+        fmt = policy.kv_cache
+        out = attn_ops.decode_attention(
+            q.reshape(B, H, hd),
+            new_cache["k"], new_cache["v"], lens,
+            fmt.es if fmt is not None else 0,
+            kv_bits=fmt.nbits if fmt is not None else 0,
+            rolling=rolling)
+        out = out.reshape(B, 1, H * hd)
     else:
-        valid = t <= pos
-        if cfg.window > 0:
-            valid &= t > pos - cfg.window
-    scores = jnp.where(valid, scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgt,bktd->bkgd", p, v).reshape(B, 1, H * hd)
+        k = _load(new_cache["k"], policy)   # (B,Hkv,T,hd)
+        v = _load(new_cache["v"], policy)
+        S_cache = k.shape[2]
+        qf = q.reshape(B, Hkv, H // Hkv, hd).astype(jnp.float32) * (hd ** -0.5)
+        scores = jnp.einsum("bkgd,bktd->bkgt", qf, k)
+        t = jnp.arange(S_cache)[None, None, None, :]
+        lb = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
+        if rolling:
+            # circular buffer: every slot written so far is valid
+            lb = jnp.minimum(lb, S_cache)
+        valid = t < lb[:, None, None, None]
+        if cfg.window > 0 and not rolling and not cfg.is_cross:
+            pr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            valid &= t > (pr - cfg.window)[:, None, None, None]
+        scores = jnp.where(valid, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgt,bktd->bkgd", p, v).reshape(B, 1, H * hd)
     y = apply_linear(params["wo"], out.astype(x_t.dtype), policy,
                      path=f"{path}/wo")
     return y, new_cache

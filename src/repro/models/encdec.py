@@ -160,24 +160,31 @@ def init_dec_cache(params: dict, frames: jax.Array, cfg: ModelCfg,
     self_kv = jax.vmap(
         lambda _: attn.init_kv_cache(B, S_max, scfg, policy)
     )(jnp.arange(cfg.n_layers))
-    return {"cross": cross, "self": self_kv, "pos": jnp.zeros((), jnp.int32)}
+    return {"cross": cross, "self": self_kv, "pos": jnp.zeros((), jnp.int32),
+            "lens": jnp.zeros((B,), jnp.int32)}
 
 
 def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                 policy: TransPolicy) -> tuple[jax.Array, dict]:
     pos = cache["pos"]
+    B = token_t.shape[0]
+    lens = cache.get("lens")
+    if lens is None:  # pre-ragged hand-built caches: lockstep positions
+        lens = jnp.broadcast_to(pos, (B,))
     x = apply_embedding(params["embed"], token_t[:, None])
-    x = x + params["pos_embed"][(pos % MAX_TGT)][None, None].astype(x.dtype)
+    # learned positions per row (rows of a continuous batch sit at
+    # different decode depths)
+    x = x + params["pos_embed"][(lens % MAX_TGT)][:, None].astype(x.dtype)
     scfg, ccfg = _dec_self_cfg(cfg), _dec_cross_cfg(cfg)
 
     def body(x_carry, layer):
         p, cself, ccross = layer
         h = apply_layernorm(p["ln1"], x_carry)
-        a, c2 = attn.decode_attention_step(p["self"], scfg, h, cself, pos, policy,
+        a, c2 = attn.decode_attention_step(p["self"], scfg, h, cself, lens, policy,
                                            path="self")
         x2 = x_carry + a
         h = apply_layernorm(p["ln2"], x2)
-        a2, _ = attn.decode_attention_step(p["cross"], ccfg, h, ccross, pos, policy,
+        a2, _ = attn.decode_attention_step(p["cross"], ccfg, h, ccross, lens, policy,
                                             path="cross")
         x2 = x2 + a2
         h = apply_layernorm(p["ln3"], x2)
@@ -187,4 +194,5 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
         body, x, (params["dec_blocks"], cache["self"], cache["cross"]))
     h = apply_layernorm(params["dec_ln"], x)
     logits = embedding_logits(params["embed"], h)[:, 0]
-    return logits, {"cross": cache["cross"], "self": new_self, "pos": pos + 1}
+    return logits, {"cross": cache["cross"], "self": new_self, "pos": pos + 1,
+                    "lens": lens + 1}

@@ -339,13 +339,28 @@ def init_cache(cfg: ModelCfg, B: int, S_max: int, policy: TransPolicy) -> dict:
         cache["slstm"] = [xlstm_mod.init_slstm_state(B, xcfg)
                           for i in range(cfg.n_layers) if _is_slstm(cfg, i)]
     cache["pos"] = jnp.zeros((), jnp.int32)
+    # per-row sequence positions (ragged continuous batching: each slot sits
+    # at its own next-write index; lockstep serving keeps them all equal)
+    cache["lens"] = jnp.zeros((B,), jnp.int32)
     return cache
 
 
 def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                 policy: TransPolicy) -> tuple[jax.Array, dict]:
-    """One token for the whole batch. token_t: (B,) int32 -> logits (B, V)."""
+    """One token for the whole batch. token_t: (B,) int32 -> logits (B, V).
+
+    Positions are per-row (``cache["lens"]``): rows of a continuous batch
+    each write at their own sequence index and mask by their own length; a
+    lockstep batch simply keeps every row's position equal.  ``cache["pos"]``
+    stays the scalar step counter for lockstep callers.
+    """
     pos = cache["pos"]
+    B = token_t.shape[0]
+    # per-row next-write positions; fall back to the scalar counter for
+    # hand-built caches that predate the ragged layout
+    lens = cache.get("lens")
+    if lens is None:
+        lens = jnp.broadcast_to(pos, (B,))
     x = apply_embedding(params["embed"], token_t[:, None])
     new_cache = dict(cache)
 
@@ -362,10 +377,10 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                 h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
                 # local layers use a rolling window cache position
                 c = cache["kv"][i]
-                p_eff = pos if is_global else pos % c["k"].shape[2]
+                p_eff = lens if is_global else lens % c["k"].shape[2]
                 a, c2 = attn.decode_attention_step(
                     p["attn"], a_i, h, c, p_eff, policy,
-                    rolling=not is_global, abs_pos=pos)
+                    rolling=not is_global, abs_pos=lens)
                 kvs.append(c2)
                 x = x + a
                 h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -375,7 +390,7 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
             def body(x_carry, layer):
                 p, c = layer
                 h = apply_rmsnorm(p["ln1"], x_carry, cfg.norm_eps)
-                a, c2 = attn.decode_attention_step(p["attn"], acfg, h, c, pos,
+                a, c2 = attn.decode_attention_step(p["attn"], acfg, h, c, lens,
                                                    policy)
                 x2 = x_carry + a
                 h = apply_rmsnorm(p["ln2"], x2, cfg.norm_eps)
@@ -412,7 +427,7 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
             if use_shared:
                 h = apply_rmsnorm(sp["ln1"], x, cfg.norm_eps)
                 a, c2 = attn.decode_attention_step(
-                    sp["attn"], acfg, h, cache["shared_kv"][shared_i], pos, policy)
+                    sp["attn"], acfg, h, cache["shared_kv"][shared_i], lens, policy)
                 shared_kvs.append(c2)
                 x = x + a
                 h = apply_rmsnorm(sp["ln2"], x, cfg.norm_eps)
@@ -447,6 +462,8 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
     h = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_fn(params, h, cfg, policy)[:, 0]
     new_cache["pos"] = pos + 1
+    if "lens" in cache:
+        new_cache["lens"] = lens + 1
     return logits, new_cache
 
 
@@ -512,9 +529,11 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelCfg,
         hN = apply_rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
         logits = logits_fn(params, hN, cfg, policy)[:, 0]
         cache["pos"] = jnp.asarray(S, jnp.int32)
+        cache["lens"] = jnp.full((B,), S, jnp.int32)
         return logits, cache
 
     h = apply_rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     logits = logits_fn(params, h, cfg, policy)[:, 0]
     cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    cache["lens"] = jnp.full((B,), x.shape[1], jnp.int32)
     return logits, cache

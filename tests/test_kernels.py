@@ -15,6 +15,7 @@ from repro.kernels.posit_gemm.posit_gemm import posit_gemm
 from repro.kernels.posit_gemm.ref import posit_gemm_ref
 from repro.kernels.posit_codec.posit_codec import decode_kernel, encode_kernel
 from repro.kernels.posit_codec import ref as codec_ref
+from repro.kernels.posit_attention import ops as attn_ops
 from repro.kernels.posit_attention.posit_attention import posit_decode_attention
 from repro.kernels.posit_attention.ref import posit_decode_attention_ref
 from repro.kernels.posit_softmax.posit_softmax import posit_softmax_kernel
@@ -173,6 +174,89 @@ def test_decode_attention_respects_lengths():
         q, kc[:, :, :64], vc[:, :, :64], lengths, 0, kv_bits=8)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
                                atol=2e-5)
+
+
+@pytest.mark.parametrize("kv_bits,es", [(8, 0), (16, 1)])
+@pytest.mark.parametrize("B,Hq,Hkv,S,d,bs",
+                         [(2, 4, 2, 256, 64, 128), (3, 6, 6, 100, 32, 64)])
+def test_decode_attention_tiled_vs_ref(kv_bits, es, B, Hq, Hkv, S, d, bs):
+    """The length-bounded tiled XLA path (the off-TPU serving contract)
+    matches the full-softmax oracle on ragged lengths."""
+    rng = np.random.default_rng(21)
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, d)).astype(np.float32))
+    kc = posit_encode(jnp.asarray(
+        rng.normal(0, 1, (B, Hkv, S, d)).astype(np.float32)), kv_bits, es)
+    vc = posit_encode(jnp.asarray(
+        rng.normal(0, 1, (B, Hkv, S, d)).astype(np.float32)), kv_bits, es)
+    lengths = jnp.asarray(rng.integers(1, S + 1, B), jnp.int32)
+    got = attn_ops.posit_decode_attention_tiled(
+        q, kc, vc, lengths, es, kv_bits=kv_bits, block_s=bs)
+    want = posit_decode_attention_ref(q, kc, vc, lengths, es, kv_bits=kv_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "tiled", "xla"])
+def test_decode_attention_zero_length_rows(impl):
+    """A row with length 0 (a free engine slot) returns exact zeros on every
+    impl, not the uniform-softmax garbage a fully-masked softmax would
+    produce (on TPU that garbage would be stale recycled-slot V)."""
+    rng = np.random.default_rng(22)
+    q = jnp.asarray(rng.normal(0, 1, (2, 2, 32)).astype(np.float32))
+    kc = posit_encode(jnp.asarray(
+        rng.normal(0, 1, (2, 2, 64, 32)).astype(np.float32)), 8, 0)
+    vc = posit_encode(jnp.asarray(
+        rng.normal(0, 1, (2, 2, 64, 32)).astype(np.float32)), 8, 0)
+    got = attn_ops.decode_attention(q, kc, vc, jnp.asarray([0, 40]), 0,
+                                    kv_bits=8, impl=impl, block_s=32)
+    assert np.abs(np.asarray(got)[0]).max() == 0.0
+    want = posit_decode_attention_ref(q, kc, vc, jnp.asarray([0, 40]), 0,
+                                      kv_bits=8)
+    np.testing.assert_allclose(np.asarray(got)[1], np.asarray(want)[1],
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "tiled"])
+def test_decode_attention_rolling_mode(impl):
+    """Rolling (circular window buffer) validity: lengths past the buffer
+    size clamp to 'every slot valid' — the oracle with clamped lengths."""
+    B, H, S, d = 2, 2, 128, 64
+    rng = np.random.default_rng(23)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, d)).astype(np.float32))
+    kc = posit_encode(jnp.asarray(
+        rng.normal(0, 1, (B, H, S, d)).astype(np.float32)), 8, 0)
+    vc = posit_encode(jnp.asarray(
+        rng.normal(0, 1, (B, H, S, d)).astype(np.float32)), 8, 0)
+    # row 0 has wrapped its window 3x over; row 1 is still filling it
+    lengths = jnp.asarray([3 * S + 17, 40], jnp.int32)
+    got = attn_ops.decode_attention(q, kc, vc, lengths, 0, kv_bits=8,
+                                    impl=impl, rolling=True, block_s=64)
+    want = posit_decode_attention_ref(
+        q, kc, vc, jnp.minimum(lengths, S), 0, kv_bits=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "tiled", "xla"])
+def test_decode_attention_float_kv_bypass(impl):
+    """kv_bits=0 (float KV cache): identical masking/tiling contract, no
+    codec — every impl agrees with a dense float softmax attention."""
+    B, Hq, Hkv, S, d = 2, 4, 2, 96, 32
+    rng = np.random.default_rng(24)
+    q = jnp.asarray(rng.normal(0, 1, (B, Hq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, Hkv, S, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, Hkv, S, d)).astype(np.float32))
+    lengths = jnp.asarray([50, 96], jnp.int32)
+    got = attn_ops.decode_attention(q, k, v, lengths, 0, kv_bits=0,
+                                    impl=impl, block_s=32)
+    kg = jnp.repeat(k, Hq // Hkv, axis=1)
+    vg = jnp.repeat(v, Hq // Hkv, axis=1)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, kg) * (d ** -0.5)
+    scores = jnp.where(jnp.arange(S)[None, None, :] < lengths[:, None, None],
+                       scores, -1e30)
+    want = jnp.einsum("bhs,bhsd->bhd", jax.nn.softmax(scores, -1), vg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 # --------------------------------------------------------------- softmax ------
