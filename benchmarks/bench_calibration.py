@@ -1,0 +1,196 @@
+"""Calibration benchmark: the calibrated dynamic-es policy vs the presets on
+the accuracy-vs-weight-bytes frontier (BENCH_calibration.json).
+
+The paper's precision-scalability claim is that *per-operation* exponent size
+— picked from the data, not fixed globally — buys accuracy at constant
+storage.  This benchmark pins that end to end through repro.calib
+(DESIGN.md §11), on two registry models (dense + MoE):
+
+* **equal-bytes win** (asserted, smoke and full): the calibrated policy at
+  the p8 floor budget (1 byte/weight — exactly the ``p8-weights`` preset's
+  storage) achieves strictly lower measured forward error than the preset,
+  at equal-or-fewer weight bytes.
+* **frontier**: calibrated error at 1x / 1.25x / 1.5x / 2x the p8 floor —
+  the byte-budgeted knapsack trading storage back for accuracy (2x = uniform
+  p16 storage).
+* **artifact round trip** (asserted): a saved ``--policy-out`` artifact
+  reloaded via ``@cal.json`` reproduces bit-identical quantized weights.
+* **decode throughput**: tokens/s through the continuous-batching engine
+  (launch/engine.py) under calibrated-quantized vs preset-quantized weights.
+  Equal bytes and the same all-p8 datapath make parity the expectation, but
+  reduced-size engine steps are dispatch-overhead-dominated (measured ratio
+  swings ~0.75-1.25x with runner load), so only a catastrophic slowdown is
+  gated (>= 0.6, full mode) — smoke asserts the accuracy claim, which is
+  deterministic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.calib.observe import collect_stats
+from repro.calib.search import (build_site_plans, calibration_batches,
+                                emit_policy, save_artifact, search)
+from repro.configs import get_arch
+from repro.core.pcsr import TransPolicy
+from repro.core.policy import (PRECISION_PRESETS, PrecisionPolicy,
+                               get_precision_policy)
+from repro.launch.engine import ContinuousBatchingEngine, poisson_requests
+from repro.models.layers import policy_weight_bytes, quantize_params
+from repro.models.registry import build_model
+
+ARCHS = ("phi3-mini-3.8b", "olmoe-1b-7b")   # dense + MoE call-site coverage
+
+
+def _rel_rmse(model, params, batch, policy, ref) -> float:
+    h = model.forward(params, batch, policy)
+    return float(jnp.sqrt(jnp.mean((h - ref) ** 2) / jnp.mean(ref ** 2)))
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+def _engine_tok_per_s(model, params_q, policy, *, vocab, prompt_len,
+                      gen, slots, S_max, rounds) -> float:
+    eng = ContinuousBatchingEngine(model, params_q, policy,
+                                   max_slots=slots, S_max=S_max)
+    warm = poisson_requests(1, arrival_rate=0.0, prompt_lens=(prompt_len,),
+                           max_new_tokens=2, vocab=vocab)
+    eng.run(warm)
+    best = 0.0
+    for _ in range(rounds):
+        eng.reset()
+        reqs = poisson_requests(2 * slots, arrival_rate=0.0,
+                                prompt_lens=(prompt_len,),
+                                max_new_tokens=gen, vocab=vocab, seed=1)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = max(time.perf_counter() - t0, 1e-9)
+        n_tok = sum(len(c.tokens) for c in eng.completions)
+        best = max(best, n_tok / dt)
+    return best
+
+
+def _bench_arch(arch: str, smoke: bool) -> PrecisionPolicy:
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_cal = 2 if smoke else 4
+    B, S = (2, 48) if smoke else (4, 96)
+    cal_batches = calibration_batches(cfg, np.random.default_rng(0), n_cal,
+                                      batch=B, seq=S)
+    eval_batch = calibration_batches(cfg, np.random.default_rng(99), 1,
+                                     batch=B, seq=S)[0]   # held out
+    base = TransPolicy()                            # f32 datapath: the error
+    ref = model.forward(params, eval_batch, base)   # measured is the codec's
+
+    # one observation pass feeds every budget's search; drive model.loss so
+    # the lm_head site is observed too (forward stops at the hidden states)
+    t0 = time.perf_counter()
+    observer = collect_stats(
+        lambda b: model.loss(params, b, base)[0], cal_batches)
+    plans = build_site_plans(params, observer)
+    observe_s = time.perf_counter() - t0
+
+    preset = PRECISION_PRESETS["p8-weights"].with_base(base)
+    err_preset = _rel_rmse(model, params, eval_batch, preset, ref)
+    bytes_preset = policy_weight_bytes(params, preset)["weight_bytes_policy"]
+    emit(f"{arch}_preset_p8", 0.0,
+         f"rel_err={err_preset:.5f} weight_bytes={bytes_preset}")
+
+    cal_policies = {}
+    for mult in ((1.0, 2.0) if smoke else (1.0, 1.25, 1.5, 2.0)):
+        choice, report = search(plans, f"{mult}x")
+        pol = emit_policy(plans, choice, base=base,
+                          name=f"calibrated-{cfg.name}-{mult}x")
+        err = _rel_rmse(model, params, eval_batch, pol, ref)
+        nbytes = policy_weight_bytes(params, pol)["weight_bytes_policy"]
+        cal_policies[mult] = (pol, err, nbytes)
+        # observation wall time rides in derived (not us_per_call: that
+        # column is regression-gated, and host-callback wall clock on a
+        # shared runner is not a stable throughput statistic)
+        extra = f" observe_s={observe_s:.2f}" if mult == 1.0 else ""
+        emit(f"{arch}_calibrated_{mult}x", 0.0,
+             f"rel_err={err:.5f} weight_bytes={nbytes} "
+             f"pred_score={report['predicted_err_score']:.3e} "
+             f"sites={len(report['sites'])}{extra}")
+
+    # acceptance: equal-bytes win for the dynamic-es schedule, every mode
+    pol1, err1, bytes1 = cal_policies[1.0]
+    assert err1 < err_preset, (
+        f"{arch}: calibrated policy at the p8 byte budget must beat the "
+        f"p8-weights preset: {err1:.5f} vs {err_preset:.5f}")
+    assert bytes1 <= bytes_preset, (
+        f"{arch}: calibrated bytes {bytes1} exceed preset {bytes_preset}")
+    # more bytes must not predict worse accuracy (knapsack sanity)
+    err2 = cal_policies[2.0][1]
+    assert err2 <= err1, (
+        f"{arch}: 2x budget error {err2:.5f} worse than 1x {err1:.5f}")
+
+    # artifact round trip: reloaded policy -> bit-identical quantized weights
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "cal.json")
+        _, report = search(plans, None)
+        save_artifact(path, pol1, report)
+        loaded = get_precision_policy("@" + path)
+        q_direct = quantize_params(params, pol1)
+        q_loaded = quantize_params(params, loaded)
+        with open(path) as f:
+            n_rules = len(json.load(f)["rules"])
+        ok = _tree_equal(q_direct, q_loaded)
+        emit(f"{arch}_artifact_roundtrip", 0.0,
+             f"bitexact={int(ok)} rules={n_rules}")
+        assert ok, f"{arch}: reloaded artifact quantized weights differ"
+    return pol1
+
+
+def _bench_decode(arch: str, pol_cal, smoke: bool) -> None:
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    serve_base = TransPolicy.from_names(kv_cache="p8_0", compute_dtype="bf16")
+    # compare against the *packed* p8 preset: the calibrated schedule stores
+    # packed lanes wherever eligible, so this pairing isolates the dynamic-es
+    # choice (es changes decode arithmetic not at all) from the lane layout
+    preset = PRECISION_PRESETS["p8-packed"]
+    tok_s = {}
+    for name, pol in (("preset", preset.with_base(serve_base)),
+                      ("calibrated", pol_cal.with_base(serve_base))):
+        params_q = quantize_params(params, pol)
+        tok_s[name] = _engine_tok_per_s(
+            model, params_q, pol, vocab=cfg.vocab,
+            prompt_len=8 if smoke else 16, gen=6 if smoke else 16,
+            slots=2, S_max=64 if smoke else 128, rounds=2 if smoke else 4)
+    ratio = tok_s["calibrated"] / max(tok_s["preset"], 1e-9)
+    emit(f"{arch}_engine_decode", 0.0,
+         f"cal_tok_s={tok_s['calibrated']:.1f} "
+         f"preset_tok_s={tok_s['preset']:.1f} ratio={ratio:.2f}")
+    if not smoke:
+        # parity is the expectation (equal bytes, same all-p8 datapath), but
+        # reduced-size engine steps are dispatch-overhead-dominated and the
+        # measured ratio swings ~0.75-1.25 under shared-runner load — gate
+        # only the catastrophic case, with margin under the observed floor
+        assert ratio >= 0.6, (
+            f"{arch}: calibrated decode {tok_s['calibrated']:.1f} tok/s fell "
+            f"far below preset {tok_s['preset']:.1f} tok/s at equal bytes")
+
+
+def run(smoke: bool = False) -> None:
+    for arch in ARCHS:
+        pol_cal = _bench_arch(arch, smoke)
+        if arch == ARCHS[0]:
+            _bench_decode(arch, pol_cal, smoke)
+
+
+if __name__ == "__main__":
+    run(smoke=True)

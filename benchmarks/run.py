@@ -39,6 +39,7 @@ BENCHES = {
     "epilogue": "benchmarks.bench_epilogue_fusion",    # fused vs chained layer
     "mixed": "benchmarks.bench_mixed_gemm",            # packed/mixed precision
     "serving": "benchmarks.bench_serving",             # engine + attn dispatch
+    "calibration": "benchmarks.bench_calibration",     # dynamic-es calibration
 }
 
 

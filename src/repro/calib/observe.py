@@ -1,0 +1,197 @@
+"""Calibration observers — streaming per-tensor statistics from a forward pass.
+
+A calibration pass runs the model's ordinary forward code under
+``observing(Observer())``; every linear call site (``models.layers
+.apply_linear`` / ``effective_weight``, keyed by the same layer-path strings
+``resolve_policy`` sees) then streams *reduced* statistics for its weight and
+activation tensors to the observer:
+
+* ``abs_max``      — saturation / dynamic-range witness,
+* ``hist``         — a log2-magnitude histogram: count of values with
+                     ``floor(log2|x|) == s`` per binade ``s`` (the exact
+                     quantity posit tapered accuracy is parameterized by —
+                     ``calib.errmodel`` maps it to expected round-trip error
+                     per ``(nbits, es)`` candidate),
+* ``sum_sq``       — RMS magnitude (layer-importance weighting in the search),
+* ``zeros``        — exact zeros (posit encodes them exactly; excluded from
+                     the error integral).
+
+Nothing else crosses the device->host boundary: the per-tensor reduction is
+one 2-float head plus an int32 ``NBINS`` histogram shipped through
+``jax.debug.callback``, so the hooks work identically inside ``lax.scan``
+stacks and ``jax.checkpoint`` bodies, and no activation trace is ever
+materialized.  (Counts ride in int32 — a float32 scatter-add saturates at
+2^24 per binade, which one full-size linear exceeds.)  Call sites check
+``is_active()`` at trace time — when no observer is installed the hook is
+dead code and costs nothing.
+
+Stats are keyed by ``(path, kind)`` with ``kind in ("weight", "act")``.  All
+depth-layers of a scanned stack share one call-site path, so their statistics
+merge into one histogram — exactly the granularity at which
+``PrecisionPolicy`` rules resolve (DESIGN.md §9/§11).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Binade range covered by the histogram: floor(log2|x|) in [BIN_LO, BIN_HI].
+# BIN_HI must be >= the largest max_scale whose saturation we need to *see*:
+# p8 es3 saturates at 2^48, so the top bin sits above it (s=48 mass must not
+# clamp into an in-range bin, where it would be scored as truncated-es error
+# instead of the ~4x larger clamp error and vanish from outlier_mass).  p16
+# es2/es3 saturation (2^56 / 2^112) still clamps into the top bin — that
+# only ever *under*-states the error of astronomically large outliers.
+BIN_LO = -80
+NBINS = 130
+BIN_HI = BIN_LO + NBINS - 1
+
+KINDS = ("weight", "act")
+
+
+@dataclasses.dataclass
+class TensorStats:
+    """Mergeable streamed statistics of one tensor (or stream of tensors)."""
+
+    n: float = 0.0                 # total elements seen (zeros included)
+    zeros: float = 0.0             # exact zeros
+    abs_max: float = 0.0
+    sum_sq: float = 0.0
+    hist: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((NBINS,), np.float64))
+    size: int = 0                  # per-record element count (static shape)
+    shape: Tuple[int, ...] = ()    # shape of one recorded tensor
+
+    def merge_vec(self, size: int, shape: Tuple[int, ...],
+                  head: np.ndarray, hist: np.ndarray) -> None:
+        """Fold one streamed record: head [abs_max, sum_sq], int32 hist."""
+        self.n += float(size)
+        self.abs_max = max(self.abs_max, float(head[0]))
+        self.sum_sq += float(head[1])
+        self.hist += np.asarray(hist, np.float64)
+        self.zeros = self.n - float(self.hist.sum())
+        self.size = size
+        self.shape = tuple(shape)
+
+    @property
+    def rms(self) -> float:
+        return float(np.sqrt(self.sum_sq / self.n)) if self.n else 0.0
+
+    @property
+    def probs(self) -> np.ndarray:
+        """Per-binade probability mass (zeros excluded from every bin; the
+        zero fraction is ``zeros / n``)."""
+        return self.hist / self.n if self.n else self.hist
+
+    def nonzero_frac(self) -> float:
+        return 1.0 - self.zeros / self.n if self.n else 0.0
+
+
+def _stat_vec(arr: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Device-side reduction: ([abs_max, sum_sq], int32 hist[NBINS]).
+
+    Counts accumulate in int32: a float32 scatter-add silently saturates at
+    2^24 per binade, which a single full-size linear (~1e8 elements) exceeds.
+    """
+    x = jnp.abs(arr.astype(jnp.float32)).reshape(-1)
+    finite = jnp.isfinite(x)
+    x = jnp.where(finite, x, 0.0)
+    nonzero = x > 0.0
+    # frexp gives x = m * 2^e with m in [0.5, 1): floor(log2|x|) == e - 1,
+    # exactly (no float-log rounding at binade boundaries)
+    _, e = jnp.frexp(x)
+    idx = jnp.clip(e - 1, BIN_LO, BIN_HI) - BIN_LO
+    hist = jnp.zeros((NBINS,), jnp.int32).at[idx].add(
+        nonzero.astype(jnp.int32))
+    head = jnp.stack([jnp.max(x, initial=0.0), jnp.sum(x * x)])
+    return head, hist
+
+
+class Observer:
+    """Accumulates ``TensorStats`` per ``(path, kind)`` key on the host."""
+
+    def __init__(self):
+        self.stats: Dict[Tuple[str, str], TensorStats] = {}
+
+    # -- host side -----------------------------------------------------------
+    def _accum(self, key: Tuple[str, str], size: int,
+               shape: Tuple[int, ...], head, hist) -> None:
+        st = self.stats.get(key)
+        if st is None:
+            st = self.stats[key] = TensorStats()
+        st.merge_vec(size, shape, np.asarray(head), np.asarray(hist))
+
+    # -- trace side ----------------------------------------------------------
+    def record(self, path: str, kind: str, arr: jax.Array) -> None:
+        assert kind in KINDS, kind
+        head, hist = _stat_vec(arr)
+        jax.debug.callback(
+            functools.partial(self._accum, (path, kind),
+                              int(arr.size), tuple(arr.shape)),
+            head, hist)
+
+    # -- results -------------------------------------------------------------
+    def paths(self) -> Tuple[str, ...]:
+        return tuple(sorted({p for p, _ in self.stats}))
+
+    def get(self, path: str, kind: str) -> Optional[TensorStats]:
+        return self.stats.get((path, kind))
+
+
+_ACTIVE: Optional[Observer] = None
+
+
+def is_active() -> bool:
+    return _ACTIVE is not None
+
+
+def get_active() -> Optional[Observer]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def observing(obs: Observer):
+    """Install ``obs`` as the active calibration observer for the block."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = obs
+    try:
+        yield obs
+    finally:
+        _ACTIVE = prev
+
+
+def record(path: str, kind: str, arr: jax.Array) -> None:
+    """Call-site hook: stream stats for ``arr`` if an observer is active.
+
+    This is the function ``models.layers`` calls next to every
+    ``resolve_policy``; it must stay free to call when inactive (plain global
+    read at trace time).
+    """
+    if _ACTIVE is not None:
+        _ACTIVE.record(path, kind, arr)
+
+
+def collect_stats(forward_fn, batches) -> Observer:
+    """Run ``forward_fn`` over ``batches`` under a fresh observer.
+
+    ``forward_fn(batch)`` is any callable that executes the model's forward
+    code (e.g. ``lambda b: model.forward(params, b, policy)``).  Returns the
+    populated observer after draining all pending host callbacks.
+    """
+    obs = Observer()
+    with observing(obs):
+        for batch in batches:
+            out = forward_fn(batch)
+            jax.block_until_ready(out)
+    # debug.callback effects are asynchronous; drain them before reading stats
+    barrier = getattr(jax, "effects_barrier", None)
+    if barrier is not None:
+        barrier()
+    return obs

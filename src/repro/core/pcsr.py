@@ -212,6 +212,39 @@ class TransPolicy:
             kw[role] = fmt
         return cls(compute_dtype=compute_dtype, **kw)
 
+    def to_json(self) -> dict:
+        """JSON-ready dict: format roles by name, knobs verbatim.
+
+        Round-trips through ``TransPolicy.from_json`` — the persistence layer
+        calibration artifacts (DESIGN.md §11) embed their base policy with.
+        """
+        d = {role: (f.name if (f := self.fmt_for(role)) is not None else None)
+             for role in ROLES}
+        d.update(compute_dtype=self.compute_dtype,
+                 exact_collectives=self.exact_collectives,
+                 codec_impl=self.codec_impl, epilogue=self.epilogue,
+                 pack_weights=self.pack_weights, attn_impl=self.attn_impl)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TransPolicy":
+        """Inverse of ``to_json``; unknown keys are rejected loudly."""
+        known = set(ROLES) | {"compute_dtype", "exact_collectives",
+                              "codec_impl", "epilogue", "pack_weights",
+                              "attn_impl"}
+        bad = set(d) - known
+        if bad:
+            raise ValueError(f"unknown TransPolicy fields {sorted(bad)}")
+        kw = dict(d)
+        for role in ROLES:
+            if kw.get(role) is not None:
+                fmt = get_format(kw[role])
+                if not isinstance(fmt, PositFmt):
+                    raise ValueError(
+                        f"role {role} must be a posit format, got {kw[role]!r}")
+                kw[role] = fmt
+        return cls(**kw)
+
     def describe(self) -> str:
         parts = [f"compute={self.compute_dtype}"]
         for role in ROLES:

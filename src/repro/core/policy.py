@@ -28,10 +28,11 @@ from __future__ import annotations
 import dataclasses
 import fnmatch
 import functools
+import json
 from typing import Optional, Tuple
 
 from repro.core.pcsr import TransPolicy
-from repro.core.types import PositFmt, get_format
+from repro.core.types import ES_MAX, ES_MIN, PositFmt, get_format
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +113,42 @@ class PrecisionPolicy:
                 f"{r.pattern}->{fmt}{'(packed)' if r.packed else ''}")
         return " ".join(parts)
 
+    def to_json(self) -> dict:
+        """JSON-ready dict (schema DESIGN.md §11): name, base TransPolicy,
+        ordered rules.  ``from_json`` inverts it; extra top-level keys (the
+        calibration ``meta`` block) are ignored on load."""
+        return {
+            "kind": "repro/precision-policy",
+            "version": 1,
+            "name": self.name,
+            "base": self.base.to_json(),
+            "rules": [{
+                "pattern": r.pattern,
+                "weights": r.weights.name if r.weights is not None else None,
+                "packed": r.packed,
+            } for r in self.rules],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PrecisionPolicy":
+        if d.get("kind", "repro/precision-policy") != "repro/precision-policy":
+            raise ValueError(f"not a precision-policy document: {d.get('kind')!r}")
+        for r in d.get("rules", ()):
+            # reject typos loudly: a hand-edited {"weight": ...} rule would
+            # otherwise silently degrade to a weights=None pin-to-base rule
+            bad = set(r) - {"pattern", "weights", "packed"}
+            if bad or "pattern" not in r:
+                raise ValueError(
+                    f"malformed precision rule {r!r}: "
+                    + (f"unknown keys {sorted(bad)}" if bad
+                       else "missing 'pattern'"))
+        rules = tuple(
+            _rule(r["pattern"], r.get("weights"),
+                  packed=bool(r.get("packed", False)))
+            for r in d.get("rules", ()))
+        base = TransPolicy.from_json(d["base"]) if "base" in d else TransPolicy()
+        return cls(base=base, rules=rules, name=d.get("name", "custom"))
+
     def __getattr__(self, item: str):
         # duck-type TransPolicy: non-weight attribute reads fall through to
         # the base (only called when normal dataclass lookup misses)
@@ -167,27 +204,72 @@ PRECISION_PRESETS = {
 }
 
 
+def parse_fmt_token(tok: str) -> PositFmt:
+    """A rule's format token: ``p8_0`` | ``p16_1`` | ... with an optional
+    dynamic-es override ``@es`` (``p8@2``, ``p16_1@3`` -> p16_3).
+
+    Bare ``p8``/``p16`` require the ``@es`` suffix; es outside
+    [ES_MIN, ES_MAX] or non-integer es raise ``ValueError`` (the pes CSR
+    field is 3 bits wide but fp32-overflow bounds usable es, core/types.py).
+    """
+    tok = tok.strip()
+    name, _, es_s = tok.partition("@")
+    name = name.strip()
+    if es_s:
+        try:
+            es = int(es_s.strip())
+        except ValueError:
+            raise ValueError(f"es in {tok!r} must be an integer, got {es_s!r}")
+        if not (ES_MIN <= es <= ES_MAX):
+            raise ValueError(
+                f"es {es} out of range [{ES_MIN}, {ES_MAX}] in {tok!r}")
+        if name in ("p8", "p16"):
+            return PositFmt(int(name[1:]), es)
+        f = get_format(name)
+        if not isinstance(f, PositFmt):
+            raise ValueError(f"@es only applies to posit formats, got {name!r}")
+        return f.with_es(es)
+    if name in ("p8", "p16"):
+        raise ValueError(
+            f"bare {name!r} needs an exponent size: {name}@es or {name}_es")
+    f = get_format(name)
+    if not isinstance(f, PositFmt):
+        raise ValueError(f"layer rules take posit formats, got {name!r}")
+    return f
+
+
+def _load_policy_file(path: str) -> PrecisionPolicy:
+    with open(path) as f:
+        return PrecisionPolicy.from_json(json.load(f))
+
+
 def get_precision_policy(name_or_spec: str,
                          base: Optional[TransPolicy] = None) -> PrecisionPolicy:
-    """Look up a preset by name, or parse an inline rule spec.
+    """Look up a preset by name, load a saved artifact, or parse a rule spec.
 
-    Spec grammar: comma-separated ``pattern=fmt[:packed]`` entries, applied
-    in order (first match wins), e.g.::
+    Three spellings, everywhere a precision policy is accepted::
 
-        --precision-policy "attn-p16-mlp-p8"
-        --precision-policy "*attn*=p16_1,*mlp*=p8_0:packed,*=p16_1"
+        --precision-policy "attn-p16-mlp-p8"                        # preset
+        --precision-policy "@experiments/cal.json"                  # artifact
+        --precision-policy "*attn*=p16@2,*mlp*=p8@1:packed,*=p16_1" # spec
 
-    ``base`` (when given) supplies every non-weight role — e.g. the serving
-    ``--policy`` keeps its kv_cache/compute_dtype while the precision policy
-    schedules the weights.
+    Spec grammar: comma-separated ``pattern=fmt[@es][:packed]`` entries,
+    applied in order (first match wins); ``@es`` overrides the exponent size
+    (``parse_fmt_token``).  ``base`` (when given) supplies every non-weight
+    role — e.g. the serving ``--policy`` keeps its kv_cache/compute_dtype
+    while the precision policy schedules the weights.
     """
+    if name_or_spec.startswith("@"):
+        pol = _load_policy_file(name_or_spec[1:])
+        return pol if base is None else pol.with_base(base)
     if name_or_spec in PRECISION_PRESETS:
         pol = PRECISION_PRESETS[name_or_spec]
         return pol if base is None else pol.with_base(base)
     if "=" not in name_or_spec:
         raise KeyError(
             f"unknown precision policy {name_or_spec!r}; presets: "
-            f"{sorted(PRECISION_PRESETS)} (or a pattern=fmt[:packed],... spec)")
+            f"{sorted(PRECISION_PRESETS)} (or @artifact.json, or a "
+            f"pattern=fmt[@es][:packed],... spec)")
     rules = []
     for part in name_or_spec.split(","):
         pattern, _, fmt = part.partition("=")
@@ -196,6 +278,7 @@ def get_precision_policy(name_or_spec: str,
         fmt, _, mod = fmt.partition(":")
         if mod not in ("", "packed"):
             raise ValueError(f"unknown rule modifier {mod!r} in {part!r}")
-        rules.append(_rule(pattern.strip(), fmt.strip(), packed=mod == "packed"))
+        rules.append(LayerRule(pattern.strip(), parse_fmt_token(fmt),
+                               packed=mod == "packed"))
     return PrecisionPolicy(base=base if base is not None else TransPolicy(),
                            rules=tuple(rules), name=name_or_spec)

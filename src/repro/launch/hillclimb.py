@@ -51,7 +51,8 @@ VARIANTS = {
 
 # Per-layer precision schedules (core/policy.py) as a hillclimb search
 # dimension: every preset becomes a variant (over the bf16 datapath), and
-# --precision-policy overlays any preset/spec onto any variant's policy.
+# --precision-policy overlays any preset/spec onto any variant's policy
+# (accepting @artifact.json to probe a saved calibration).
 VARIANTS.update({
     f"prec_{name.replace('-', '_')}": dict(
         policy=pol.with_base(dataclasses.replace(
@@ -59,6 +60,31 @@ VARIANTS.update({
         cfg_override={})
     for name, pol in PRECISION_PRESETS.items()
 })
+
+# Data-driven schedule (repro.calib, DESIGN.md §11): calibrate on the cell's
+# *reduced* config (cheap — a couple of observed forward passes), then probe
+# the full-size cell under the emitted per-layer dynamic-es policy.  Layer
+# paths are size-independent, so reduced-model rules transfer verbatim.
+VARIANTS["prec_calibrated"] = dict(policy="__calibrated__", cfg_override={})
+
+
+def _calibrated_policy(cfg):
+    import jax
+    import numpy as np
+
+    from repro.calib.search import calibrate_model, calibration_batches
+    from repro.models.registry import build_model
+
+    rcfg = cfg.reduced()
+    model = build_model(rcfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    base = TransPolicy(compute_dtype="bf16")
+    batches = calibration_batches(rcfg, rng, 2, batch=2, seq=64)
+    policy, _ = calibrate_model(
+        lambda b: model.loss(params, b, base)[0], batches, params,
+        base=base, name=f"calibrated-{rcfg.name}")
+    return policy
 
 
 def run_variant(cell: str, variant: str,
@@ -69,6 +95,13 @@ def run_variant(cell: str, variant: str,
     if v["cfg_override"]:
         cfg = dataclasses.replace(cfg, **v["cfg_override"])
     policy = v["policy"]
+    if policy == "__calibrated__":
+        if precision_policy:
+            # the overlay below replaces the rule schedule wholesale —
+            # running the calibration first would only throw its result away
+            policy = TransPolicy(compute_dtype="bf16")
+        else:
+            policy = _calibrated_policy(cfg)
     if precision_policy:
         # overlay a per-layer weight schedule onto the variant's base policy
         base = policy.base if hasattr(policy, "base") else policy

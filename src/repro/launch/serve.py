@@ -22,8 +22,21 @@ layer.  ``--codec-impl`` selects the codec lowering (auto | lut | bits) and
 ``--epilogue`` the layer dataflow (fused | chained).
 
 ``--precision-policy`` schedules *per-layer* weight formats over the base
-policy (core/policy.py); ``--quantize-weights`` converts the float weights to
-real posit storage under that schedule and reports the weight-byte savings.
+policy (core/policy.py) — a preset name, a ``pattern=fmt[@es][:packed]``
+spec, or ``@path.json`` to load a saved calibration artifact;
+``--quantize-weights`` converts the float weights to real posit storage under
+that schedule and reports the weight-byte savings.
+
+``--calibrate N`` runs the repro.calib pipeline (DESIGN.md §11) before
+serving: N observed forward passes stream per-layer weight/activation
+histograms, the analytic posit error model scores every (p8|p16) x es
+candidate, and the byte-budgeted search (``--weight-byte-budget``, default
+1 byte/weight — the p8 floor) emits the per-layer dynamic-es policy the run
+then serves under.  ``--policy-out cal.json`` saves the artifact for
+``--precision-policy @cal.json`` reuse::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
+        --reduced --calibrate 4 --policy-out cal.json --quantize-weights
 """
 from __future__ import annotations
 
@@ -191,6 +204,35 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max):
     }, eng.cache
 
 
+def _calibrate(args, cfg, model, params, policy):
+    """observe -> search -> (optionally) persist; returns the serving policy.
+
+    The emitted PrecisionPolicy keeps ``policy``'s non-weight roles
+    (kv_cache, compute dtype, codec/epilogue/attn dispatch) as its base; any
+    ``--precision-policy`` rules are superseded by the calibrated schedule.
+    """
+    from repro.calib.search import (calibrate_model, calibration_batches,
+                                    save_artifact)
+
+    base = policy.base if hasattr(policy, "base") else policy
+    rng = np.random.default_rng(args.seed)
+    batches = calibration_batches(cfg, rng, args.calibrate,
+                                  batch=args.batch, seq=args.prompt_len)
+    # drive model.loss, not forward: the loss graph reaches the lm_head /
+    # logits projection, which serving decodes through every step
+    cal_policy, report = calibrate_model(
+        lambda b: model.loss(params, b, base)[0], batches, params,
+        base=base, byte_budget=args.weight_byte_budget,
+        name=f"calibrated-{cfg.name}")
+    print(json.dumps({"calibration": {
+        k: report[k] for k in ("n_sites", "p8_floor_bytes", "byte_budget",
+                               "weight_bytes", "predicted_err_score")}}))
+    if args.policy_out:
+        save_artifact(args.policy_out, cal_policy, report)
+        print(json.dumps({"policy_out": args.policy_out}))
+    return cal_policy
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -211,8 +253,20 @@ def main(argv=None):
                     help="0 = greedy; >0 samples (with --top-k)")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--precision-policy", default=None,
-                    help="per-layer weight schedule: preset name or "
-                         "pattern=fmt[:packed],... spec (core/policy.py)")
+                    help="per-layer weight schedule: preset name, "
+                         "pattern=fmt[@es][:packed],... spec, or "
+                         "@artifact.json (core/policy.py)")
+    ap.add_argument("--calibrate", type=int, default=0, metavar="N",
+                    help="run N calibration forward passes and serve under "
+                         "the searched per-layer dynamic-es policy "
+                         "(repro.calib, DESIGN.md §11)")
+    ap.add_argument("--policy-out", default=None,
+                    help="write the calibration artifact JSON here "
+                         "(reload with --precision-policy @path)")
+    ap.add_argument("--weight-byte-budget", default=None,
+                    help="calibration search budget: absolute bytes or a "
+                         "'<mult>x' multiple of the 1-byte/weight p8 floor "
+                         "(default: the floor itself)")
     ap.add_argument("--quantize-weights", action="store_true",
                     help="store weights as posit codes (packed-p8 lanes "
                          "where the policy says so) instead of fake-quant")
@@ -222,6 +276,10 @@ def main(argv=None):
                     choices=("auto", "kernel", "xla"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if not args.calibrate and (args.policy_out or args.weight_byte_budget):
+        ap.error("--policy-out / --weight-byte-budget require --calibrate N "
+                 "(they configure the calibration search; a loaded "
+                 "--precision-policy artifact is served as saved)")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -234,6 +292,8 @@ def main(argv=None):
         policy = get_precision_policy(args.precision_policy, base=policy)
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
+    if args.calibrate:
+        policy = _calibrate(args, cfg, model, params, policy)
     weight_report = {}
     if args.quantize_weights:
         weight_report = policy_weight_bytes(params, policy)

@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.calib import observe
 from repro.core.codec import posit_encode
 from repro.core.dot import apply_epilogue, posit_matmul_wx
 from repro.core.lut import decode_with_impl
@@ -88,6 +89,10 @@ def effective_weight(p: dict, policy: TransPolicy, es=None, path: str = "") -> j
         return decode_with_impl(p["w_codes"], fmt.nbits,
                                 fmt.es if es is None else es, policy.codec_impl)
     w = p["w"]
+    if observe.is_active():
+        # calibration-mode forward (DESIGN.md §11): stream this site's float
+        # weight statistics; the same path string keys the emitted rules
+        observe.record(path, "weight", w)
     fmt = policy.weights
     if fmt is not None:
         wf = w.astype(jnp.float32)
@@ -113,6 +118,8 @@ def apply_linear(p: dict, x: jax.Array, policy: TransPolicy, es=None, *,
     ``PrecisionPolicy`` resolution (DESIGN.md §9).
     """
     policy = resolve_policy(policy, path)
+    if observe.is_active():
+        observe.record(path, "act", x)
     cd = _compute_dtype(policy)
     packed = "w_packed" in p
     if packed or "w_codes" in p:
@@ -124,7 +131,7 @@ def apply_linear(p: dict, x: jax.Array, policy: TransPolicy, es=None, *,
             bias=p.get("b"), activation=activation, residual=residual,
             codec_impl=policy.codec_impl, epilogue=policy.epilogue,
             out_dtype=x.dtype, packed=packed)
-    w = effective_weight(p, policy, es).astype(cd)
+    w = effective_weight(p, policy, es, path=path).astype(cd)
     y = jnp.matmul(x.astype(cd), w, preferred_element_type=jnp.float32)
     if "b" in p or activation != "none" or residual is not None:
         y = apply_epilogue(y, p.get("b"), activation, residual,

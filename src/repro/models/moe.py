@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.calib import observe
 from repro.core.pcsr import TransPolicy
 from repro.models.layers import apply_linear, effective_weight, init_linear
 from repro.models.shardhooks import maybe_shard
@@ -31,10 +32,17 @@ def init_moe(key, d: int, f: int, n_experts: int) -> dict:
     }
 
 
+def _expert_path(name: str) -> str:
+    """The policy/observer site key for a stacked expert tensor — one
+    definition so weight records (_expert_weight) and activation records
+    (apply_moe) can never silently diverge."""
+    return f"moe/{name}"
+
+
 def _expert_weight(p, name, policy: TransPolicy):
     return effective_weight(
         {"w": p[name]} if name in p else {"w_codes": p[name + "_codes"]},
-        policy, path=f"moe/{name}")
+        policy, path=_expert_path(name))
 
 
 def apply_moe(p: dict, x: jax.Array, *, top_k: int, capacity_factor: float,
@@ -88,9 +96,16 @@ def apply_moe(p: dict, x: jax.Array, *, top_k: int, capacity_factor: float,
     wg = _expert_weight(p, "w_gate", policy).astype(cd)
     wu = _expert_weight(p, "w_up", policy).astype(cd)
     wd = _expert_weight(p, "w_down", policy).astype(cd)
+    if observe.is_active():
+        # expert GEMMs don't route through apply_linear: stream the dispatch
+        # buffers as the activations of the stacked expert-weight sites
+        observe.record(_expert_path("w_gate"), "act", h)
+        observe.record(_expert_path("w_up"), "act", h)
     g = jnp.einsum("ecd,edf->ecf", h, wg, preferred_element_type=jnp.float32)
     u = jnp.einsum("ecd,edf->ecf", h, wu, preferred_element_type=jnp.float32)
     act = jax.nn.silu(g) * u
+    if observe.is_active():
+        observe.record(_expert_path("w_down"), "act", act)
     out_buf = jnp.einsum("ecf,efd->ecd", act.astype(cd), wd,
                          preferred_element_type=jnp.float32)     # (E, C, D)
     out_buf = maybe_shard(out_buf, "expert_buffers")

@@ -1,0 +1,431 @@
+"""repro.calib tests: observer streaming, the analytic posit error model vs
+measured codec round-trips, the byte-budgeted search, policy JSON round
+trips, and the fmt[@es][:packed] rule grammar (DESIGN.md §11)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.calib import errmodel, observe
+from repro.calib.observe import Observer, TensorStats, observing
+from repro.calib.search import (calibrate_model, emit_policy, p8_floor_bytes,
+                                resolve_budget, save_artifact, search)
+from repro.configs import get_arch
+from repro.core.pcsr import TransPolicy
+from repro.core.policy import (PRECISION_PRESETS, PrecisionPolicy,
+                               get_precision_policy, parse_fmt_token)
+from repro.core.types import P8_0, P8_2, P16_1, P16_3, PositFmt
+from repro.models.layers import quantize_params
+from repro.models.registry import build_model
+
+
+# ---------------------------------------------------------------- grammar ----
+
+def test_parse_fmt_token_plain_and_at_es():
+    assert parse_fmt_token("p8_0") == P8_0
+    assert parse_fmt_token("p8@2") == P8_2
+    assert parse_fmt_token("p16@3") == P16_3
+    assert parse_fmt_token(" p16_1@3 ") == P16_3   # @es overrides the suffix
+    assert parse_fmt_token("p8_0@0") == P8_0
+
+
+@pytest.mark.parametrize("tok", ["p8@4", "p16@-1", "p8@99"])
+def test_parse_fmt_token_es_out_of_range(tok):
+    with pytest.raises(ValueError, match="out of range"):
+        parse_fmt_token(tok)
+
+
+def test_parse_fmt_token_malformed():
+    with pytest.raises(ValueError, match="integer"):
+        parse_fmt_token("p8@x")
+    with pytest.raises(ValueError, match="needs an exponent size"):
+        parse_fmt_token("p16")
+    with pytest.raises(ValueError, match="posit"):
+        parse_fmt_token("bf16@1")
+    with pytest.raises(ValueError, match="posit"):
+        parse_fmt_token("f32")
+
+
+def test_spec_parser_dynamic_es():
+    pol = get_precision_policy("*attn*=p16@2,*mlp*=p8@1:packed,*=p16_1")
+    assert pol.policy_for("blocks/attn/wq").weights == PositFmt(16, 2)
+    mlp = pol.policy_for("blocks/mlp/up")
+    assert mlp.weights == PositFmt(8, 1) and mlp.pack_weights
+    assert pol.policy_for("lm_head").weights == P16_1
+
+
+def test_spec_parser_rejects_bad_rules():
+    with pytest.raises(ValueError, match="out of range"):
+        get_precision_policy("*=p8@7")
+    with pytest.raises(ValueError):                 # packed needs p8
+        get_precision_policy("*=p16@1:packed")
+    with pytest.raises(ValueError, match="modifier"):
+        get_precision_policy("*=p8_0:quick")
+
+
+# ------------------------------------------------------------ policy JSON ----
+
+def test_transpolicy_json_roundtrip():
+    pol = TransPolicy.from_names(weights="p8_0", kv_cache="p8_2",
+                                 gradients="p16_1", compute_dtype="bf16",
+                                 pack_weights=True, codec_impl="lut",
+                                 epilogue="chained", attn_impl="xla",
+                                 exact_collectives=True)
+    assert TransPolicy.from_json(pol.to_json()) == pol
+    assert TransPolicy.from_json(TransPolicy().to_json()) == TransPolicy()
+
+
+def test_transpolicy_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown"):
+        TransPolicy.from_json({"weights": "p8_0", "wat": 1})
+
+
+def test_precision_policy_json_roundtrip():
+    for name, pol in PRECISION_PRESETS.items():
+        back = PrecisionPolicy.from_json(pol.to_json())
+        assert back == pol, name
+    # es survives the round trip (the dynamic-es bit of the artifact)
+    pol = get_precision_policy("*mlp*=p8@3:packed,*=p16@2")
+    back = PrecisionPolicy.from_json(pol.to_json())
+    assert back.rules == pol.rules and back.base == pol.base
+
+
+def test_precision_policy_file_loading(tmp_path):
+    pol = PRECISION_PRESETS["attn-p16-mlp-p8"]
+    doc = pol.to_json()
+    doc["meta"] = {"anything": "ignored on load"}
+    path = tmp_path / "cal.json"
+    path.write_text(json.dumps(doc))
+    loaded = get_precision_policy("@" + str(path))
+    assert loaded.rules == pol.rules
+    # base= overlay keeps the serving policy's non-weight roles
+    serve_base = TransPolicy.from_names(kv_cache="p8_0", compute_dtype="bf16")
+    overlaid = get_precision_policy("@" + str(path), base=serve_base)
+    assert overlaid.kv_cache == serve_base.kv_cache
+    assert overlaid.rules == pol.rules
+
+
+def test_precision_policy_file_rejects_other_docs(tmp_path):
+    path = tmp_path / "not_policy.json"
+    path.write_text(json.dumps({"kind": "something/else", "rules": []}))
+    with pytest.raises(ValueError, match="not a precision-policy"):
+        get_precision_policy("@" + str(path))
+
+
+def test_precision_policy_json_rejects_typo_rules():
+    # a hand-edited {"weight": ...} rule must not silently pin to base
+    with pytest.raises(ValueError, match="unknown keys"):
+        PrecisionPolicy.from_json({
+            "base": TransPolicy().to_json(),
+            "rules": [{"pattern": "mlp/*", "weight": "p8_2"}]})
+    with pytest.raises(ValueError, match="missing 'pattern'"):
+        PrecisionPolicy.from_json({
+            "base": TransPolicy().to_json(),
+            "rules": [{"weights": "p8_2"}]})
+
+
+# ------------------------------------------------------------- error model ----
+
+def test_significand_bits_taper():
+    # p8 es=0 near 1.0: sign + 2 regime bits leave 5 fraction bits
+    assert errmodel.significand_bits(8, 0, 0) == (5, 0)
+    # p16 es=1 near 1.0: sign + 2 regime + 1 exponent -> 12 fraction bits
+    assert errmodel.significand_bits(16, 1, 0) == (12, 0)
+    # accuracy tapers away from 1.0 (non-increasing fraction bits)
+    for es in range(4):
+        fs = [errmodel.significand_bits(8, es, s)[0] for s in range(0, 40)]
+        assert fs == sorted(fs, reverse=True)
+
+
+def _assert_model_matches(nbits, es, s, n_samples):
+    ana = errmodel.expected_sq_rel_err(nbits, es, s)
+    mea = errmodel.measured_sq_rel_err(nbits, es, s, n_samples)
+    assert mea > 0, (nbits, es, s)
+    ratio = ana / mea
+    # the clamp / truncated-es / f=0 branches are closed-form exact; the
+    # f>=1 RNE-grid branch is a small-bias approximation (measured spread
+    # over the full sweep: [0.995, 1.03]); bounds leave sampling-noise room
+    assert 0.85 <= ratio <= 1.2, (
+        f"P({nbits},{es}) binade {s}: analytic {ana:.4e} vs "
+        f"measured {mea:.4e} (ratio {ratio:.3f})")
+
+
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_errmodel_p8_exhaustive_binades(es):
+    """Exhaustive p8 sweep: every binade the 256-code dynamic range spans
+    (plus clamp margins), analytic vs measured through the real codec."""
+    for s in range(-52, 52):
+        _assert_model_matches(8, es, s, 8192)
+
+
+@pytest.mark.parametrize("es", [0, 1, 2, 3])
+def test_errmodel_p16_regime_boundaries(es):
+    """p16 sweep concentrated on regime boundaries (where the significand
+    width steps) plus the clamp edges of each es's dynamic range."""
+    ms = (16 - 2) << es
+    binades = {0, 1, -1, 2, -2, 5, -5}
+    for k in (1, 2, 3, 6, 10, 13):               # regime steps
+        step = k << es
+        binades |= {step - 1, step, step + 1, -step - 1, -step, -step + 1}
+    binades |= {ms - 1, ms, ms + 2, -ms, -ms - 1, -ms + 1}
+    for s in sorted(binades):
+        if abs(s) > 120:
+            continue                              # beyond f32 normal range
+        _assert_model_matches(16, es, s, 16384)
+
+
+def test_errmodel_zero_and_outlier_accounting():
+    st = TensorStats()
+    # half zeros, half sitting exactly at 2^0
+    hist = np.zeros((observe.NBINS,))
+    hist[-observe.BIN_LO] = 50
+    st.n, st.zeros, st.hist = 100.0, 50.0, hist
+    e = errmodel.tensor_sq_rel_err(st, P8_0)
+    assert e == pytest.approx(0.5 * errmodel.expected_sq_rel_err(8, 0, 0))
+    assert errmodel.outlier_mass(st, P8_0) == 0.0
+    st.hist = np.roll(hist, 10)                   # shift mass to 2^10 > maxpos
+    assert errmodel.outlier_mass(st, P8_0) == pytest.approx(0.5)
+
+
+def test_hist_range_sees_p8_es3_saturation():
+    """BIN_HI must sit at/above p8_3's max_scale (48): saturating mass that
+    clamps into an *in-range* bin would be scored as truncated-es error
+    (~4x too small) and vanish from outlier_mass."""
+    from repro.core.types import P8_3
+
+    assert observe.BIN_HI >= P8_3.max_scale
+    st = TensorStats()
+    st.n = 10.0
+    hist = np.zeros((observe.NBINS,))
+    hist[P8_3.max_scale - observe.BIN_LO] = 10    # all mass at 2^48
+    st.hist = hist
+    assert errmodel.outlier_mass(st, P8_3) == pytest.approx(1.0)
+    assert errmodel.tensor_sq_rel_err(st, P8_3) == pytest.approx(
+        errmodel.expected_sq_rel_err(8, 3, P8_3.max_scale))
+
+
+# ---------------------------------------------------------------- observer ----
+
+def test_observer_streams_exact_stats():
+    obs = Observer()
+    arr = jnp.asarray([0.0, 0.75, 3.0, -4.0])
+    with observing(obs):
+        observe.record("site", "weight", arr)
+    jax.effects_barrier()
+    st = obs.get("site", "weight")
+    assert st.n == 4 and st.zeros == 1
+    assert st.abs_max == 4.0
+    assert st.sum_sq == pytest.approx(0.75 ** 2 + 9.0 + 16.0)
+    hist = st.hist
+    assert hist[-1 - observe.BIN_LO] == 1         # 0.75 -> binade -1
+    assert hist[1 - observe.BIN_LO] == 1          # 3.0  -> binade  1
+    assert hist[2 - observe.BIN_LO] == 1          # 4.0  -> binade  2
+    assert hist.sum() == 3                        # zeros excluded
+
+
+def test_observer_streams_from_scan_and_jit():
+    """The hook must work inside traced code (scanned layer stacks)."""
+    obs = Observer()
+    xs = jnp.stack([jnp.full((8,), 2.0 ** i) for i in range(3)])
+
+    def body(c, x):
+        observe.record("scanned", "act", x)
+        return c, x * 1.0
+
+    with observing(obs):
+        jax.jit(lambda xs: jax.lax.scan(body, 0.0, xs))(xs)
+    jax.effects_barrier()
+    st = obs.get("scanned", "act")
+    assert st.n == 24 and st.zeros == 0
+    for i in range(3):
+        assert st.hist[i - observe.BIN_LO] == 8
+
+
+def test_observer_inactive_is_noop():
+    observe.record("nowhere", "act", jnp.ones((4,)))  # must not raise
+    assert not observe.is_active()
+
+
+def test_observer_hist_counts_are_integer_exact():
+    """Counts stream in int32: a float32 scatter-add saturates at 2^24 per
+    binade, silently dropping mass for full-size linears."""
+    obs = Observer()
+    n = (1 << 21) + 3                 # one record, single binade
+    with observing(obs):
+        for _ in range(4):            # 4 * (2^21 + 3) > 2^23, exact in f64
+            observe.record("big", "weight", jnp.ones((n,)))
+    jax.effects_barrier()
+    st = obs.get("big", "weight")
+    assert st.hist[-observe.BIN_LO] == 4 * n
+    assert st.n == 4 * n and st.zeros == 0
+
+
+# ------------------------------------------------------------------ search ----
+
+def _stats_at(s: int, n: float = 1000.0) -> TensorStats:
+    st = TensorStats()
+    st.n = n
+    hist = np.zeros((observe.NBINS,))
+    hist[s - observe.BIN_LO] = n
+    st.hist = hist
+    st.sum_sq = n * 4.0 ** s
+    return st
+
+
+def _toy_plans():
+    from repro.calib.search import SitePlan
+
+    # "attn" carries big activations (important), "mlp" small ones
+    return [
+        SitePlan("attn/wq", 1000, True, _stats_at(-4), act_rms=4.0),
+        SitePlan("mlp/up", 4000, True, _stats_at(-4), act_rms=0.25),
+        SitePlan("moe/w_up", 2000, False, _stats_at(-4), act_rms=1.0),
+    ]
+
+
+def test_resolve_budget_spellings():
+    assert resolve_budget(None, 7000) == 7000
+    assert resolve_budget("1.5x", 7000) == 10500
+    assert resolve_budget("12345", 7000) == 12345
+    assert resolve_budget(9000, 7000) == 9000
+
+
+def test_search_respects_floor_and_budget():
+    plans = _toy_plans()
+    assert p8_floor_bytes(plans) == 7000
+    with pytest.raises(ValueError, match="below the p8 floor"):
+        search(plans, 6999)
+
+    choice, report = search(plans, None)          # floor: everything p8
+    assert all(f.nbits == 8 for f in choice.values())
+    assert report["weight_bytes"] == 7000
+
+    choice, report = search(plans, "2x")          # room for p16 everywhere
+    assert all(f.nbits == 16 for f in choice.values())
+    assert report["weight_bytes"] == 14000
+
+
+def test_search_upgrades_best_error_per_byte_first():
+    plans = _toy_plans()
+    # room to upgrade only the smallest sites: the high-importance small
+    # "attn/wq" (gain/byte beats the big low-importance "mlp/up")
+    choice, report = search(plans, 7000 + 1000 + 2000)
+    assert choice["attn/wq"].nbits == 16
+    assert choice["moe/w_up"].nbits == 16
+    assert choice["mlp/up"].nbits == 8
+    # monotone: more budget never predicts worse error
+    scores = [search(plans, b)[1]["predicted_err_score"]
+              for b in (7000, 9000, 11000, 14000)]
+    assert scores == sorted(scores, reverse=True)
+
+
+def test_emit_policy_packed_and_pin():
+    plans = _toy_plans()
+    choice, _ = search(plans, None)
+    pol = emit_policy(plans, choice, base=TransPolicy(), name="t")
+    attn = pol.policy_for("blocks/attn/wq")       # tree-path spelling
+    assert attn.weights.nbits == 8 and attn.pack_weights
+    moe = pol.policy_for("moe/w_up")              # pack_ok=False site
+    assert moe.weights.nbits == 8 and not moe.pack_weights
+    # the catch-all pins unobserved layers to the base (float) format
+    assert pol.policy_for("never/observed").weights is None
+
+
+# ------------------------------------------------------------- end to end ----
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("phi3-mini-3.8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+def test_calibrate_model_end_to_end(small_model, tmp_path):
+    cfg, model, params = small_model
+    rng = np.random.default_rng(0)
+
+    def batch():
+        return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32))),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)))}
+
+    base = TransPolicy()
+    pol, report = calibrate_model(
+        lambda b: model.loss(params, b, base)[0], [batch(), batch()],
+        params, base=base, name="t")
+    # every linear the quantizer walks got a calibrated rule (incl. lm_head)
+    sites = {s["path"] for s in report["sites"]}
+    assert {"attn/wq", "mlp/gate", "mlp/down", "lm_head"} <= sites
+    # floor budget -> p8 everywhere, per-site es chosen from the data
+    assert all(s["fmt"].startswith("p8_") for s in report["sites"])
+    assert any(not s["fmt"].endswith("_0") for s in report["sites"]), \
+        "calibration should move es off the uniform-0 default somewhere"
+
+    # measured acceptance at equal bytes: calibrated beats the p8 preset
+    eval_batch = batch()
+    ref = model.forward(params, eval_batch, base)
+
+    def rel_err(p):
+        h = model.forward(params, eval_batch, p)
+        return float(jnp.sqrt(jnp.mean((h - ref) ** 2) / jnp.mean(ref ** 2)))
+
+    preset = PRECISION_PRESETS["p8-weights"].with_base(base)
+    assert rel_err(pol) < rel_err(preset)
+
+    # artifact round trip: reloaded policy quantizes bit-identically
+    path = tmp_path / "cal.json"
+    save_artifact(str(path), pol, report)
+    loaded = get_precision_policy("@" + str(path))
+    assert _tree_equal(quantize_params(params, pol),
+                       quantize_params(params, loaded))
+    meta = json.loads(path.read_text())["meta"]
+    assert meta["n_sites"] == len(sites)
+
+
+def test_observer_does_not_perturb_forward(small_model):
+    cfg, model, params = small_model
+    b = {"tokens": jnp.asarray(np.arange(64).reshape(2, 32) % cfg.vocab)}
+    pol = TransPolicy.from_names(weights="p8_0")
+    ref = model.forward(params, b, pol)
+    with observing(Observer()):
+        seen = model.forward(params, b, pol)
+    assert _tree_equal(ref, seen)
+
+
+def test_hillclimb_calibrated_variant_builds():
+    from repro.launch.hillclimb import VARIANTS, _calibrated_policy
+
+    assert "prec_calibrated" in VARIANTS
+    pol = _calibrated_policy(get_arch("phi3-mini-3.8b"))
+    assert isinstance(pol, PrecisionPolicy)
+    assert pol.compute_dtype == "bf16"
+    assert pol.policy_for("blocks/mlp/up").weights is not None
+
+
+def test_serve_calibrate_cli(tmp_path, capsys):
+    from repro.launch import serve
+
+    out = tmp_path / "cal.json"
+    serve.main(["--arch", "phi3-mini-3.8b", "--reduced", "--batch", "2",
+                "--prompt-len", "8", "--gen", "4", "--policy", "p8-serve",
+                "--calibrate", "2", "--policy-out", str(out),
+                "--quantize-weights"])
+    lines = [json.loads(ln) for ln in capsys.readouterr().out.splitlines()
+             if ln.startswith("{")]
+    cal = next(ln["calibration"] for ln in lines if "calibration" in ln)
+    assert cal["n_sites"] >= 4
+    assert os.path.exists(out)
+    # the artifact reloads as a serving policy
+    pol = get_precision_policy("@" + str(out))
+    assert pol.policy_for("blocks/mlp/up").weights.nbits == 8
+    final = lines[-1]
+    assert "weight_bytes_policy" in final and "decode_tok_per_s" in final
