@@ -33,6 +33,7 @@ from repro.configs import get_arch
 from repro.core.pcsr import TransPolicy
 from repro.launch.engine import ContinuousBatchingEngine, poisson_requests
 from repro.launch.serve import kv_cache_bytes
+from repro.obs.metrics import percentile_ms
 from repro.models.registry import build_model
 
 
@@ -175,8 +176,8 @@ def run(smoke: bool = False) -> None:
         done = list(eng.completions)
         n_tok = sum(len(c.tokens) for c in done)
         per_tok = [t for c in done for t in c.per_token_s()]
-        p50 = float(np.percentile(per_tok, 50)) * 1e3
-        p95 = float(np.percentile(per_tok, 95)) * 1e3
+        p50 = percentile_ms(per_tok, 50)
+        p95 = percentile_ms(per_tok, 95)
         emit(f"{mode}_batching", dt / max(n_tok, 1) * 1e6,
              f"tok_s={n_tok / dt:.1f} p50_ms={p50:.2f} p95_ms={p95:.2f} "
              f"requests={len(done)} rate={rate}")

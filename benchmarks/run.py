@@ -40,6 +40,7 @@ BENCHES = {
     "mixed": "benchmarks.bench_mixed_gemm",            # packed/mixed precision
     "serving": "benchmarks.bench_serving",             # engine + attn dispatch
     "calibration": "benchmarks.bench_calibration",     # dynamic-es calibration
+    "obs_overhead": "benchmarks.bench_obs_overhead",   # §12 observability cost
 }
 
 

@@ -17,13 +17,20 @@ activation tensors to the observer:
                      the error integral).
 
 Nothing else crosses the device->host boundary: the per-tensor reduction is
-one 2-float head plus an int32 ``NBINS`` histogram shipped through
-``jax.debug.callback``, so the hooks work identically inside ``lax.scan``
-stacks and ``jax.checkpoint`` bodies, and no activation trace is ever
-materialized.  (Counts ride in int32 — a float32 scatter-add saturates at
-2^24 per binade, which one full-size linear exceeds.)  Call sites check
-``is_active()`` at trace time — when no observer is installed the hook is
-dead code and costs nothing.
+one 2-float head plus an int32 ``NBINS + 1`` count vector (the extra slot is
+the nonfinite count — the serving numerics probes' NaR/inf witness, free for
+calibration) shipped through ``jax.debug.callback``, so the hooks work
+identically inside ``lax.scan`` stacks and ``jax.checkpoint`` bodies, and no
+activation trace is ever materialized.  (Counts ride in int32 — a float32
+scatter-add saturates at 2^24 per binade, which one full-size linear
+exceeds.)  Call sites check ``is_active()`` at trace time — when no observer
+is installed the hook is dead code and costs nothing.
+
+This reduction core is shared by two consumers: calibration
+(``calib.search`` — this module's original client) and the serving-plane
+numerical-health probes (``repro.obs.numerics``), which install the same
+``Observer`` under a cadenced decode executable and read saturation /
+underflow / drift off the same histograms (DESIGN.md §12).
 
 Stats are keyed by ``(path, kind)`` with ``kind in ("weight", "act")``.  All
 depth-layers of a scanned stack share one call-site path, so their statistics
@@ -63,19 +70,29 @@ class TensorStats:
     zeros: float = 0.0             # exact zeros
     abs_max: float = 0.0
     sum_sq: float = 0.0
+    nonfinite: float = 0.0         # NaN/inf elements (posit NaR witness)
     hist: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros((NBINS,), np.float64))
     size: int = 0                  # per-record element count (static shape)
     shape: Tuple[int, ...] = ()    # shape of one recorded tensor
 
     def merge_vec(self, size: int, shape: Tuple[int, ...],
-                  head: np.ndarray, hist: np.ndarray) -> None:
-        """Fold one streamed record: head [abs_max, sum_sq], int32 hist."""
+                  head: np.ndarray, counts: np.ndarray) -> None:
+        """Fold one streamed record: head [abs_max, sum_sq], int32 counts.
+
+        ``counts`` is the NBINS-binade histogram with one trailing slot for
+        the nonfinite count (a bare NBINS histogram — old records — means
+        nonfinite 0).
+        """
+        counts = np.asarray(counts, np.float64)
         self.n += float(size)
         self.abs_max = max(self.abs_max, float(head[0]))
         self.sum_sq += float(head[1])
-        self.hist += np.asarray(hist, np.float64)
-        self.zeros = self.n - float(self.hist.sum())
+        if counts.shape[0] == NBINS + 1:
+            self.nonfinite += float(counts[-1])
+            counts = counts[:-1]
+        self.hist += counts
+        self.zeros = self.n - float(self.hist.sum()) - self.nonfinite
         self.size = size
         self.shape = tuple(shape)
 
@@ -92,12 +109,41 @@ class TensorStats:
     def nonzero_frac(self) -> float:
         return 1.0 - self.zeros / self.n if self.n else 0.0
 
+    def hist_json(self) -> dict:
+        """Compact JSON form of the binade histogram (artifact schema §11/§12):
+        leading/trailing zero bins trimmed, ``bin_lo`` anchors the rest.
+        The drift detector (``repro.obs.numerics``) loads these back as the
+        calibration-time baseline distribution."""
+        nz = np.flatnonzero(self.hist)
+        if nz.size == 0:
+            return {"bin_lo": 0, "counts": [], "n": self.n}
+        lo, hi = int(nz[0]), int(nz[-1])
+        return {"bin_lo": BIN_LO + lo,
+                "counts": [int(c) for c in self.hist[lo:hi + 1]],
+                "n": self.n}
+
+    @staticmethod
+    def hist_from_json(d: dict) -> "TensorStats":
+        """Inverse of ``hist_json``: a TensorStats holding just the
+        distribution (n + hist) — enough for drift scoring."""
+        st = TensorStats()
+        st.n = float(d.get("n", 0.0))
+        for i, c in enumerate(d.get("counts", ())):
+            b = int(d["bin_lo"]) + i - BIN_LO
+            if 0 <= b < NBINS:
+                st.hist[b] = float(c)
+        st.zeros = st.n - float(st.hist.sum())
+        return st
+
 
 def _stat_vec(arr: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Device-side reduction: ([abs_max, sum_sq], int32 hist[NBINS]).
+    """Device-side reduction: ([abs_max, sum_sq], int32 counts[NBINS + 1]).
 
-    Counts accumulate in int32: a float32 scatter-add silently saturates at
-    2^24 per binade, which a single full-size linear (~1e8 elements) exceeds.
+    ``counts[:NBINS]`` is the binade histogram, ``counts[-1]`` the nonfinite
+    count (NaN/inf — what would encode to posit NaR; the serving probes'
+    health witness).  Counts accumulate in int32: a float32 scatter-add
+    silently saturates at 2^24 per binade, which a single full-size linear
+    (~1e8 elements) exceeds.
     """
     x = jnp.abs(arr.astype(jnp.float32)).reshape(-1)
     finite = jnp.isfinite(x)
@@ -106,17 +152,26 @@ def _stat_vec(arr: jax.Array) -> Tuple[jax.Array, jax.Array]:
     # frexp gives x = m * 2^e with m in [0.5, 1): floor(log2|x|) == e - 1,
     # exactly (no float-log rounding at binade boundaries)
     _, e = jnp.frexp(x)
-    idx = jnp.clip(e - 1, BIN_LO, BIN_HI) - BIN_LO
-    hist = jnp.zeros((NBINS,), jnp.int32).at[idx].add(
-        nonzero.astype(jnp.int32))
+    idx = jnp.where(finite, jnp.clip(e - 1, BIN_LO, BIN_HI) - BIN_LO, NBINS)
+    counts = jnp.zeros((NBINS + 1,), jnp.int32).at[idx].add(
+        (nonzero | ~finite).astype(jnp.int32))
     head = jnp.stack([jnp.max(x, initial=0.0), jnp.sum(x * x)])
-    return head, hist
+    return head, counts
 
 
 class Observer:
-    """Accumulates ``TensorStats`` per ``(path, kind)`` key on the host."""
+    """Accumulates ``TensorStats`` per ``(path, kind)`` key on the host.
 
-    def __init__(self):
+    ``kinds`` restricts which tensor kinds stream: calibration wants both
+    (``KINDS``, the default); the serving numerics probes pass
+    ``("act",)`` — weights are static during serving, and because the filter
+    applies at *trace* time, the skipped kinds' reductions and callbacks
+    never enter the probed executable (halving its per-step cost).
+    """
+
+    def __init__(self, kinds: Tuple[str, ...] = KINDS):
+        assert all(k in KINDS for k in kinds), kinds
+        self.kinds = tuple(kinds)
         self.stats: Dict[Tuple[str, str], TensorStats] = {}
 
     # -- host side -----------------------------------------------------------
@@ -130,6 +185,8 @@ class Observer:
     # -- trace side ----------------------------------------------------------
     def record(self, path: str, kind: str, arr: jax.Array) -> None:
         assert kind in KINDS, kind
+        if kind not in self.kinds:
+            return
         head, hist = _stat_vec(arr)
         jax.debug.callback(
             functools.partial(self._accum, (path, kind),

@@ -50,6 +50,8 @@ class SitePlan:
     pack_ok: bool                 # plain "w" linears with even d_in everywhere
     w_stats: TensorStats
     act_rms: float                # importance weight (1.0 when unobserved)
+    act_stats: Optional[TensorStats] = None  # full act distribution (drift
+    #                               baseline persisted in the artifact, §12)
 
     def score(self, fmt: PositFmt) -> float:
         return (self.n_weights * self.act_rms ** 2
@@ -112,7 +114,8 @@ def build_site_plans(params, observer: Observer) -> List[SitePlan]:
         plans.append(SitePlan(
             path=site, n_weights=a["n"], pack_ok=a["pack_ok"],
             w_stats=observer.get(site, "weight"),
-            act_rms=act.rms if act is not None and act.rms > 0 else 1.0))
+            act_rms=act.rms if act is not None and act.rms > 0 else 1.0,
+            act_stats=act))
     return plans
 
 
@@ -188,6 +191,10 @@ def search(plans: List[SitePlan], byte_budget=None
             "outlier_mass": errmodel.outlier_mass(p.w_stats, choice[p.path]),
             "predicted_sq_rel_err": errmodel.tensor_sq_rel_err(
                 p.w_stats, choice[p.path]),
+            # calibration-time activation binade histogram: the drift
+            # baseline repro.obs.numerics compares live traffic against
+            **({"act_hist": p.act_stats.hist_json()}
+               if p.act_stats is not None else {}),
         } for p in plans],
     }
     return choice, report

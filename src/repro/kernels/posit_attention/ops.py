@@ -107,22 +107,30 @@ def posit_decode_attention_tiled(
 def decode_attention(q, k_codes, v_codes, lengths, es, *, kv_bits,
                      scale=None, impl="auto", interpret=None, block_s=512,
                      rolling=False):
-    """Dispatch one decode-attention step; see module docstring for impls."""
+    """Dispatch one decode-attention step; see module docstring for impls.
+
+    The ``obs.trace.named_scope`` tag makes every decode-attention dispatch
+    show up under one name in ``jax.profiler`` device traces, lined up with
+    the engine's host-side request spans (DESIGN.md §12).
+    """
+    from repro.obs.trace import named_scope
+
     if rolling:
         # circular window buffer: every slot written so far is valid
         lengths = jnp.minimum(jnp.asarray(lengths, jnp.int32),
                               k_codes.shape[2])
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "tiled"
-    if impl == "pallas":
-        if interpret is None:
-            interpret = not _on_tpu()
-        return posit_decode_attention(
-            q, k_codes, v_codes, lengths, es,
-            kv_bits=kv_bits, scale=scale, block_s=block_s, interpret=interpret)
-    if impl == "tiled":
-        return posit_decode_attention_tiled(
-            q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale,
-            block_s=min(block_s, 256))
-    return posit_decode_attention_ref(
-        q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale)
+    with named_scope(f"repro.decode_attention.{impl}"):
+        if impl == "pallas":
+            if interpret is None:
+                interpret = not _on_tpu()
+            return posit_decode_attention(
+                q, k_codes, v_codes, lengths, es, kv_bits=kv_bits,
+                scale=scale, block_s=block_s, interpret=interpret)
+        if impl == "tiled":
+            return posit_decode_attention_tiled(
+                q, k_codes, v_codes, lengths, es, kv_bits=kv_bits,
+                scale=scale, block_s=min(block_s, 256))
+        return posit_decode_attention_ref(
+            q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale)

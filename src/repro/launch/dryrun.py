@@ -200,12 +200,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "skipped": "no sub-quadratic path (DESIGN.md §6)"}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = lower_cell(cfg, shape, mesh, policy=policy, grad_sync=grad_sync)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     print(mem)

@@ -19,6 +19,18 @@ sampling with a per-engine PRNG key.
 Timing note: prefill compiles once per distinct prompt length — drivers that
 care about compile time should draw prompt lengths from a small set (the
 benchmark uses a handful of buckets).
+
+Observability (DESIGN.md §12): pass ``metrics=`` (a
+``repro.obs.MetricsRegistry``), ``tracer=`` (a ``TraceRecorder``) and/or
+``numerics=`` (a ``NumericsWatcher``) and the engine feeds them per step and
+per request — slot occupancy, admission/eviction counters by reason,
+queue/TTFT/per-token latency histograms, decode-step durations, KV-byte
+utilization, a rolling tokens/s window, Chrome-trace request spans, and
+cadenced numerical-health probes.  All three default to ``None`` and cost
+nothing when absent.  The numerics probe works by compiling a *second*
+decode executable traced under the watcher's observer (``jax.debug.callback``
+hooks bake in at trace time, so the ordinary decode step stays callback-free)
+and routing every ``numerics.every``-th step through it.
 """
 from __future__ import annotations
 
@@ -29,6 +41,12 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.trace import annotate
+
+#: Drift checks run every this-many probed steps (each check is a few numpy
+#: ops per site on (NBINS,) vectors — cheap, but not per-step cheap).
+_CHECK_EVERY_PROBES = 16
 
 
 @dataclasses.dataclass
@@ -54,6 +72,7 @@ class Completion:
     admitted_time: float
     finished_time: float
     token_times: list               # absolute emission time of each token
+    finish_reason: str = ""         # eos | max_new | cache_full | cancel
 
     @property
     def queue_s(self) -> float:
@@ -134,7 +153,8 @@ class ContinuousBatchingEngine:
     def __init__(self, model, params, policy, *, max_slots: int, S_max: int,
                  eos_id: Optional[int] = None, temperature: float = 0.0,
                  top_k: int = 0, seed: int = 0,
-                 prefill_kwargs: Optional[Callable] = None):
+                 prefill_kwargs: Optional[Callable] = None,
+                 metrics=None, tracer=None, numerics=None):
         if model.prefill is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no prefill entry point")
@@ -144,6 +164,12 @@ class ContinuousBatchingEngine:
         # per-arg callable for families needing extra prefill inputs (vlm
         # patch embeds); receives the Request, returns a kwargs dict
         self._prefill_kwargs = prefill_kwargs or (lambda req: {})
+        # observability sinks (all optional; None = feature off, zero cost)
+        self.metrics, self.tracer, self.numerics = metrics, tracer, numerics
+        if tracer is not None:
+            tracer.label_track(0, "engine")
+            for s in range(max_slots):
+                tracer.label_track(s + 1, f"slot {s}")
         self._init_state(seed)
 
         # the cache is donated: decode updates the KV buffers in place
@@ -153,6 +179,15 @@ class ContinuousBatchingEngine:
         self._decode = jax.jit(
             lambda p, t, c: model.decode_step(p, t, c, policy),
             donate_argnums=(2,))
+        # the numerics-probed twin: identical computation, but *traced* under
+        # the watcher's observer so the per-site debug-callback reductions
+        # bake into this executable only — the plain step stays probe-free
+        # and the probe cost amortizes over the cadence (DESIGN.md §12)
+        self._decode_probed = None
+        if numerics is not None:
+            self._decode_probed = jax.jit(
+                lambda p, t, c: model.decode_step(p, t, c, policy),
+                donate_argnums=(2,))
         # the pre-write cache is donated too: admission must not copy the
         # whole S_max cache to update one row
         self._write = jax.jit(_write_slot, donate_argnums=(0,))
@@ -176,6 +211,32 @@ class ContinuousBatchingEngine:
         self.queue: list = []          # pending Requests (FIFO)
         self.completions: list = []
         self.steps = 0                 # decode steps executed
+        # rolling decode-rate window (created lazily; survives _init_state
+        # only via the registry's own histograms — the window restarts)
+        self._tok_rate = None
+        if self.metrics is not None:
+            from repro.obs.metrics import RollingRate
+            self._tok_rate = RollingRate(window_s=10.0)
+            # pre-resolved instrument handles: _observe_step runs per decode
+            # step, so it must not pay registry lookups / bucket construction
+            m = self.metrics
+            self._m_steps = m.counter("decode_steps", "decode steps executed")
+            self._m_tokens = m.counter("tokens_emitted",
+                                       "sampled tokens (prefill + decode)")
+            self._m_step_s = m.histogram("decode_step_s",
+                                         "wall time of one grid step")
+            self._m_slots = m.histogram(
+                "slots_active", "live slots per decode step",
+                buckets=tuple(float(b) for b in range(1, self.max_slots + 1)))
+            self._m_occ = m.gauge("slot_occupancy", "live slots / max_slots")
+            self._m_kv = m.gauge("kv_utilization",
+                                 "occupied KV rows / allocated rows")
+            self._m_queue = m.gauge("queue_depth", "requests waiting")
+            self._m_rate = m.gauge("decode_tok_per_s_window",
+                                   "tokens/s over the rolling 10s window")
+            self._m_recal = m.gauge(
+                "numerics_recalibrate",
+                "1 when activation drift exceeded threshold")
 
     def reset(self, seed: int = 0) -> None:
         """Clear all serving state but keep the compiled decode/write programs.
@@ -215,8 +276,9 @@ class ContinuousBatchingEngine:
                     f"request {req.rid}: prompt {req.prompt_len} + "
                     f"max_new {req.max_new_tokens} exceeds S_max {self.S_max}")
             tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, one_cache = self._prefill(
-                self.params, tokens, self._prefill_kwargs(req))
+            with annotate("repro.prefill"):
+                logits, one_cache = self._prefill(
+                    self.params, tokens, self._prefill_kwargs(req))
             # true cache occupancy after prefill (vlm rows include the patch
             # prefix; recurrent families report their prompt length)
             row_len = int(one_cache["lens"][0])
@@ -244,6 +306,31 @@ class ContinuousBatchingEngine:
             self.slot_admitted[slot] = t_admit
             self._sync_lens()
             admitted += 1
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "requests_admitted",
+                    "requests prefilled into a slot").inc()
+                self.metrics.counter("tokens_emitted",
+                                     "sampled tokens (prefill + decode)").inc()
+                self.metrics.histogram(
+                    "queue_s", "arrival -> admission wait").observe(
+                        t_admit - req.arrival_time)
+                self.metrics.histogram(
+                    "prefill_s", "admission -> first token").observe(
+                        t_first - t_admit)
+                self.metrics.histogram(
+                    "ttft_s", "arrival -> first token").observe(
+                        t_first - req.arrival_time)
+                if self._tok_rate is not None:
+                    self._tok_rate.add(t_first)
+            if self.tracer is not None:
+                tid = slot + 1
+                self.tracer.span(f"queued rid={req.rid}", req.arrival_time,
+                                 t_admit, tid=tid,
+                                 args={"rid": req.rid,
+                                       "prompt_len": req.prompt_len})
+                self.tracer.span(f"prefill rid={req.rid}", t_admit, t_first,
+                                 tid=tid, args={"rid": req.rid})
             self._maybe_finish(slot, tok, t_first)  # max_new_tokens == 1
         return admitted
 
@@ -266,8 +353,20 @@ class ContinuousBatchingEngine:
         """One decode step over the whole slot grid; returns #tokens emitted."""
         if not self.active.any():
             return 0
-        logits, self.cache = self._decode(self.params, self.last_token,
-                                          self.cache)
+        t0 = time.perf_counter()
+        probed = (self.numerics is not None
+                  and self.numerics.should_probe(self.steps))
+        if probed:
+            # trace-time observer installation: the first probed call bakes
+            # the per-site reduction callbacks into _decode_probed only
+            with self.numerics.observing(), annotate("repro.decode_probed"):
+                logits, self.cache = self._decode_probed(
+                    self.params, self.last_token, self.cache)
+            self.numerics.note_probe()
+        else:
+            with annotate("repro.decode_step"):
+                logits, self.cache = self._decode(self.params, self.last_token,
+                                                  self.cache)
         self.steps += 1
         toks = self._next_token(logits)
         self.lens += 1          # mirror decode_step's per-row increment
@@ -284,24 +383,103 @@ class ContinuousBatchingEngine:
             emitted += 1
             self._maybe_finish(slot, tok, now)
         self.last_token = jnp.asarray(last_np)
+        self._observe_step(now, t0, emitted, probed)
         return emitted
+
+    def _observe_step(self, now: float, t0: float, emitted: int,
+                      probed: bool) -> None:
+        """Per-step metrics/trace feed (no device syncs beyond what step()
+        already does — ``np.asarray(toks)`` blocked on the decode)."""
+        if self.numerics is not None and probed \
+                and self.numerics.probes % _CHECK_EVERY_PROBES == 0:
+            self.numerics.check()
+        if self.metrics is not None:
+            dt = time.perf_counter() - t0
+            n_active = int(self.active.sum())
+            self._m_steps.inc()
+            self._m_tokens.inc(emitted)
+            self._m_step_s.observe(dt)
+            self._m_slots.observe(n_active)
+            self._m_occ.set(n_active / self.max_slots)
+            self._m_kv.set(int(self.lens.sum())
+                           / (self.max_slots * self.S_max))
+            self._m_queue.set(len(self.queue))
+            self._tok_rate.add(now, emitted)
+            self._m_rate.set(self._tok_rate.rate(now))
+            if self.numerics is not None:
+                self._m_recal.set(float(self.numerics.recalibrate))
+        if self.tracer is not None:
+            self.tracer.span("decode_step", t0, time.perf_counter(),
+                             tid=0, args={"emitted": emitted,
+                                          "probed": probed})
 
     def _maybe_finish(self, slot: int, tok: int, now: float) -> bool:
         req = self.slot_req[slot]
-        done = len(self.slot_tokens[slot]) >= req.max_new_tokens
-        done |= self.eos_id is not None and tok == self.eos_id
-        done |= self.lens[slot] + 1 >= self.S_max  # no room for another write
-        if done:
-            self.completions.append(Completion(
-                rid=req.rid, prompt_len=req.prompt_len,
-                tokens=list(self.slot_tokens[slot]),
-                arrival_time=req.arrival_time,
-                admitted_time=float(self.slot_admitted[slot]),
-                finished_time=now,
-                token_times=list(self.slot_token_times[slot])))
-            self.active[slot] = False
-            self.slot_req[slot] = None
-        return done
+        # precedence: EOS is the semantic finish; max_new the requested cap;
+        # cache_full the forced eviction (only reachable when neither hit)
+        reason = ""
+        if self.eos_id is not None and tok == self.eos_id:
+            reason = "eos"
+        elif len(self.slot_tokens[slot]) >= req.max_new_tokens:
+            reason = "max_new"
+        elif self.lens[slot] + 1 >= self.S_max:  # no room for another write
+            reason = "cache_full"
+        if reason:
+            self._evict(slot, now, reason)
+        return bool(reason)
+
+    def _evict(self, slot: int, now: float, reason: str) -> None:
+        """Retire ``slot``: record the Completion, free the slot, feed sinks."""
+        req = self.slot_req[slot]
+        comp = Completion(
+            rid=req.rid, prompt_len=req.prompt_len,
+            tokens=list(self.slot_tokens[slot]),
+            arrival_time=req.arrival_time,
+            admitted_time=float(self.slot_admitted[slot]),
+            finished_time=now,
+            token_times=list(self.slot_token_times[slot]),
+            finish_reason=reason)
+        self.completions.append(comp)
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("requests_finished",
+                      "requests retired, by reason").inc(label=reason)
+            m.histogram("request_s", "admission -> finish").observe(
+                now - comp.admitted_time)
+            h = m.histogram("inter_token_s", "time between consecutive tokens")
+            for dt in comp.per_token_s()[1:]:   # [0] is prefill, not decode
+                h.observe(dt)
+        if self.tracer is not None:
+            tid = slot + 1
+            if comp.token_times:
+                self.tracer.span(f"decode rid={req.rid}", comp.token_times[0],
+                                 now, tid=tid,
+                                 args={"rid": req.rid,
+                                       "tokens": len(comp.tokens),
+                                       "finish_reason": reason})
+            self.tracer.instant(f"evict rid={req.rid} ({reason})", now,
+                                tid=tid, args={"rid": req.rid,
+                                               "reason": reason})
+
+    def cancel(self, rid: int, now: float = 0.0) -> bool:
+        """Cancel a request by id — mid-flight (slot evicted, partial tokens
+        recorded as a Completion with ``finish_reason="cancel"``) or still
+        queued (dropped, no Completion).  Returns True if anything matched."""
+        for slot in range(self.max_slots):
+            req = self.slot_req[slot]
+            if self.active[slot] and req is not None and req.rid == rid:
+                self._evict(slot, now, "cancel")
+                return True
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                if self.metrics is not None:
+                    self.metrics.counter("requests_cancelled_queued",
+                                         "cancelled before admission").inc()
+                return True
+        return False
 
     # ------------------------------------------------------------------ run ---
     def run(self, requests: list, *, clock: Optional[Callable] = None) -> list:

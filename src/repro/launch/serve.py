@@ -37,6 +37,22 @@ then serves under.  ``--policy-out cal.json`` saves the artifact for
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
         --reduced --calibrate 4 --policy-out cal.json --quantize-weights
+
+Observability (DESIGN.md §12): ``--metrics-out m.json`` writes the engine's
+metrics snapshot (plus a ``m.prom`` Prometheus text exposition alongside),
+``--trace-out t.json`` a Chrome-trace/Perfetto request timeline, and
+``--numerics-watch N`` probes every N-th decode step for posit saturation /
+underflow / NaR rates and calibration drift (baselines come from a
+``--precision-policy @cal.json`` artifact or a fresh ``--calibrate`` run)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-34b --reduced \
+        --continuous --precision-policy @cal.json --numerics-watch 8 \
+        --metrics-out metrics.json --trace-out trace.json
+
+Every stdout line is one JSON object tagged with a ``"kind"`` key
+(``serve/prefill``, ``serve/calibration``, ``serve/policy-out``,
+``serve/numerics``, ``serve/report``) so consumers filter by kind instead of
+guessing by field names.
 """
 from __future__ import annotations
 
@@ -57,6 +73,7 @@ from repro.launch.engine import (ContinuousBatchingEngine, Request,
 from repro.launch.train import _parse_policy
 from repro.models.layers import policy_weight_bytes, quantize_params
 from repro.models.registry import build_model
+from repro.obs.metrics import percentile_ms
 
 _KV_CONTAINERS = ("kv", "shared_kv", "self", "cross")
 
@@ -84,10 +101,6 @@ def kv_cache_bytes(cache) -> int:
     return total
 
 
-def _percentile_ms(xs, q) -> float:
-    return round(float(np.percentile(np.asarray(xs), q)) * 1e3, 2) if xs else 0.0
-
-
 def _serve_static(args, cfg, model, params, policy, rng, S_max):
     tokens = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
     decode = jax.jit(lambda p, t, c: model.decode_step(p, t, c, policy))
@@ -97,28 +110,31 @@ def _serve_static(args, cfg, model, params, policy, rng, S_max):
         batch = {"frames": jnp.asarray(rng.normal(
             0, 1, (args.batch, cfg.enc_frames, cfg.d_model)).astype(np.float32)),
             "tokens": tokens}
-        t0 = time.time()
+        t0 = time.perf_counter()
         cache = model.init_cache(params, batch, policy, S_max)
         # teacher-force the full decoder prompt: every prompt token passes
         # through decode_step (the old path fed tokens[:, 0] and silently
         # dropped the rest of the prompt).  The first step pays jit compile;
         # time it apart so prefill_s stays a throughput number.
-        tc = time.time()
+        tc = time.perf_counter()
         logits, cache = decode(params, tokens[:, 0], cache)
         jax.block_until_ready(logits)
-        compile_s = time.time() - tc
+        compile_s = time.perf_counter() - tc
         for i in range(1, args.prompt_len):
             logits, cache = decode(params, tokens[:, i], cache)
         jax.block_until_ready(logits)
-        print(json.dumps({"prefill_s": round(time.time() - t0 - compile_s, 3)}))
+        print(json.dumps({
+            "kind": "serve/prefill",
+            "prefill_s": round(time.perf_counter() - t0 - compile_s, 3)}))
     else:
         kw = {}
         if cfg.family == "vlm":
             kw["patch_embeds"] = jnp.asarray(rng.normal(
                 0, 1, (args.batch, cfg.n_patches, cfg.d_model)).astype(np.float32))
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = model.prefill(params, tokens, policy, S_max=S_max, **kw)
-        print(json.dumps({"prefill_s": round(time.time() - t0, 3)}))
+        print(json.dumps({"kind": "serve/prefill",
+                          "prefill_s": round(time.perf_counter() - t0, 3)}))
 
     tok = jnp.argmax(logits, -1)
     out_tokens = [tok]
@@ -127,22 +143,22 @@ def _serve_static(args, cfg, model, params, policy, rng, S_max):
         # warm up one step before the throughput clock: the first decode call
         # pays jit compile, which used to be silently folded into tokens/s
         # (whisper is already warm from teacher-forcing the prompt)
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = decode(params, tok, cache)
         tok = jnp.argmax(logits, -1)
         jax.block_until_ready(tok)
-        compile_s = time.time() - t0
+        compile_s = time.perf_counter() - t0
         out_tokens.append(tok)
         timed_steps -= 1
 
     timed_steps = max(timed_steps, 0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(timed_steps):
         logits, cache = decode(params, tok, cache)
         tok = jnp.argmax(logits, -1)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
-    dt = max(time.time() - t0, 1e-9)
+    dt = max(time.perf_counter() - t0, 1e-9)
 
     return {
         "mode": "static",
@@ -153,7 +169,31 @@ def _serve_static(args, cfg, model, params, policy, rng, S_max):
     }, cache
 
 
-def _serve_continuous(args, cfg, model, params, policy, rng, S_max):
+def _build_observability(args, policy, drift_meta):
+    """(metrics, tracer, numerics) sinks from the CLI flags (None = off).
+
+    Drift baselines come from ``drift_meta`` — the calibration artifact dict
+    (``--precision-policy @cal.json``) or the fresh ``--calibrate`` search
+    report — when it carries per-site ``act_hist`` blocks; without them the
+    watcher still reports saturation/underflow/NaR, just no drift scores.
+    """
+    metrics = tracer = numerics = None
+    if args.metrics_out:
+        from repro.obs.metrics import MetricsRegistry
+        metrics = MetricsRegistry()
+    if args.trace_out:
+        from repro.obs.trace import TraceRecorder
+        tracer = TraceRecorder()
+    if args.numerics_watch:
+        from repro.obs.numerics import NumericsWatcher, load_baselines
+        baselines = load_baselines(drift_meta) if drift_meta else {}
+        numerics = NumericsWatcher(policy=policy, baselines=baselines,
+                                   every=args.numerics_watch)
+    return metrics, tracer, numerics
+
+
+def _serve_continuous(args, cfg, model, params, policy, rng, S_max,
+                      obs=(None, None, None)):
     if model.prefill is None:
         sys.exit(f"--continuous needs a prefill entry point "
                  f"(family {cfg.family!r} has none)")
@@ -165,27 +205,33 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max):
             0, 1, (1, cfg.n_patches, cfg.d_model)).astype(np.float32))
         prefill_kwargs = lambda req: {"patch_embeds": patches}  # noqa: E731
 
+    metrics, tracer, numerics = obs
     eng = ContinuousBatchingEngine(
         model, params, policy, max_slots=max_slots, S_max=S_max,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
-        prefill_kwargs=prefill_kwargs)
+        prefill_kwargs=prefill_kwargs,
+        metrics=metrics, tracer=tracer, numerics=numerics)
 
-    # warm the executables (prefill at the prompt length + the grid decode)
+    # warm the executables (prefill at the prompt length + the grid decode;
+    # 2 steps so the numerics-probed twin AND the plain decode both compile)
     # before the serving clock starts; report compile time separately
-    t0 = time.time()
+    t0 = time.perf_counter()
     eng.submit(Request(rid=-1, prompt=np.zeros((args.prompt_len,), np.int32),
-                       max_new_tokens=min(2, args.gen)))
+                       max_new_tokens=min(3, args.gen)))
     eng.admit()
     eng.step()
+    eng.step()
     eng.reset(seed=args.seed)
-    compile_s = time.time() - t0
+    if numerics is not None:
+        numerics.rebase()   # drop the warmup probe from the drift window
+    compile_s = time.perf_counter() - t0
 
     reqs = poisson_requests(
         n_req, arrival_rate=args.arrival_rate, prompt_lens=(args.prompt_len,),
         max_new_tokens=args.gen, vocab=cfg.vocab, seed=args.seed)
-    t0 = time.time()
+    t0 = time.perf_counter()
     completions = eng.run(reqs)
-    makespan = max(time.time() - t0, 1e-9)
+    makespan = max(time.perf_counter() - t0, 1e-9)
 
     n_tokens = sum(len(c.tokens) for c in completions)
     per_tok = [t for c in completions for t in c.per_token_s()]
@@ -197,19 +243,20 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max):
         "decode_tok_per_s": round(n_tokens / makespan, 1),
         "decode_steps": eng.steps,
         "compile_s": round(compile_s, 3),
-        "p50_token_ms": _percentile_ms(per_tok, 50),
-        "p95_token_ms": _percentile_ms(per_tok, 95),
-        "p50_queue_ms": _percentile_ms([c.queue_s for c in completions], 50),
+        "p50_token_ms": percentile_ms(per_tok, 50),
+        "p95_token_ms": percentile_ms(per_tok, 95),
+        "p50_queue_ms": percentile_ms([c.queue_s for c in completions], 50),
         "sample_tokens": completions[0].tokens[:8] if completions else [],
     }, eng.cache
 
 
 def _calibrate(args, cfg, model, params, policy):
-    """observe -> search -> (optionally) persist; returns the serving policy.
+    """observe -> search -> (optionally) persist; returns (policy, report).
 
     The emitted PrecisionPolicy keeps ``policy``'s non-weight roles
     (kv_cache, compute dtype, codec/epilogue/attn dispatch) as its base; any
     ``--precision-policy`` rules are superseded by the calibrated schedule.
+    The report doubles as the drift baseline for ``--numerics-watch``.
     """
     from repro.calib.search import (calibrate_model, calibration_batches,
                                     save_artifact)
@@ -224,13 +271,14 @@ def _calibrate(args, cfg, model, params, policy):
         lambda b: model.loss(params, b, base)[0], batches, params,
         base=base, byte_budget=args.weight_byte_budget,
         name=f"calibrated-{cfg.name}")
-    print(json.dumps({"calibration": {
+    print(json.dumps({"kind": "serve/calibration", "calibration": {
         k: report[k] for k in ("n_sites", "p8_floor_bytes", "byte_budget",
                                "weight_bytes", "predicted_err_score")}}))
     if args.policy_out:
         save_artifact(args.policy_out, cal_policy, report)
-        print(json.dumps({"policy_out": args.policy_out}))
-    return cal_policy
+        print(json.dumps({"kind": "serve/policy-out",
+                          "policy_out": args.policy_out}))
+    return cal_policy, report
 
 
 def main(argv=None):
@@ -274,12 +322,26 @@ def main(argv=None):
     ap.add_argument("--epilogue", default="fused", choices=("fused", "chained"))
     ap.add_argument("--attn-impl", default="auto",
                     choices=("auto", "kernel", "xla"))
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics snapshot JSON here (a Prometheus "
+                         "text exposition lands alongside as <path>.prom)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto request timeline "
+                         "here (requires --continuous)")
+    ap.add_argument("--numerics-watch", type=int, default=0, metavar="N",
+                    help="probe every N-th decode step for posit saturation/"
+                         "underflow/NaR and calibration drift (requires "
+                         "--continuous; baselines from @artifact or "
+                         "--calibrate)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if not args.calibrate and (args.policy_out or args.weight_byte_budget):
         ap.error("--policy-out / --weight-byte-budget require --calibrate N "
                  "(they configure the calibration search; a loaded "
                  "--precision-policy artifact is served as saved)")
+    if not args.continuous and (args.trace_out or args.numerics_watch):
+        ap.error("--trace-out / --numerics-watch instrument the continuous-"
+                 "batching engine; add --continuous")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -288,12 +350,17 @@ def main(argv=None):
         _parse_policy(args.policy),
         codec_impl=args.codec_impl, epilogue=args.epilogue,
         attn_impl=args.attn_impl)
+    drift_meta = None
     if args.precision_policy:
         policy = get_precision_policy(args.precision_policy, base=policy)
+        if args.precision_policy.startswith("@"):
+            with open(args.precision_policy[1:]) as f:
+                drift_meta = json.load(f)
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
     if args.calibrate:
-        policy = _calibrate(args, cfg, model, params, policy)
+        policy, cal_report = _calibrate(args, cfg, model, params, policy)
+        drift_meta = {"meta": cal_report}
     weight_report = {}
     if args.quantize_weights:
         weight_report = policy_weight_bytes(params, policy)
@@ -302,18 +369,39 @@ def main(argv=None):
     S_max = args.prompt_len + args.gen + \
         (cfg.n_patches if cfg.family == "vlm" else 0)
 
+    metrics, tracer, numerics = _build_observability(args, policy, drift_meta)
     rng = np.random.default_rng(args.seed)
     if args.continuous:
         report, cache = _serve_continuous(args, cfg, model, params, policy,
-                                          rng, S_max)
+                                          rng, S_max,
+                                          obs=(metrics, tracer, numerics))
         n_rows = args.max_slots or args.batch
     else:
         report, cache = _serve_static(args, cfg, model, params, policy,
                                       rng, S_max)
         n_rows = args.batch
 
+    if numerics is not None:
+        nrep = numerics.report()
+        print(json.dumps({"kind": "serve/numerics",
+                          "recalibrate": nrep["recalibrate"],
+                          "probes": nrep["probes"],
+                          "max_drift_score": nrep["max_drift_score"]}))
+        if metrics is not None:
+            metrics.set_context(numerics=nrep)
+    if metrics is not None:
+        metrics.set_context(arch=cfg.name, policy=policy.describe(),
+                            mode=report.get("mode") if args.continuous
+                            else "static")
+        metrics.save(args.metrics_out)
+        with open(args.metrics_out + ".prom", "w") as f:
+            f.write(metrics.prometheus())
+    if tracer is not None:
+        tracer.save(args.trace_out)
+
     kv_b = kv_cache_bytes(cache)
     print(json.dumps({
+        "kind": "serve/report",
         "arch": cfg.name, "policy": policy.describe(),
         **report,
         "kv_cache_bytes": kv_b,

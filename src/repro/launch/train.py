@@ -97,19 +97,19 @@ def main(argv=None):
         state, start = loop.resume(state)
         if start:
             print(f"[resume] from step {start}")
-        t0 = time.time()
+        t0 = time.perf_counter()
         state, nxt = loop.run(state, step_fn, start_step=start,
                               num_steps=args.steps - start)
         mgr.wait()
         mgr.close()
-        print(json.dumps({"done": nxt, "wall_s": round(time.time() - t0, 1),
+        print(json.dumps({"done": nxt, "wall_s": round(time.perf_counter() - t0, 1),
                           **loop.stats}))
     else:
-        t0 = time.time()
+        t0 = time.perf_counter()
         for step in range(args.steps):
             state = step_fn(state, step)
         print(json.dumps({"done": args.steps,
-                          "wall_s": round(time.time() - t0, 1)}))
+                          "wall_s": round(time.perf_counter() - t0, 1)}))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f)

@@ -1,0 +1,18 @@
+"""Serving-plane observability (DESIGN.md §12).
+
+Three layers, wired through ``launch/engine.py`` and ``launch/serve.py``:
+
+* :mod:`repro.obs.metrics`  — zero-dependency counters / gauges / histograms
+  with exact percentile readout, JSON snapshot + Prometheus exposition.
+* :mod:`repro.obs.trace`    — per-request Chrome-trace span timelines plus
+  ``jax.profiler`` annotations so device profiles line up with them.
+* :mod:`repro.obs.numerics` — posit numerical-health probes (saturation /
+  underflow / NaR rates) and calibration-drift detection against the
+  histograms stored in a ``@cal.json`` artifact.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry, RollingRate, percentile,
+                               percentile_ms)
+from repro.obs.numerics import (NumericsWatcher, drift_score,  # noqa: F401
+                                drift_threshold, load_baselines)
+from repro.obs.trace import TraceRecorder, annotate, named_scope  # noqa: F401

@@ -1,0 +1,316 @@
+"""Zero-dependency metrics registry for the serving plane (DESIGN.md §12).
+
+Three instrument kinds, all plain Python + numpy (nothing here touches jax —
+the registry must be callable from the engine's host loop without adding a
+device sync):
+
+* ``Counter``   — monotone event count, optionally labeled (eviction reasons).
+* ``Gauge``     — last-written value (slot occupancy, KV-byte utilization).
+* ``Histogram`` — latency/duration distribution.  Samples are retained
+  exactly up to ``max_samples`` (percentile readout is then *bit-identical*
+  to ``numpy.percentile`` — asserted in tests/test_obs.py); past the cap the
+  raw buffer is dropped and readout falls back to interpolation over the
+  log-spaced bucket counts, which are always maintained and are what the
+  Prometheus exposition exports (cumulative ``le`` buckets).
+
+``RollingRate`` is the tokens/s window: ``add(t, n)`` events, ``rate(now)``
+over the trailing ``window_s`` seconds.
+
+Export: :meth:`MetricsRegistry.snapshot` (JSON-ready dict, written by
+``serve.py --metrics-out``) and :meth:`MetricsRegistry.prometheus`
+(text exposition format, version 0.0.4 — the ``# TYPE`` / ``# HELP`` lines
+Prometheus' scraper parses).
+
+The percentile helpers at the bottom are the one shared implementation the
+repo uses for latency readout (``serve.py`` and ``benchmarks/bench_serving``
+both previously hand-rolled ``np.percentile`` wrappers).
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import json
+import math
+import re
+from typing import Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "RollingRate",
+    "percentile", "percentile_ms",
+]
+
+
+# ------------------------------------------------------------- percentiles ----
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """``numpy.percentile`` with an empty-input guard (returns 0.0).
+
+    The single percentile definition every latency report in the repo uses
+    (linear interpolation between order statistics — numpy's default).
+    """
+    xs = np.asarray(xs, np.float64)
+    if xs.size == 0:
+        return 0.0
+    return float(np.percentile(xs, q))
+
+
+def percentile_ms(xs: Sequence[float], q: float, ndigits: int = 2) -> float:
+    """Percentile of second-valued samples, reported in rounded ms."""
+    return round(percentile(xs, q) * 1e3, ndigits)
+
+
+# -------------------------------------------------------------- instruments ----
+
+class Counter:
+    """Monotone counter with optional label values (e.g. eviction reason)."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self._by_label: Dict[str, float] = collections.defaultdict(float)
+
+    def inc(self, n: float = 1.0, label: str = "") -> None:
+        self._by_label[label] += n
+
+    def value(self, label: str = "") -> float:
+        return self._by_label.get(label, 0.0)
+
+    @property
+    def total(self) -> float:
+        return sum(self._by_label.values())
+
+    def to_dict(self) -> dict:
+        if set(self._by_label) <= {""}:
+            return {"total": self.value()}
+        return {"total": self.total, "by_label": dict(self._by_label)}
+
+
+class Gauge:
+    """Last-written value."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self.val: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.val = float(v)
+
+    def to_dict(self) -> dict:
+        return {"value": self.val}
+
+
+#: Default log-spaced bucket boundaries: 1us .. ~100s in quarter-decades —
+#: wide enough for queue waits and tight enough that a bucket-interpolated
+#: p99 lands within ~1.8x (the quarter-decade ratio) of truth.
+_DEFAULT_BUCKETS = tuple(10.0 ** (e / 4.0) for e in range(-24, 9))
+
+
+class Histogram:
+    """Log-bucketed histogram with exact percentiles up to ``max_samples``.
+
+    ``observe(x)`` is O(log buckets).  ``percentiles()`` reads from the raw
+    sample buffer while it is still retained (exact — the registry's p50/p95/
+    p99 agree with numpy to the bit), else interpolates within the matching
+    log bucket (error bounded by the bucket ratio).
+    """
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Sequence[float] = _DEFAULT_BUCKETS,
+                 max_samples: int = 65536):
+        self.name, self.help = name, help
+        self.buckets = tuple(buckets)
+        # bucket counts live in a plain list: observe() is on the engine's
+        # per-decode-step hot path, and list indexing + bisect (both C) keep
+        # it ~1us where an ndarray searchsorted costs several
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.n = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self.max_samples = max_samples
+        self._samples: Optional[list] = []
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.n += 1
+        self.sum += x
+        if x < self.min:
+            self.min = x
+        if x > self.max:
+            self.max = x
+        # index of the first bucket boundary >= x (its "le" bucket)
+        self.counts[bisect.bisect_left(self.buckets, x)] += 1
+        if self._samples is not None:
+            self._samples.append(x)
+            if len(self._samples) > self.max_samples:
+                self._samples = None    # cap hit: bucket readout from now on
+
+    @property
+    def exact(self) -> bool:
+        return self._samples is not None
+
+    def percentiles(self, qs: Iterable[float] = (50, 95, 99)) -> Dict[str, float]:
+        if self.n == 0:
+            return {f"p{_plabel(q)}": 0.0 for q in qs}
+        if self._samples is not None:
+            return {f"p{_plabel(q)}": percentile(self._samples, q) for q in qs}
+        return {f"p{_plabel(q)}": self._bucket_percentile(q) for q in qs}
+
+    def _bucket_percentile(self, q: float) -> float:
+        """Linear interpolation inside the log bucket holding rank q."""
+        rank = q / 100.0 * (self.n - 1)
+        cum = np.cumsum(self.counts)
+        b = int(np.searchsorted(cum, rank + 1, side="left"))
+        lo = self.buckets[b - 1] if b > 0 else min(self.min, self.buckets[0])
+        hi = self.buckets[b] if b < len(self.buckets) else self.max
+        lo = max(lo, self.min)
+        hi = min(hi, self.max)
+        if hi <= lo:
+            return lo
+        prev = float(cum[b - 1]) if b > 0 else 0.0
+        frac = (rank + 1 - prev) / max(float(self.counts[b]), 1.0)
+        return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.n if self.n else 0.0
+
+    def to_dict(self) -> dict:
+        d = {"count": self.n, "sum": self.sum, "mean": self.mean,
+             "min": self.min if self.n else 0.0,
+             "max": self.max if self.n else 0.0,
+             "exact": self.exact}
+        d.update(self.percentiles())
+        return d
+
+
+class RollingRate:
+    """Events-per-second over a trailing window (decode tokens/s).
+
+    ``add(t, n)`` appends an event of weight ``n`` at time ``t`` (seconds,
+    monotonic clock); ``rate(now)`` sums weights inside ``[now - window_s,
+    now]`` and divides by the window.  Old events are dropped as the window
+    slides, so memory is bounded by the event rate, not run length.
+    """
+
+    def __init__(self, window_s: float = 10.0):
+        self.window_s = float(window_s)
+        self._events: collections.deque = collections.deque()
+        self._in_window = 0.0
+
+    def add(self, t: float, n: float = 1.0) -> None:
+        self._events.append((float(t), float(n)))
+        self._in_window += n
+
+    def rate(self, now: float) -> float:
+        cutoff = now - self.window_s
+        ev = self._events
+        while ev and ev[0][0] < cutoff:
+            self._in_window -= ev.popleft()[1]
+        if not ev:
+            return 0.0
+        # use the genuinely covered span when the run is shorter than the
+        # window (a 2s run must not report rate diluted over 10s)
+        span = min(self.window_s, max(now - ev[0][0], 1e-9))
+        return self._in_window / span
+
+
+def _plabel(q: float) -> str:
+    """p-label formatting: 50 -> '50', 99.9 -> '99_9' (Prometheus-safe)."""
+    s = f"{q:g}"
+    return s.replace(".", "_")
+
+
+# ---------------------------------------------------------------- registry ----
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    return _NAME_RE.sub("_", name)
+
+
+class MetricsRegistry:
+    """Create-on-first-use instrument registry.
+
+    One registry per engine/run; ``snapshot()`` is the JSON artifact
+    ``serve.py --metrics-out`` writes, ``prometheus()`` the text exposition
+    a scrape endpoint would serve.  Extra run-level context (arch, policy,
+    numerics snapshot) merges in via ``set_context``.
+    """
+
+    def __init__(self):
+        self.counters: Dict[str, Counter] = {}
+        self.gauges: Dict[str, Gauge] = {}
+        self.histograms: Dict[str, Histogram] = {}
+        self.context: dict = {}
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        c = self.counters.get(name)
+        if c is None:
+            c = self.counters[name] = Counter(name, help)
+        return c
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        gg = self.gauges.get(name)
+        if gg is None:
+            gg = self.gauges[name] = Gauge(name, help)
+        return gg
+
+    def histogram(self, name: str, help: str = "", **kw) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(name, help, **kw)
+        return h
+
+    def set_context(self, **kv) -> None:
+        self.context.update(kv)
+
+    # -- export ---------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "kind": "repro/metrics-snapshot",
+            "version": 1,
+            **self.context,
+            "counters": {n: c.to_dict() for n, c in sorted(self.counters.items())},
+            "gauges": {n: x.to_dict() for n, x in sorted(self.gauges.items())},
+            "histograms": {n: h.to_dict()
+                           for n, h in sorted(self.histograms.items())},
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1)
+
+    def prometheus(self) -> str:
+        """Text exposition format 0.0.4 (the format scrapers parse)."""
+        lines = []
+        for name, c in sorted(self.counters.items()):
+            pn = _prom_name(name) + "_total"
+            if c.help:
+                lines.append(f"# HELP {pn} {c.help}")
+            lines.append(f"# TYPE {pn} counter")
+            labels = c._by_label or {"": 0.0}
+            for label, v in sorted(labels.items()):
+                sel = f'{{reason="{label}"}}' if label else ""
+                lines.append(f"{pn}{sel} {v:g}")
+        for name, x in sorted(self.gauges.items()):
+            pn = _prom_name(name)
+            if x.help:
+                lines.append(f"# HELP {pn} {x.help}")
+            lines.append(f"# TYPE {pn} gauge")
+            lines.append(f"{pn} {x.val:g}")
+        for name, h in sorted(self.histograms.items()):
+            pn = _prom_name(name)
+            if h.help:
+                lines.append(f"# HELP {pn} {h.help}")
+            lines.append(f"# TYPE {pn} histogram")
+            cum = 0
+            for le, cnt in zip(h.buckets, h.counts):
+                cum += int(cnt)
+                lines.append(f'{pn}_bucket{{le="{le:g}"}} {cum}')
+            lines.append(f'{pn}_bucket{{le="+Inf"}} {h.n}')
+            lines.append(f"{pn}_sum {h.sum:g}")
+            lines.append(f"{pn}_count {h.n}")
+        return "\n".join(lines) + "\n"

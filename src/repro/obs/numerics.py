@@ -1,0 +1,308 @@
+"""Posit numerical-health telemetry: serving-time probes + drift detection.
+
+The transprecision premise (per-layer dynamic es matched to the data
+distribution, DESIGN.md §11) is only safe while the serving data still looks
+like the calibration data.  This module closes that loop:
+
+* **Probes** — the engine periodically routes a decode step through a
+  *probed* executable traced under ``calib.observe.observing`` (the same
+  debug-callback reduction core calibration uses — nothing is duplicated,
+  the probe IS an observer).  Every linear call site then streams its
+  activation binade histogram + nonfinite count; cadence (``every`` decode
+  steps) bounds the overhead.
+* **Health readout** — per site: saturation rate (mass at/above the resolved
+  format's ``max_scale`` — values that clamp to maxpos), underflow rate
+  (mass below ``-max_scale`` — values that round up to minpos), and the
+  NaR/nonfinite count (what posit encodes as NaR).  These are exactly the
+  tapered-accuracy failure modes PERCIVAL's quire and the PVU bound in
+  hardware; here they become gauges.
+* **Drift detection** — the live activation histogram is compared against
+  the histogram stored in the calibration artifact (``meta.sites[].act_hist``
+  — written by ``calib.search.save_artifact``) via smoothed KL divergence.
+  Under the no-drift null, ``2 * N_eff * KL`` is asymptotically
+  chi-square(k-1) (the standard G-test statistic), so the threshold is the
+  chi-square quantile at ``confidence`` scaled by the effective sample count
+  — *calibrated*, not a magic constant — with an absolute floor
+  (``min_score``) absorbing the non-iid-ness of real activations (elements
+  of one tensor are correlated, so multinomial noise understates variance).
+  Any site over threshold raises the ``recalibrate`` flag surfaced in the
+  metrics snapshot.
+
+Everything on the host side is numpy on tiny (NBINS,) vectors.  The real
+cost is the probed step itself: each observed site ships one
+``jax.debug.callback``, and callback dispatch (FFI + GIL, serialized inside
+``lax.scan`` layer stacks) runs ~0.3-0.5 ms *per site* on CPU — a probed
+step on a reduced test model costs ~10x a plain one.  That cost is a fixed
+tax per probe, so the amortized overhead is ``probe_cost / (every *
+step_cost)``: the default cadence (``every=1024``) holds a worst-case tiny
+model (~1 ms steps) under a few percent, and on production-size models
+(10-100x slower steps, same per-site callback tax) the same cadence is
+deep in the noise.  ``benchmarks/bench_obs_overhead.py`` measures the full
+stack over exact cadence cycles and CI-gates it at <= 5%.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.calib.observe import BIN_LO, NBINS, Observer, TensorStats, observing
+from repro.core.types import PositFmt
+
+__all__ = [
+    "NumericsWatcher", "SiteHealth", "drift_score", "drift_threshold",
+    "load_baselines", "chi2_quantile", "normal_quantile",
+]
+
+
+# ----------------------------------------------------- statistics utilities ----
+
+def normal_quantile(p: float) -> float:
+    """Inverse standard-normal CDF (Acklam's rational approximation,
+    |error| < 1.15e-9 — far below anything a drift threshold can feel)."""
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"quantile probability must be in (0, 1), got {p}")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    plow, phigh = 0.02425, 1 - 0.02425
+    if p < plow:
+        q = math.sqrt(-2 * math.log(p))
+        return (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q
+                + c[5]) / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if p > phigh:
+        return -normal_quantile(1 - p)
+    q = p - 0.5
+    r = q * q
+    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r
+            + a[5]) * q / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r
+                            + b[4]) * r + 1)
+
+
+def chi2_quantile(k: int, p: float = 0.999) -> float:
+    """Chi-square quantile via the Wilson–Hilferty cube approximation —
+    accurate to a few percent for k >= 2, which is all a threshold needs."""
+    k = max(int(k), 1)
+    z = normal_quantile(p)
+    h = 2.0 / (9.0 * k)
+    return k * (1.0 - h + z * math.sqrt(h)) ** 3
+
+
+def drift_score(live: TensorStats, base: TensorStats) -> Tuple[float, int]:
+    """Smoothed KL(live || base) over binade distributions, in nats.
+
+    Add-half (Jeffreys) smoothing on both histograms over the union support;
+    returns ``(kl_nats, k)`` with ``k`` the union-support bin count (the
+    chi-square degrees of freedom + 1).  Zero mass on either side -> (0, 0).
+    """
+    lh, bh = np.asarray(live.hist, np.float64), np.asarray(base.hist, np.float64)
+    n_live, n_base = lh.sum(), bh.sum()
+    if n_live <= 0 or n_base <= 0:
+        return 0.0, 0
+    support = (lh > 0) | (bh > 0)
+    k = int(support.sum())
+    lp = (lh[support] + 0.5) / (n_live + 0.5 * k)
+    bp = (bh[support] + 0.5) / (n_base + 0.5 * k)
+    return float(np.sum(lp * np.log(lp / bp))), k
+
+
+def drift_threshold(n_live: float, n_base: float, k: int, *,
+                    confidence: float = 0.999,
+                    min_score: float = 0.1) -> float:
+    """KL threshold above which drift is declared.
+
+    G-test calibration: under H0, ``2 * N_eff * KL ~ chi2(k - 1)`` with
+    ``N_eff = 1 / (1/n_live + 1/n_base)`` (both histograms are empirical, so
+    both contribute sampling noise).  ``min_score`` floors the threshold:
+    activations are not iid draws, so pure multinomial noise understates the
+    benign wobble — the floor is what keeps in-distribution traffic quiet
+    (tests/test_obs.py pins both directions).
+    """
+    if k < 2 or n_live <= 0 or n_base <= 0:
+        return math.inf
+    n_eff = 1.0 / (1.0 / n_live + 1.0 / n_base)
+    return max(chi2_quantile(k - 1, confidence) / (2.0 * n_eff), min_score)
+
+
+# ----------------------------------------------------------------- baselines ----
+
+def load_baselines(artifact) -> Dict[str, TensorStats]:
+    """Per-site calibration activation histograms from an artifact.
+
+    ``artifact`` is a path to the ``@cal.json`` file or its parsed dict.
+    Sites saved before histograms existed in the schema are skipped (drift
+    is then unavailable for them; rates still report).
+    """
+    if isinstance(artifact, str):
+        with open(artifact) as f:
+            artifact = json.load(f)
+    out: Dict[str, TensorStats] = {}
+    for site in artifact.get("meta", {}).get("sites", ()):
+        h = site.get("act_hist")
+        if h and h.get("counts"):
+            out[site["path"]] = TensorStats.hist_from_json(h)
+    return out
+
+
+# ------------------------------------------------------------------- watcher ----
+
+@dataclasses.dataclass
+class SiteHealth:
+    """One site's health readout at a drift check."""
+
+    path: str
+    n: float                       # elements probed in the window
+    saturation_rate: Optional[float]   # mass >= fmt.max_scale (None: no fmt)
+    underflow_rate: Optional[float]    # mass < -fmt.max_scale
+    nonfinite: float
+    drift_score: Optional[float]   # None: no baseline for this site
+    drift_threshold: Optional[float]
+    drifted: bool
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("path")
+        return d
+
+
+class NumericsWatcher:
+    """Streams per-site numerical health from cadenced probed decode steps.
+
+    The watcher owns an ``Observer``; the engine traces its *probed* decode
+    executable under ``watcher.observing()`` so the debug callbacks bake into
+    exactly one of its two executables, then routes every ``every``-th step
+    through it (DESIGN.md §12 — trace-time activation is what makes the
+    unprobed step free).  ``check()`` turns the histograms accumulated since
+    the previous check into :class:`SiteHealth` rows and updates the
+    ``recalibrate`` flag; ``report()`` is the JSON block merged into the
+    metrics snapshot.
+    """
+
+    def __init__(self, policy=None, baselines: Optional[Dict[str, TensorStats]]
+                 = None, *, every: int = 1024, confidence: float = 0.999,
+                 min_score: float = 0.1, window: bool = True):
+        if every < 1:
+            raise ValueError(f"probe cadence must be >= 1, got {every}")
+        # act only: weights are static during serving, and filtering at trace
+        # time keeps their reductions+callbacks out of the probed executable
+        self.observer = Observer(kinds=("act",))
+        self.policy = policy
+        self.baselines = dict(baselines or {})
+        self.every = every
+        self.confidence = confidence
+        self.min_score = min_score
+        self.window = window       # False: every check scores the full run
+        self.probes = 0            # probed steps executed
+        self.checks = 0
+        self.recalibrate = False
+        self.health: Dict[str, SiteHealth] = {}
+        self._mark: Dict[Tuple[str, str], Tuple[float, np.ndarray, float]] = {}
+
+    # -- engine hooks ---------------------------------------------------------
+    def should_probe(self, step_index: int) -> bool:
+        """Probe on every ``every``-th decode step (step 0 included, so the
+        probed executable compiles during warmup, not mid-serve)."""
+        return step_index % self.every == 0
+
+    def observing(self):
+        """Context manager installing this watcher's observer (trace-time)."""
+        return observing(self.observer)
+
+    def note_probe(self) -> None:
+        self.probes += 1
+
+    def rebase(self) -> None:
+        """Advance the window marks past everything observed so far without
+        scoring it — drivers call this after engine warmup so compile-time
+        probe traffic (dummy prompts) doesn't pollute the first real window."""
+        for path in self.observer.paths():
+            st = self.observer.get(path, "act")
+            self._mark[(path, "act")] = (st.n, st.hist.copy(), st.nonfinite)
+
+    # -- readout --------------------------------------------------------------
+    def _site_fmt(self, path: str):
+        pol = self.policy
+        if pol is None:
+            return None
+        resolve = getattr(pol, "policy_for", None)
+        pol = resolve(path) if resolve is not None else pol
+        return pol.weights
+
+    def _window_stats(self, path: str) -> TensorStats:
+        """Stats accumulated since the previous check (or run start)."""
+        st = self.observer.get(path, "act")
+        cur = TensorStats()
+        if st is None:
+            return cur
+        prev = self._mark.get((path, "act")) if self.window else None
+        cur.n = st.n - (prev[0] if prev else 0.0)
+        cur.hist = st.hist - (prev[1] if prev else 0.0)
+        cur.nonfinite = st.nonfinite - (prev[2] if prev else 0.0)
+        cur.zeros = cur.n - float(cur.hist.sum()) - cur.nonfinite
+        return cur
+
+    def check(self) -> Dict[str, SiteHealth]:
+        """Score the window since the last check; advances the window mark.
+
+        Health rows merge into the running view (a site with no traffic this
+        window keeps its last readout) and ``recalibrate`` latches: once a
+        site drifts, the flag stays raised until the operator recalibrates —
+        a later in-distribution window must not silently clear it.
+        """
+        self.checks += 1
+        health: Dict[str, SiteHealth] = {}
+        for path in self.observer.paths():
+            cur = self._window_stats(path)
+            if cur.n <= 0:
+                continue
+            fmt = self._site_fmt(path)
+            nz = float(cur.hist.sum())
+            sat = uf = None
+            if isinstance(fmt, PositFmt) and nz > 0:
+                scales = np.arange(BIN_LO, BIN_LO + NBINS)
+                sat = float(cur.hist[scales >= fmt.max_scale].sum() / nz)
+                uf = float(cur.hist[scales < -fmt.max_scale].sum() / nz)
+            score = thresh = None
+            drifted = False
+            base = self.baselines.get(path)
+            if base is not None:
+                score, k = drift_score(cur, base)
+                thresh = drift_threshold(
+                    nz, float(base.hist.sum()), k,
+                    confidence=self.confidence, min_score=self.min_score)
+                drifted = bool(score > thresh)
+            self.recalibrate |= drifted
+            health[path] = SiteHealth(
+                path=path, n=cur.n, saturation_rate=sat, underflow_rate=uf,
+                nonfinite=cur.nonfinite, drift_score=score,
+                drift_threshold=thresh, drifted=drifted)
+            st = self.observer.get(path, "act")
+            self._mark[(path, "act")] = (st.n, st.hist.copy(), st.nonfinite)
+        self.health.update(health)
+        return health
+
+    def report(self) -> dict:
+        """JSON block for the metrics snapshot (runs a final check so a
+        report is never stale w.r.t. the last probed steps)."""
+        self.check()
+        scores = [h.drift_score for h in self.health.values()
+                  if h.drift_score is not None]
+        return {
+            "probes": self.probes,
+            "probe_every": self.every,
+            "checks": self.checks,
+            "recalibrate": self.recalibrate,
+            "max_drift_score": max(scores) if scores else None,
+            "sites": {p: h.to_dict() for p, h in sorted(self.health.items())},
+        }

@@ -421,11 +421,14 @@ def test_serve_calibrate_cli(tmp_path, capsys):
                 "--quantize-weights"])
     lines = [json.loads(ln) for ln in capsys.readouterr().out.splitlines()
              if ln.startswith("{")]
-    cal = next(ln["calibration"] for ln in lines if "calibration" in ln)
+    # every stdout line is a JSON object tagged with its kind
+    assert all("kind" in ln for ln in lines)
+    cal = next(ln["calibration"] for ln in lines
+               if ln["kind"] == "serve/calibration")
     assert cal["n_sites"] >= 4
     assert os.path.exists(out)
     # the artifact reloads as a serving policy
     pol = get_precision_policy("@" + str(out))
     assert pol.policy_for("blocks/mlp/up").weights.nbits == 8
-    final = lines[-1]
+    final = next(ln for ln in lines if ln["kind"] == "serve/report")
     assert "weight_bytes_policy" in final and "decode_tok_per_s" in final
