@@ -23,6 +23,7 @@ upload them as inspectable artifacts.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 import jax
@@ -31,6 +32,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_arch
 from repro.core.pcsr import TransPolicy
+from repro.ft import EngineSnapshotter
 from repro.launch.engine import ContinuousBatchingEngine, Request
 from repro.models.registry import build_model
 from repro.obs.metrics import MetricsRegistry
@@ -40,6 +42,11 @@ from repro.obs.trace import TraceRecorder
 #: Acceptance ceiling: instrumented decode may cost at most this much more
 #: than bare decode (tokens/s within 5%).
 MAX_OVERHEAD = 0.05
+
+#: Snapshot cadence on the instrumented engine (the ft default): the gate
+#: now covers the whole deployable serving plane — §12 observability PLUS
+#: §13 crash-safe snapshotting — not observability alone.
+SNAPSHOT_EVERY = 256
 
 
 def _fill_slots(eng, cfg, slots: int, prompt_len: int, budget: int) -> None:
@@ -73,12 +80,16 @@ def run(smoke: bool = False) -> None:
     policy = watcher.policy
 
     metrics, tracer = MetricsRegistry(), TraceRecorder()
+    snap_dir = tempfile.mkdtemp(prefix="bench_obs_snap_")
+    snapshotter = EngineSnapshotter(snap_dir, every=SNAPSHOT_EVERY,
+                                    metrics=metrics)
     engines = {
         "off": ContinuousBatchingEngine(
             model, params, policy, max_slots=slots, S_max=S_max),
         "on": ContinuousBatchingEngine(
             model, params, policy, max_slots=slots, S_max=S_max,
-            metrics=metrics, tracer=tracer, numerics=watcher),
+            metrics=metrics, tracer=tracer, numerics=watcher,
+            snapshotter=snapshotter),
     }
     # fill every slot and warm both executables (the "on" engine's first two
     # steps compile the probed twin AND the plain decode) outside the clock
@@ -109,7 +120,10 @@ def run(smoke: bool = False) -> None:
     emit("decode_obs_off", best["off"], f"tok_s={tok_s['off']:.1f}")
     emit("decode_obs_on", best["on"],
          f"tok_s={tok_s['on']:.1f} overhead={overhead * 100:+.2f}% "
-         f"probes={engines['on'].numerics.probes}")
+         f"probes={engines['on'].numerics.probes} "
+         f"snapshots={snapshotter.saves}")
+    snapshotter.close()    # drain + surface any background save failure
+    assert snapshotter.saves > 0, "no snapshot fired inside the timed window"
 
     # the uploaded artifacts: what the instrumented run actually recorded
     engines["on"].numerics.check()

@@ -41,6 +41,7 @@ BENCHES = {
     "serving": "benchmarks.bench_serving",             # engine + attn dispatch
     "calibration": "benchmarks.bench_calibration",     # dynamic-es calibration
     "obs_overhead": "benchmarks.bench_obs_overhead",   # §12 observability cost
+    "recovery": "benchmarks.bench_recovery",           # §13 fault tolerance
 }
 
 

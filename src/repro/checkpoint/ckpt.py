@@ -3,9 +3,18 @@ elastic (any saved topology -> any restore topology).
 
 Layout (one directory per step):
     ckpt_dir/step_000123.tmp/      while writing
-        manifest.json              tree structure, shapes, dtypes, format, step
-        shard_00000.npz            flat leaves (host-sharded on multi-host)
+        manifest.json              tree structure, shapes, dtypes, offsets,
+                                   per-leaf crc32, format, step
+        shard_00000.bin            flat leaves, raw C-contiguous bytes
     ckpt_dir/step_000123/          after atomic rename (os.replace)
+
+The shard is raw bytes rather than npz on purpose: the serving plane
+snapshots a live engine from a background thread, and ``np.savez`` streams
+through ``zipfile`` in small Python-level chunks that hold the GIL in
+multi-ms bursts — measurable decode stalls.  A raw shard is one GIL-releasing
+``write`` per leaf; integrity comes from a single-shot ``zlib.crc32`` per
+leaf (also GIL-releasing for large buffers) recorded in the manifest and
+verified on load.  Old npz shards remain readable.
 
 Durability contract: a checkpoint is valid iff the final directory exists with
 a readable manifest — a crash mid-write leaves only a .tmp that restart-scan
@@ -23,7 +32,10 @@ import json
 import os
 import queue
 import shutil
+import sys
 import threading
+import time
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -56,27 +68,43 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
     os.makedirs(tmp)
 
     paths, leaves, _ = _flatten_with_paths(tree)
-    arrays, meta = {}, []
-    for i, (p, leaf) in enumerate(zip(paths, leaves)):
-        arr = np.asarray(leaf)
-        entry = {"path": p, "dtype": str(arr.dtype), "shape": list(arr.shape),
-                 "codec": "raw"}
-        if fmt is not None and arr.dtype in (np.float32, np.float64):
-            codes = np.asarray(posit_encode(
-                jnp.asarray(arr, jnp.float32), fmt.nbits, fmt.es))
-            arrays[f"a{i}"] = codes
-            entry["codec"] = fmt.name
-        else:
-            arrays[f"a{i}"] = arr
-        meta.append(entry)
-
-    np.savez(os.path.join(tmp, "shard_00000.npz"), **arrays)
+    meta, off = [], 0
+    with open(os.path.join(tmp, "shard_00000.bin"), "wb") as f:
+        for p, leaf in zip(paths, leaves):
+            arr = np.asarray(leaf)
+            entry = {"path": p, "dtype": str(arr.dtype),
+                     "shape": list(arr.shape), "codec": "raw"}
+            if fmt is not None and arr.dtype in (np.float32, np.float64):
+                arr = np.asarray(posit_encode(
+                    jnp.asarray(arr, jnp.float32), fmt.nbits, fmt.es))
+                entry["codec"] = fmt.name
+            # reshape(-1): a 0-d memoryview cannot cast to bytes
+            buf = memoryview(np.ascontiguousarray(arr).reshape(-1)).cast("B")
+            entry["stored_dtype"] = str(arr.dtype)
+            entry["offset"], entry["nbytes"] = off, buf.nbytes
+            entry["crc32"] = zlib.crc32(buf)
+            f.write(buf)
+            off += buf.nbytes
+            meta.append(entry)
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {"step": step, "leaves": meta, "extra": extra or {}}
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic on POSIX
+    # fsync the parent directory so the rename itself is durable — without
+    # it a power cut can leave a manifest-complete directory that the
+    # filesystem forgets (the durability contract says a visible final dir
+    # IS a valid checkpoint, so its visibility must be on disk too)
+    dir_fd = os.open(ckpt_dir, os.O_RDONLY)
+    try:
+        os.fsync(dir_fd)
+    finally:
+        os.close(dir_fd)
     return final
 
 
@@ -90,7 +118,14 @@ def load_checkpoint(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     with open(os.path.join(step_dir, _MANIFEST)) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(step_dir, "shard_00000.npz"))
+    bin_path = os.path.join(step_dir, "shard_00000.bin")
+    if os.path.exists(bin_path):
+        with open(bin_path, "rb") as f:
+            blob = memoryview(f.read())
+        data = None
+    else:  # pre-raw-shard checkpoint (npz layout)
+        blob = None
+        data = np.load(os.path.join(step_dir, "shard_00000.npz"))
 
     paths, leaves, treedef = _flatten_with_paths(tree_like)
     by_path = {e["path"]: (i, e) for i, e in enumerate(manifest["leaves"])}
@@ -99,7 +134,20 @@ def load_checkpoint(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None
                else [None] * len(leaves))
     for p, like, sh in zip(paths, leaves, flat_sh):
         i, entry = by_path[p]
-        arr = data[f"a{i}"]
+        if blob is not None:
+            raw = blob[entry["offset"]:entry["offset"] + entry["nbytes"]]
+            if zlib.crc32(raw) != entry["crc32"]:
+                # deliberately NOT OSError: corruption is permanent, the
+                # with_retries(retryable=(OSError,)) wrapper must not spin
+                raise ValueError(
+                    f"checkpoint shard corrupt: leaf {p} in {step_dir}")
+            # posit_encode preserves shape, so entry["shape"] is right for
+            # both raw and posit-coded leaves
+            arr = np.frombuffer(
+                raw, dtype=np.dtype(entry["stored_dtype"])).reshape(
+                    entry["shape"])
+        else:
+            arr = data[f"a{i}"]
         if entry["codec"] != "raw":
             f = get_format(entry["codec"])
             arr = np.asarray(posit_decode(jnp.asarray(arr), f.nbits, f.es))
@@ -130,20 +178,71 @@ def gc_tmp(ckpt_dir: str) -> int:
 
 
 class CheckpointManager:
-    """Async save + retention + auto-resume."""
+    """Async save + retention + auto-resume.
+
+    Failure surfacing: a background save failure is raised on the next
+    ``save_async()``/``wait()``/``close()`` *and* surfaced promptly — a line
+    on stderr plus, when ``metrics`` (a ``repro.obs.MetricsRegistry``) is
+    given, the ``ckpt_save_errors`` counter and ``ckpt_last_saved_step``
+    gauge move immediately (an operator dashboard sees the failure before
+    the next checkpoint cadence does).  Transient IO errors are retried with
+    decorrelated-jitter backoff (``ft.with_retries``) before counting as a
+    failure; ``pre_save`` is a fault-injection hook (``FaultPlan`` in
+    ``repro.ft.serving``) called before every save attempt.
+    """
 
     def __init__(self, ckpt_dir: str, *, keep: int = 3,
-                 fmt: Optional[PositFmt] = None):
+                 fmt: Optional[PositFmt] = None, metrics=None,
+                 retries: int = 2, retry_base_delay: float = 0.05,
+                 pre_save=None):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self.fmt = fmt
-        self._q: "queue.Queue" = queue.Queue()
+        self.retries = retries
+        self.retry_base_delay = retry_base_delay
+        self.pre_save = pre_save
         self._err: Optional[BaseException] = None
+        # reap orphaned .tmp dirs from a crashed predecessor BEFORE the
+        # worker starts writing new ones (a crash mid-save leaves only .tmp)
+        self.gc_tmp_reaped = gc_tmp(ckpt_dir)
+        self._m_errors = self._m_saves = self._m_retries = None
+        self._m_last_step = self._m_save_s = None
+        if metrics is not None:
+            self._m_saves = metrics.counter(
+                "ckpt_saves", "checkpoints committed")
+            self._m_errors = metrics.counter(
+                "ckpt_save_errors", "checkpoint saves that failed for good")
+            self._m_retries = metrics.counter(
+                "ckpt_save_retries", "transient save failures retried")
+            self._m_last_step = metrics.gauge(
+                "ckpt_last_saved_step", "step of the newest durable snapshot")
+            self._m_save_s = metrics.histogram(
+                "ckpt_save_s", "wall time of one background save")
+        self._q: "queue.Queue" = queue.Queue()
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
-        gc_tmp(ckpt_dir)
+
+    def _save_once(self, step, host_tree, extra):
+        if self.pre_save is not None:
+            self.pre_save(step)
+        # the raw-shard writes and crc32 release the GIL, but the remaining
+        # Python in a save (manifest json, retention rmtree, posit encode
+        # dispatch) would hold it in bursts up to the default 5ms switch
+        # interval — a serving thread's decode dispatch stalls by that much
+        # per burst.  Shrink the interval for the duration of the save so
+        # the background writer yields every ~0.5ms instead; the writer is
+        # background, the server is not.
+        old = sys.getswitchinterval()
+        sys.setswitchinterval(5e-4)
+        try:
+            return save_checkpoint(self.ckpt_dir, step, host_tree,
+                                   fmt=self.fmt, extra=extra)
+        finally:
+            sys.setswitchinterval(old)
 
     def _run(self):
+        from repro.ft.runtime import with_retries  # late: avoids import cycle
+
         while True:
             item = self._q.get()
             if item is None:
@@ -151,11 +250,26 @@ class CheckpointManager:
                 return
             step, host_tree, extra = item
             try:
-                save_checkpoint(self.ckpt_dir, step, host_tree,
-                                fmt=self.fmt, extra=extra)
+                t0 = time.perf_counter()
+                with_retries(
+                    lambda: self._save_once(step, host_tree, extra),
+                    retries=self.retries,
+                    base_delay=self.retry_base_delay,
+                    retryable=(OSError, RuntimeError),
+                    on_retry=lambda n, e: (
+                        self._m_retries.inc()
+                        if self._m_retries is not None else None))
+                if self._m_saves is not None:
+                    self._m_saves.inc()
+                    self._m_last_step.set(step)
+                    self._m_save_s.observe(time.perf_counter() - t0)
                 self._retain()
-            except BaseException as e:  # surfaced on next save()/close()
+            except BaseException as e:  # re-raised on next save()/wait()
                 self._err = e
+                if self._m_errors is not None:
+                    self._m_errors.inc()
+                print(f"checkpoint save (step {step}) failed: {e!r}",
+                      file=sys.stderr)
             finally:
                 self._q.task_done()
 
@@ -186,6 +300,12 @@ class CheckpointManager:
             raise RuntimeError("async checkpoint failed") from self._err
 
     def restore_or_none(self, tree_like: Any, shardings: Any = None):
+        from repro.ft.runtime import with_retries  # late: avoids import cycle
+
         if latest_checkpoint(self.ckpt_dir) is None:
             return None
-        return load_checkpoint(self.ckpt_dir, tree_like, shardings=shardings)
+        return with_retries(
+            lambda: load_checkpoint(self.ckpt_dir, tree_like,
+                                    shardings=shardings),
+            retries=self.retries, base_delay=self.retry_base_delay,
+            retryable=(OSError,))

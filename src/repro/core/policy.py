@@ -37,16 +37,28 @@ from repro.core.types import ES_MAX, ES_MIN, PositFmt, get_format
 
 @dataclasses.dataclass(frozen=True)
 class LayerRule:
-    """One per-layer override: glob pattern -> (weight format, packed flag)."""
+    """One per-layer override: glob pattern -> (weight format, packed flag).
+
+    ``bypass=True`` is the float escape hatch: the matching layer runs with
+    ``weights=None`` (no posit quantization at all) regardless of the base
+    policy's format.  It is the last rung of the numerics degradation ladder
+    (``repro.ft.serving``, DESIGN.md §13) — distinct from ``weights=None``
+    *without* bypass, which pins the layer to the base format.
+    """
 
     pattern: str                        # fnmatch glob over the layer path
     weights: Optional[PositFmt] = None  # None = keep the base policy's format
     packed: bool = False                # packed-p8 lane storage (core/pack.py)
+    bypass: bool = False                # True: force float (weights=None)
 
     def __post_init__(self):
         if self.packed and (self.weights is None or self.weights.nbits != 8):
             raise ValueError(
                 f"packed rules require p8 weights, got {self.weights} "
+                f"for pattern {self.pattern!r}")
+        if self.bypass and self.weights is not None:
+            raise ValueError(
+                f"bypass rules take no weight format, got {self.weights} "
                 f"for pattern {self.pattern!r}")
 
 
@@ -74,9 +86,16 @@ def _pattern_matches(path: str, pattern: str) -> bool:
 @functools.lru_cache(maxsize=4096)
 def _resolve(policy: "PrecisionPolicy", path: str) -> TransPolicy:
     rule = policy.rule_for(path)
-    if rule is None or rule.weights is None:
-        # no rule, or a weights=None rule: the layer keeps the base format
-        # (a None rule *pins* the layer — it stops later rules from firing)
+    if rule is None:
+        return policy.base
+    if rule.bypass:
+        # float escape hatch (degradation ladder's last rung): the layer
+        # skips weight quantization entirely
+        return dataclasses.replace(
+            policy.base, weights=None, pack_weights=False)
+    if rule.weights is None:
+        # a weights=None rule: the layer keeps the base format (a None rule
+        # *pins* the layer — it stops later rules from firing)
         return policy.base
     return dataclasses.replace(
         policy.base, weights=rule.weights, pack_weights=rule.packed)
@@ -108,7 +127,8 @@ class PrecisionPolicy:
     def describe(self) -> str:
         parts = [f"precision={self.name}", self.base.describe()]
         for r in self.rules:
-            fmt = r.weights.name if r.weights else "base"
+            fmt = ("float" if r.bypass
+                   else r.weights.name if r.weights else "base")
             parts.append(
                 f"{r.pattern}->{fmt}{'(packed)' if r.packed else ''}")
         return " ".join(parts)
@@ -126,6 +146,7 @@ class PrecisionPolicy:
                 "pattern": r.pattern,
                 "weights": r.weights.name if r.weights is not None else None,
                 "packed": r.packed,
+                **({"bypass": True} if r.bypass else {}),
             } for r in self.rules],
         }
 
@@ -136,13 +157,15 @@ class PrecisionPolicy:
         for r in d.get("rules", ()):
             # reject typos loudly: a hand-edited {"weight": ...} rule would
             # otherwise silently degrade to a weights=None pin-to-base rule
-            bad = set(r) - {"pattern", "weights", "packed"}
+            bad = set(r) - {"pattern", "weights", "packed", "bypass"}
             if bad or "pattern" not in r:
                 raise ValueError(
                     f"malformed precision rule {r!r}: "
                     + (f"unknown keys {sorted(bad)}" if bad
                        else "missing 'pattern'"))
         rules = tuple(
+            LayerRule(r["pattern"], None, bypass=True)
+            if r.get("bypass") else
             _rule(r["pattern"], r.get("weights"),
                   packed=bool(r.get("packed", False)))
             for r in d.get("rules", ()))
@@ -255,9 +278,11 @@ def get_precision_policy(name_or_spec: str,
 
     Spec grammar: comma-separated ``pattern=fmt[@es][:packed]`` entries,
     applied in order (first match wins); ``@es`` overrides the exponent size
-    (``parse_fmt_token``).  ``base`` (when given) supplies every non-weight
-    role — e.g. the serving ``--policy`` keeps its kv_cache/compute_dtype
-    while the precision policy schedules the weights.
+    (``parse_fmt_token``).  ``pattern=float`` is the bypass spelling (the
+    layer skips weight quantization — the degradation ladder's last rung).
+    ``base`` (when given) supplies every non-weight role — e.g. the serving
+    ``--policy`` keeps its kv_cache/compute_dtype while the precision policy
+    schedules the weights.
     """
     if name_or_spec.startswith("@"):
         pol = _load_policy_file(name_or_spec[1:])
@@ -278,7 +303,12 @@ def get_precision_policy(name_or_spec: str,
         fmt, _, mod = fmt.partition(":")
         if mod not in ("", "packed"):
             raise ValueError(f"unknown rule modifier {mod!r} in {part!r}")
-        rules.append(LayerRule(pattern.strip(), parse_fmt_token(fmt),
-                               packed=mod == "packed"))
+        if fmt.strip() == "float":
+            if mod:
+                raise ValueError(f"float bypass takes no modifier: {part!r}")
+            rules.append(LayerRule(pattern.strip(), None, bypass=True))
+        else:
+            rules.append(LayerRule(pattern.strip(), parse_fmt_token(fmt),
+                                   packed=mod == "packed"))
     return PrecisionPolicy(base=base if base is not None else TransPolicy(),
                            rules=tuple(rules), name=name_or_spec)

@@ -1,3 +1,6 @@
 from repro.ft.runtime import (  # noqa: F401
     FaultTolerantLoop, PreemptionSignal, StragglerMonitor, with_retries,
 )
+from repro.ft.serving import (  # noqa: F401
+    DegradationController, EngineSnapshotter, FaultPlan, next_rung,
+)

@@ -23,6 +23,7 @@ may target any mesh; ``load_checkpoint(shardings=...)`` re-lays-out every leaf
 from __future__ import annotations
 
 import dataclasses
+import random
 import signal
 import threading
 import time
@@ -32,9 +33,23 @@ from repro.checkpoint.ckpt import CheckpointManager
 
 
 def with_retries(fn: Callable, *, retries: int = 3, base_delay: float = 0.5,
-                 retryable=(RuntimeError, OSError), on_retry=None):
-    """Call fn(); on retryable failure, back off and retry."""
+                 max_delay: float = 30.0,
+                 retryable=(RuntimeError, OSError), on_retry=None,
+                 jitter: bool = True, rng: Optional[random.Random] = None):
+    """Call fn(); on retryable failure, back off and retry.
+
+    ``retryable`` is an exception *allowlist*: only those types are retried —
+    a ``KeyboardInterrupt`` or ``AssertionError`` (a bug, not a transient)
+    propagates on the first throw.  Backoff is exponential with decorrelated
+    jitter (AWS architecture-blog style): each sleep is drawn uniformly from
+    ``[base_delay, 3 * previous_sleep]``, capped at ``max_delay`` — a fleet
+    of retrying hosts decorrelates instead of thundering in lockstep.
+    ``jitter=False`` keeps the deterministic ``base_delay * 2**attempt``
+    schedule (tests); ``rng`` pins the jitter stream.
+    """
     attempt = 0
+    sleep = base_delay
+    draw = (rng or random).uniform
     while True:
         try:
             return fn()
@@ -44,7 +59,12 @@ def with_retries(fn: Callable, *, retries: int = 3, base_delay: float = 0.5,
                 raise
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(base_delay * (2 ** (attempt - 1)))
+            if jitter:
+                sleep = min(max_delay, draw(base_delay, max(sleep * 3.0,
+                                                            base_delay)))
+            else:
+                sleep = min(max_delay, base_delay * (2 ** (attempt - 1)))
+            time.sleep(sleep)
 
 
 class PreemptionSignal:

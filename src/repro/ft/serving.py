@@ -1,0 +1,332 @@
+"""Fault-tolerant serving plane (DESIGN.md §13).
+
+Three components wired into ``ContinuousBatchingEngine``:
+
+* :class:`EngineSnapshotter` — cadenced crash-safe snapshots of the *full*
+  engine state (ragged posit KV cache, slot grid, sampler RNG key, emitted-
+  token buffers, pending queue) through ``CheckpointManager``'s async worker.
+  A killed process restores via :meth:`EngineSnapshotter.restore_into` and
+  every in-flight stream continues **bit-identically**: the snapshot stores
+  raw posit code arrays (never re-encoded — ``fmt=None``) plus the PRNG key
+  data, and the engine restores into the same compiled executables.
+* :class:`FaultPlan` — deterministic chaos: stall a decode step (exercises
+  ``StragglerMonitor``), inject posit NaR codes into a slot's live KV rows
+  (exercises the quarantine + degradation path), raise preemption mid-stream
+  (SIGTERM or in-process flag; exercises drain-then-snapshot), and fail
+  checkpoint IO N times (exercises ``with_retries`` inside the manager).
+  Faults trigger on ``engine.steps`` so runs are reproducible.
+* :class:`DegradationController` — the engine's ``watchdog``: consumes the
+  ``NumericsWatcher`` health rows after each drift check and, for any site
+  with a *fresh* breach (NaR rate over limit, or drift over threshold),
+  steps that site one rung down the precision-escalation ladder
+
+      packed-p8  ->  p8  ->  p16  ->  float bypass
+
+  applied as an exact-path :class:`LayerRule` overlay prepended to the
+  serving :class:`PrecisionPolicy` and hot-swapped via
+  ``engine.apply_policy`` (weight formats only — the KV-cache format is
+  pinned, so the live cache stays valid).  Every step emits a kind-tagged
+  event (``nar`` / ``drift``) for the operator log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.core.policy import LayerRule, PrecisionPolicy
+from repro.core.types import PositFmt
+
+__all__ = ["EngineSnapshotter", "FaultPlan", "DegradationController",
+           "next_rung"]
+
+
+# ---------------------------------------------------------------- snapshots ----
+
+class EngineSnapshotter:
+    """Cadenced async engine snapshots + restore, over ``CheckpointManager``.
+
+    ``on_step(engine)`` (called by the engine at the end of every decode
+    step) saves when ``engine.steps`` crosses the cadence; :meth:`force`
+    saves unconditionally and blocks until durable (the preemption drain
+    path).  Snapshots are stored raw (``fmt=None``): re-encoding the KV
+    codes through a checkpoint codec would round-trip them and break the
+    bit-identical-continuation contract.
+    """
+
+    def __init__(self, ckpt_dir: str, *, every: int = 256, keep: int = 3,
+                 metrics=None, retries: int = 2,
+                 retry_base_delay: float = 0.05, pre_save=None):
+        if every < 1:
+            raise ValueError(f"snapshot cadence must be >= 1, got {every}")
+        self.every = every
+        self.metrics = metrics
+        self.mgr = CheckpointManager(
+            ckpt_dir, keep=keep, fmt=None, metrics=metrics,
+            retries=retries, retry_base_delay=retry_base_delay,
+            pre_save=pre_save)
+        self.saves = 0
+        self._last_step = None     # dedupe: force() then on_step() same step
+        self._m_restore_s = None
+        if metrics is not None:
+            self._m_restore_s = metrics.histogram(
+                "snapshot_restore_s", "wall time of one engine restore")
+
+    def on_step(self, engine) -> None:
+        if engine.steps % self.every == 0 and engine.steps != self._last_step:
+            self.save(engine)
+
+    def save(self, engine) -> None:
+        """Queue an async snapshot of the engine's current state."""
+        snap = engine.snapshot()
+        self.mgr.save_async(engine.steps, snap["arrays"],
+                            extra={"meta": snap["meta"]})
+        self.saves += 1
+        self._last_step = engine.steps
+
+    def force(self, engine) -> None:
+        """Snapshot now and block until it is durable on disk."""
+        self.save(engine)
+        self.mgr.wait()
+
+    def restore_into(self, engine, *, now: float = 0.0) -> bool:
+        """Restore the newest durable snapshot into ``engine``.
+
+        Returns False when the directory holds no checkpoint (fresh start).
+        The engine must already be constructed with the same model / policy /
+        grid — restore asserts the config fingerprint.
+        """
+        t0 = time.perf_counter()
+        got = self.mgr.restore_or_none(engine.snapshot_like())
+        if got is None:
+            return False
+        arrays, manifest = got
+        engine.restore({"arrays": arrays, "meta": manifest["extra"]["meta"]},
+                       now=now)
+        if self._m_restore_s is not None:
+            self._m_restore_s.observe(time.perf_counter() - t0)
+        return True
+
+    def wait(self) -> None:
+        self.mgr.wait()
+
+    def close(self) -> None:
+        self.mgr.close()
+
+
+# ----------------------------------------------------------- fault injection ----
+
+def _nar_code(leaf):
+    """The value that decodes to NaR/NaN for one KV leaf dtype.
+
+    KV code arrays are uint8 (p8: NaR = 0x80) or uint16 (p16: NaR = 0x8000);
+    a float KV cache (posit disabled) takes NaN directly.
+    """
+    if leaf.dtype == jnp.uint8:
+        return jnp.uint8(0x80)
+    if leaf.dtype == jnp.uint16:
+        return jnp.uint16(0x8000)
+    return jnp.asarray(jnp.nan, leaf.dtype)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic chaos schedule, keyed on ``engine.steps``.
+
+    Pass as ``ContinuousBatchingEngine(faults=...)``; the engine calls
+    :meth:`on_step` at the top of every decode step (before the decode
+    executes, so an injected NaR is live in that step's computation).  Use
+    :meth:`ckpt_pre_save` as ``EngineSnapshotter(pre_save=...)`` to make the
+    next ``ckpt_fail_times`` checkpoint save attempts raise ``OSError``.
+
+    Each trigger fires once; ``fired`` logs what happened when.
+    """
+
+    # stall: sleep stall_s before the decode at step stall_at_step
+    stall_at_step: Optional[int] = None
+    stall_s: float = 0.0
+    # NaR injection: poison nar_count KV positions of slot nar_slot
+    nar_at_step: Optional[int] = None
+    nar_slot: int = 0
+    nar_count: int = 4
+    # preemption: SIGTERM to self (needs PreemptionSignal(install_sigterm=
+    # True) in the process) or a direct flag via the preemption object
+    preempt_at_step: Optional[int] = None
+    use_sigterm: bool = False
+    preemption: Optional[object] = None
+    # checkpoint IO: next N save attempts raise OSError (consumed by
+    # ckpt_pre_save, wired through CheckpointManager's pre_save hook)
+    ckpt_fail_times: int = 0
+    fired: List[dict] = dataclasses.field(default_factory=list)
+
+    def on_step(self, engine) -> None:
+        step = engine.steps
+        if self.stall_at_step is not None and step == self.stall_at_step:
+            self.stall_at_step = None
+            self.fired.append({"kind": "stall", "step": step,
+                               "stall_s": self.stall_s})
+            time.sleep(self.stall_s)
+        if self.nar_at_step is not None and step == self.nar_at_step:
+            self.nar_at_step = None
+            self.fired.append({"kind": "nar", "step": step,
+                               "slot": self.nar_slot, "count": self.nar_count})
+            engine.cache = self.inject_nar(engine.cache, self.nar_slot,
+                                           int(engine.lens[self.nar_slot]))
+        if self.preempt_at_step is not None and step == self.preempt_at_step:
+            self.preempt_at_step = None
+            self.fired.append({"kind": "preempt", "step": step,
+                               "sigterm": self.use_sigterm})
+            if self.use_sigterm:
+                os.kill(os.getpid(), signal.SIGTERM)
+            elif self.preemption is not None:
+                self.preemption.preempt()
+
+    def inject_nar(self, cache, slot: int, row_len: int):
+        """Overwrite the first ``nar_count`` occupied KV positions of
+        ``slot`` with NaR codes, in every layer's K and V."""
+        from repro.launch.engine import _slot_index, map_kv_rows
+
+        n = max(1, min(self.nar_count, max(row_len, 1)))
+
+        def poison(keys, leaf):
+            idx = _slot_index(leaf, slot)
+            row = leaf[idx]                     # (..., H, S, hd) or (H, S, hd)
+            s_ax = row.ndim - 2                 # sequence axis of the row
+            sl = [slice(None)] * row.ndim
+            sl[s_ax] = slice(0, n)
+            row = row.at[tuple(sl)].set(_nar_code(leaf))
+            return leaf.at[idx].set(row)
+        return map_kv_rows(cache, poison)
+
+    def ckpt_pre_save(self, step: int) -> None:
+        """``CheckpointManager(pre_save=...)`` hook: fail the next
+        ``ckpt_fail_times`` save attempts with ``OSError``."""
+        if self.ckpt_fail_times > 0:
+            self.ckpt_fail_times -= 1
+            self.fired.append({"kind": "ckpt_fail", "step": step})
+            raise OSError(f"injected checkpoint IO failure (step {step})")
+
+
+# ------------------------------------------------------- graceful degradation ----
+
+def next_rung(fmt: Optional[PositFmt], packed: bool):
+    """One step down the precision-escalation ladder.
+
+    Returns ``(fmt, packed, bypass)`` for the next-wider configuration, or
+    ``None`` when already at float (nothing wider exists):
+
+        packed-p8 -> p8 -> p16 -> float bypass
+    """
+    if fmt is None:
+        return None                              # already float
+    if fmt.nbits == 8 and packed:
+        return (fmt, False, False)               # unpack: full-width p8 words
+    if fmt.nbits == 8:
+        return (PositFmt(16, max(fmt.es, 1)), False, False)
+    return (None, False, True)                   # p16 -> float bypass
+
+
+class DegradationController:
+    """Numerics-driven precision escalation (the engine ``watchdog``).
+
+    ``maybe_degrade(engine)`` runs after every drift check.  A site breaches
+    when its *fresh* health row (``check_id == watcher.checks`` — stale rows
+    from quiet windows never re-trigger) shows ``nar_rate`` over
+    ``nar_rate_limit`` or a drift score over its calibrated threshold.  Each
+    breach steps that one site down the ladder; unaffected sites keep their
+    formats.  The overlay is an exact-path rule *prepended* to the policy's
+    rule list, so it wins over the original schedule but leaves it intact.
+    """
+
+    def __init__(self, watcher, *, nar_rate_limit: float = 0.0,
+                 max_rungs: int = 4, on_event: Optional[Callable] = None,
+                 metrics=None):
+        self.watcher = watcher
+        self.nar_rate_limit = nar_rate_limit
+        self.max_rungs = max_rungs
+        self.on_event = on_event
+        self.metrics = metrics
+        self.events: List[dict] = []
+        self._overrides: Dict[str, LayerRule] = {}   # site path -> live rule
+        self._rungs: Dict[str, int] = {}             # site path -> steps taken
+        self._last_check = 0
+
+    def _breach_kind(self, h) -> Optional[str]:
+        if h.nar_rate > self.nar_rate_limit:
+            return "nar"
+        if h.drifted:
+            return "drift"
+        return None
+
+    def maybe_degrade(self, engine) -> int:
+        """Step every freshly-breached site one rung; returns #sites stepped."""
+        w = self.watcher
+        if w.checks == self._last_check:
+            return 0
+        self._last_check = w.checks
+        stepped = 0
+        for path, h in sorted(w.health.items()):
+            if h.check_id != w.checks:
+                continue                 # stale row: no traffic this window
+            kind = self._breach_kind(h)
+            if kind is None or self._rungs.get(path, 0) >= self.max_rungs:
+                continue
+            if self._step_site(engine, path, kind, h):
+                stepped += 1
+        if stepped:
+            engine.apply_policy(self._overlaid(engine.policy))
+        return stepped
+
+    def _current(self, engine, path):
+        """(fmt, packed) the site currently runs under."""
+        pol = engine.policy
+        resolve = getattr(pol, "policy_for", None)
+        site = resolve(path) if resolve is not None else pol
+        return site.weights, bool(getattr(site, "pack_weights", False))
+
+    def _step_site(self, engine, path: str, kind: str, h) -> bool:
+        fmt, packed = self._current(engine, path)
+        rung = next_rung(fmt, packed)
+        if rung is None:
+            return False                 # already at float: nowhere to go
+        new_fmt, new_packed, bypass = rung
+        self._overrides[path] = (
+            LayerRule(path, None, bypass=True) if bypass
+            else LayerRule(path, new_fmt, packed=new_packed))
+        self._rungs[path] = self._rungs.get(path, 0) + 1
+        ev = {"kind": kind, "site": path,
+              "from": f"{fmt.name}{'(packed)' if packed else ''}"
+                      if fmt else "float",
+              "to": "float" if bypass
+                    else f"{new_fmt.name}{'(packed)' if new_packed else ''}",
+              "step": engine.steps, "check_id": h.check_id,
+              "nar_rate": h.nar_rate, "drift_score": h.drift_score}
+        self.events.append(ev)
+        if self.metrics is not None:
+            self.metrics.counter(
+                "degradations",
+                "precision-ladder steps, by trigger kind").inc(label=kind)
+            self.metrics.gauge(
+                "degraded_sites",
+                "sites running wider than their scheduled format").set(
+                    len(self._overrides))
+        if self.on_event is not None:
+            self.on_event(ev)
+        return True
+
+    def _overlaid(self, policy) -> PrecisionPolicy:
+        """The serving policy with the live overrides prepended."""
+        if not isinstance(policy, PrecisionPolicy):
+            policy = PrecisionPolicy(base=policy, name="degraded")
+        base_rules = tuple(r for r in policy.rules
+                           if r.pattern not in self._overrides)
+        return dataclasses.replace(
+            policy, rules=tuple(self._overrides.values()) + base_rules,
+            name=policy.name if policy.name.endswith("+degraded")
+            else policy.name + "+degraded")

@@ -56,10 +56,25 @@ class Request:
     prompt: np.ndarray              # (prompt_len,) int32 token ids
     max_new_tokens: int = 16
     arrival_time: float = 0.0       # seconds since engine start
+    deadline_s: Optional[float] = None  # wall-clock budget from admission
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    def to_json(self) -> dict:
+        return {"rid": self.rid, "prompt": np.asarray(self.prompt).tolist(),
+                "max_new_tokens": self.max_new_tokens,
+                "arrival_time": self.arrival_time,
+                "deadline_s": self.deadline_s}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Request":
+        return cls(rid=int(d["rid"]),
+                   prompt=np.asarray(d["prompt"], np.int32),
+                   max_new_tokens=int(d["max_new_tokens"]),
+                   arrival_time=float(d["arrival_time"]),
+                   deadline_s=d.get("deadline_s"))
 
 
 @dataclasses.dataclass
@@ -72,7 +87,8 @@ class Completion:
     admitted_time: float
     finished_time: float
     token_times: list               # absolute emission time of each token
-    finish_reason: str = ""         # eos | max_new | cache_full | cancel
+    # eos | max_new | cache_full | cancel | numerics | timeout
+    finish_reason: str = ""
 
     @property
     def queue_s(self) -> float:
@@ -87,6 +103,13 @@ class Completion:
         """Inter-token latencies (first token measured from admission)."""
         starts = [self.admitted_time] + self.token_times[:-1]
         return [t - s for s, t in zip(starts, self.token_times)]
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Completion":
+        return cls(**d)
 
 
 def poisson_requests(n: int, *, arrival_rate: float, prompt_lens=(16, 24, 32),
@@ -109,6 +132,48 @@ def poisson_requests(n: int, *, arrival_rate: float, prompt_lens=(16, 24, 32),
             rid=i, prompt=rng.integers(0, vocab, (plen,)).astype(np.int32),
             max_new_tokens=max_new_tokens, arrival_time=t))
     return reqs
+
+
+#: Cache containers whose ``k``/``v`` leaves are KV code arrays (shared with
+#: serve.py's byte accounting and the ft fault-injection plane).
+KV_CONTAINERS = ("kv", "shared_kv", "self", "cross")
+
+
+def _slot_index(leaf, slot):
+    """Index tuple selecting row ``slot`` of a KV leaf.
+
+    KV code arrays come in two layouts: ``(B, H, S, hd)`` (per-layer list —
+    gemma3 / zamba shared_kv / encdec) and ``(L, B, H, S, hd)`` (a vmapped
+    layer stack).  The batch axis is 0 or 1 by rank.
+    """
+    return (slice(None), slot) if leaf.ndim == 5 else (slot,)
+
+
+def map_kv_rows(cache, fn):
+    """Apply ``fn(path_keys, leaf)`` to every K/V code leaf; other leaves
+    pass through.  The traversal knows which leaves are KV (``k``/``v``
+    inside a KV container) so callers (slot scrub, NaR fault injection)
+    don't re-derive the cache layout."""
+    def visit(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        if keys and keys[-1] in ("k", "v") \
+                and any(k in KV_CONTAINERS for k in keys[:-1]):
+            return fn(keys, leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def scrub_slot(cache, slot: int):
+    """Zero the KV rows of ``slot`` (quarantine): a slot evicted for
+    nonfinite logits leaves NaR codes in its cache rows, and the decode grid
+    keeps computing over *every* row — without the scrub the dead row would
+    feed NaN activations into the numerics probes forever (and re-trip the
+    degradation ladder on healthy traffic).  Code 0 decodes to exact 0.0 in
+    every posit format, so the scrubbed row is numerically inert."""
+    def zero(keys, leaf):
+        return leaf.at[_slot_index(leaf, slot)].set(
+            jnp.zeros((), leaf.dtype))
+    return map_kv_rows(cache, zero)
 
 
 def _write_slot(full, one, slot):
@@ -154,7 +219,10 @@ class ContinuousBatchingEngine:
                  eos_id: Optional[int] = None, temperature: float = 0.0,
                  top_k: int = 0, seed: int = 0,
                  prefill_kwargs: Optional[Callable] = None,
-                 metrics=None, tracer=None, numerics=None):
+                 metrics=None, tracer=None, numerics=None,
+                 snapshotter=None, faults=None, watchdog=None,
+                 deadline_s: Optional[float] = None,
+                 check_every_probes: int = _CHECK_EVERY_PROBES):
         if model.prefill is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no prefill entry point")
@@ -166,12 +234,32 @@ class ContinuousBatchingEngine:
         self._prefill_kwargs = prefill_kwargs or (lambda req: {})
         # observability sinks (all optional; None = feature off, zero cost)
         self.metrics, self.tracer, self.numerics = metrics, tracer, numerics
+        # fault-tolerance plane (repro.ft.serving, DESIGN.md §13): cadenced
+        # crash-safe snapshots, chaos injection under test/bench control, the
+        # numerics-driven degradation watchdog, per-request deadlines
+        self.snapshotter, self.faults, self.watchdog = \
+            snapshotter, faults, watchdog
+        self.deadline_s = deadline_s
+        self.check_every_probes = check_every_probes
         if tracer is not None:
             tracer.label_track(0, "engine")
             for s in range(max_slots):
                 tracer.label_track(s + 1, f"slot {s}")
         self._init_state(seed)
+        self._build_executables(policy)
+        # the pre-write cache is donated too: admission must not copy the
+        # whole S_max cache to update one row
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
 
+    def _build_executables(self, policy) -> None:
+        """(Re)build the jitted decode/prefill programs for ``policy``.
+
+        Called at init and by :meth:`apply_policy` when the degradation
+        watchdog widens a site's weight format — the KV-cache layout lives on
+        the policy *base*, which overlays never touch, so the live cache
+        stays valid across a swap.
+        """
+        model, S_max = self.model, self.S_max
         # the cache is donated: decode updates the KV buffers in place
         # instead of copying S_max-sized arrays every step (the engine never
         # reads a pre-step cache again; on backends without donation support
@@ -184,18 +272,33 @@ class ContinuousBatchingEngine:
         # bake into this executable only — the plain step stays probe-free
         # and the probe cost amortizes over the cadence (DESIGN.md §12)
         self._decode_probed = None
-        if numerics is not None:
+        if self.numerics is not None:
             self._decode_probed = jax.jit(
                 lambda p, t, c: model.decode_step(p, t, c, policy),
                 donate_argnums=(2,))
-        # the pre-write cache is donated too: admission must not copy the
-        # whole S_max cache to update one row
-        self._write = jax.jit(_write_slot, donate_argnums=(0,))
         # compiled per distinct prompt length (admission is on the serving
         # critical path; drivers bucket prompt lengths to bound retraces)
         self._prefill = jax.jit(
             lambda p, toks, kw: model.prefill(p, toks, policy,
                                               S_max=S_max, **kw))
+
+    def apply_policy(self, policy) -> None:
+        """Swap the serving policy mid-flight (degradation ladder step).
+
+        Only weight-format overlays are legal: the KV-cache format must be
+        unchanged, or the live cache's code arrays would be reinterpreted
+        under the wrong codec.
+        """
+        old_kv = getattr(self.policy, "kv_cache", None)
+        new_kv = getattr(policy, "kv_cache", None)
+        if (old_kv is None) != (new_kv is None) or \
+                (old_kv is not None and old_kv.name != new_kv.name):
+            raise ValueError(
+                f"apply_policy may not change the KV-cache format "
+                f"({old_kv} -> {new_kv}); only weight overlays are hot-"
+                f"swappable")
+        self.policy = policy
+        self._build_executables(policy)
 
     def _init_state(self, seed: int) -> None:
         self._key = jax.random.key(seed)
@@ -211,6 +314,8 @@ class ContinuousBatchingEngine:
         self.queue: list = []          # pending Requests (FIFO)
         self.completions: list = []
         self.steps = 0                 # decode steps executed
+        self.last_now = 0.0            # newest clock value seen (snapshots
+        #                                rebase restored timestamps on it)
         # rolling decode-rate window (created lazily; survives _init_state
         # only via the registry's own histograms — the window restarts)
         self._tok_rate = None
@@ -248,6 +353,109 @@ class ContinuousBatchingEngine:
         flip a near-tied greedy argmax; within one engine the comparison is
         deterministic."""
         self._init_state(seed)
+
+    # ----------------------------------------------------- snapshot/restore --
+    def snapshot(self) -> dict:
+        """Full engine state as ``{"arrays": pytree, "meta": json-able}``.
+
+        ``arrays`` is everything device-resident (the ragged posit KV cache,
+        per-slot last tokens, the sampler PRNG key as raw key data) — a
+        checkpointable pytree.  ``meta`` is the host bookkeeping: slot grid
+        (lens, active, admitted stamps), emitted-token buffers, the in-flight
+        request per slot, the pending queue, finished completions, and the
+        step/probe counters.  Together they are sufficient for
+        :meth:`restore` to continue every stream **bit-identically** (same
+        policy + same executables + same RNG ⇒ same tokens — posit codecs
+        are deterministic, so the restored KV codes replay exactly).
+        """
+        meta = {
+            "version": 1,
+            "steps": self.steps,
+            "last_now": self.last_now,
+            "lens": self.lens.tolist(),
+            "active": [bool(a) for a in self.active],
+            "slot_admitted": self.slot_admitted.tolist(),
+            "slot_tokens": [list(t) for t in self.slot_tokens],
+            "slot_token_times": [list(t) for t in self.slot_token_times],
+            "slots": [r.to_json() if r is not None else None
+                      for r in self.slot_req],
+            "queue": [r.to_json() for r in self.queue],
+            "completions": [c.to_json() for c in self.completions],
+            "probes": self.numerics.probes if self.numerics else 0,
+            # config fingerprint: restore asserts these match, a snapshot
+            # taken under one policy must not silently continue under another
+            "max_slots": self.max_slots,
+            "S_max": self.S_max,
+            "policy": self.policy.describe(),
+            "temperature": self.temperature,
+            "top_k": self.top_k,
+        }
+        # host copies, not live references: the decode step DONATES the cache
+        # buffers, so a snapshot holding device references would be silently
+        # invalidated by the very next step (np.array forces the copy)
+        arrays = jax.tree.map(np.array, {
+            "cache": self.cache,
+            "last_token": self.last_token,
+            "rng_key": jax.random.key_data(self._key),
+        })
+        return {"arrays": arrays, "meta": meta}
+
+    def snapshot_like(self) -> dict:
+        """The arrays pytree a checkpoint restore deserializes into (same
+        structure/shapes/dtypes as :meth:`snapshot`'s ``arrays``)."""
+        return {"cache": self.cache, "last_token": self.last_token,
+                "rng_key": jax.random.key_data(self._key)}
+
+    def restore(self, snap: dict, *, now: float = 0.0) -> None:
+        """Install a :meth:`snapshot` (possibly loaded from disk).
+
+        ``now`` rebases every restored timestamp so deadlines and latency
+        accounting keep working across a process restart: the shift maps the
+        snapshot's ``last_now`` onto the restoring clock's ``now``.
+        """
+        meta, arrays = snap["meta"], snap["arrays"]
+        if (meta["max_slots"], meta["S_max"]) != (self.max_slots, self.S_max):
+            raise ValueError(
+                f"snapshot grid ({meta['max_slots']} slots, S_max "
+                f"{meta['S_max']}) does not match this engine "
+                f"({self.max_slots}, {self.S_max})")
+        if meta["policy"] != self.policy.describe():
+            raise ValueError(
+                "snapshot policy does not match this engine's policy:\n"
+                f"  snapshot: {meta['policy']}\n"
+                f"  engine:   {self.policy.describe()}\n"
+                "bit-identical continuation requires the same policy")
+        shift = now - float(meta.get("last_now", 0.0))
+        self.cache = jax.tree.map(jnp.asarray, arrays["cache"])
+        self.last_token = jnp.asarray(arrays["last_token"], jnp.int32)
+        self._key = jax.random.wrap_key_data(
+            jnp.asarray(arrays["rng_key"], jnp.uint32))
+        self.steps = int(meta["steps"])
+        self.last_now = now
+        self.lens = np.asarray(meta["lens"], np.int32)
+        self.active = np.asarray(meta["active"], bool)
+        self.slot_admitted = np.asarray(meta["slot_admitted"], np.float64) \
+            + shift
+        self.slot_tokens = [list(t) for t in meta["slot_tokens"]]
+        self.slot_token_times = [[t + shift for t in ts]
+                                 for ts in meta["slot_token_times"]]
+        # requests carry arrival_time too — deadlines and queue-latency
+        # accounting measure from it, so it rebases like every other stamp
+        def _req(r):
+            req = Request.from_json(r)
+            req.arrival_time += shift
+            return req
+        self.slot_req = [_req(r) if r is not None else None
+                         for r in meta["slots"]]
+        self.queue = [_req(r) for r in meta["queue"]]
+        self.completions = [Completion.from_json(c)
+                            for c in meta["completions"]]
+        if self.numerics is not None:
+            self.numerics.probes = int(meta.get("probes", 0))
+        self._sync_lens()
+        if self.metrics is not None:
+            self.metrics.counter(
+                "engine_restores", "snapshots restored into the engine").inc()
 
     # ------------------------------------------------------------- admission --
     def submit(self, req: Request) -> None:
@@ -351,6 +559,13 @@ class ContinuousBatchingEngine:
     # --------------------------------------------------------------- decode ---
     def step(self, now: float = 0.0) -> int:
         """One decode step over the whole slot grid; returns #tokens emitted."""
+        self.last_now = max(self.last_now, now)
+        if self.faults is not None:
+            # chaos layer (repro.ft.serving.FaultPlan): may stall, inject
+            # NaR into KV pages, or raise preemption — before the decode so
+            # an injected fault is live in THIS step's computation
+            self.faults.on_step(self)
+        self._evict_expired(now)
         if not self.active.any():
             return 0
         t0 = time.perf_counter()
@@ -369,12 +584,25 @@ class ContinuousBatchingEngine:
                                                   self.cache)
         self.steps += 1
         toks = self._next_token(logits)
+        # nonfinite-logit quarantine (watchdog only — the reduction is an
+        # extra device op per step, so the bare engine never pays it): a slot
+        # whose logits went NaR is evicted as a partial Completion instead of
+        # sampling garbage, and its cache rows are scrubbed so the dead row
+        # cannot poison the shared grid or the numerics probes
+        bad = None
+        if self.watchdog is not None:
+            bad = np.asarray(jnp.any(~jnp.isfinite(logits), axis=-1))
         self.lens += 1          # mirror decode_step's per-row increment
         emitted = 0
         toks_np = np.asarray(toks)
         last_np = np.asarray(self.last_token).copy()
+        scrub = []
         for slot in range(self.max_slots):
             if not self.active[slot]:
+                continue
+            if bad is not None and bad[slot]:
+                self._evict(slot, now, "numerics")
+                scrub.append(slot)
                 continue
             tok = int(toks_np[slot])
             self.slot_tokens[slot].append(tok)
@@ -382,17 +610,57 @@ class ContinuousBatchingEngine:
             last_np[slot] = tok
             emitted += 1
             self._maybe_finish(slot, tok, now)
+        for slot in scrub:
+            self.cache = scrub_slot(self.cache, slot)
+            last_np[slot] = 0
         self.last_token = jnp.asarray(last_np)
         self._observe_step(now, t0, emitted, probed)
+        if self.snapshotter is not None:
+            self.snapshotter.on_step(self)
         return emitted
+
+    def _deadline_of(self, req) -> Optional[float]:
+        return req.deadline_s if req.deadline_s is not None else self.deadline_s
+
+    def _evict_expired(self, now: float) -> None:
+        """Per-request wall-clock deadline enforcement (measured from
+        arrival): expired in-flight slots are evicted as partial Completions
+        with ``finish_reason="timeout"``; expired queued requests are
+        retired without ever being admitted."""
+        for slot in range(self.max_slots):
+            if not self.active[slot]:
+                continue
+            d = self._deadline_of(self.slot_req[slot])
+            if d is not None and now - self.slot_req[slot].arrival_time > d:
+                self._evict(slot, now, "timeout")
+        kept = []
+        for req in self.queue:
+            d = self._deadline_of(req)
+            if d is not None and now - req.arrival_time > d:
+                self.completions.append(Completion(
+                    rid=req.rid, prompt_len=req.prompt_len, tokens=[],
+                    arrival_time=req.arrival_time, admitted_time=now,
+                    finished_time=now, token_times=[],
+                    finish_reason="timeout"))
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "requests_finished",
+                        "requests retired, by reason").inc(label="timeout")
+            else:
+                kept.append(req)
+        self.queue = kept
 
     def _observe_step(self, now: float, t0: float, emitted: int,
                       probed: bool) -> None:
         """Per-step metrics/trace feed (no device syncs beyond what step()
         already does — ``np.asarray(toks)`` blocked on the decode)."""
         if self.numerics is not None and probed \
-                and self.numerics.probes % _CHECK_EVERY_PROBES == 0:
+                and self.numerics.probes % self.check_every_probes == 0:
             self.numerics.check()
+            if self.watchdog is not None:
+                # degradation controller (repro.ft.serving): reads the fresh
+                # SiteHealth rows, may widen formats via apply_policy
+                self.watchdog.maybe_degrade(self)
         if self.metrics is not None:
             dt = time.perf_counter() - t0
             n_active = int(self.active.sum())
@@ -482,24 +750,59 @@ class ContinuousBatchingEngine:
         return False
 
     # ------------------------------------------------------------------ run ---
-    def run(self, requests: list, *, clock: Optional[Callable] = None) -> list:
+    def run(self, requests: list, *, clock: Optional[Callable] = None,
+            preemption=None, straggler=None) -> list:
         """Serve ``requests`` (sorted by arrival_time) to completion.
 
         ``clock`` defaults to wall time from the first call; arrivals are
         honored against it, so with a Poisson workload the decode batch
-        genuinely breathes (slots drain and refill mid-flight)."""
+        genuinely breathes (slots drain and refill mid-flight).
+
+        The loop also drains state already inside the engine — active slots
+        and queued requests installed by :meth:`restore` — so a resumed
+        process calls ``run([])`` (or ``run(leftover)``) and every in-flight
+        stream continues to completion.
+
+        ``preemption`` (a ``ft.PreemptionSignal``) makes the loop drain-then-
+        snapshot on SIGTERM: the in-flight step finishes, every not-yet-
+        submitted request joins the queue, a forced snapshot commits (when a
+        snapshotter is attached), and the loop exits with work left — the
+        successor process restores and finishes it.  ``straggler`` (a
+        ``ft.StragglerMonitor``) observes per-step wall times and feeds the
+        ``straggler_steps`` counter.
+        """
         pending = sorted(requests, key=lambda r: r.arrival_time)
         t0 = time.perf_counter()
         clock = clock or (lambda: time.perf_counter() - t0)
-        done_target = len(self.completions) + len(pending)
-        while len(self.completions) < done_target:
+        while pending or self.queue or self.active.any():
             now = clock()
             while pending and pending[0].arrival_time <= now:
                 self.submit(pending.pop(0))
+            if preemption is not None and preemption.triggered:
+                # graceful drain: everything not yet submitted joins the
+                # queue so the forced snapshot carries the full workload
+                for req in pending:
+                    self.submit(req)
+                pending = []
+                self.last_now = max(self.last_now, clock())
+                if self.snapshotter is not None:
+                    self.snapshotter.force(self)
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "engine_preemptions",
+                        "graceful drain-then-snapshot exits").inc()
+                break
             if self.queue and self.free_slots():
                 self.admit(clock=clock)
             if self.active.any():
+                ts = time.perf_counter()
                 self.step(now=clock())
+                if straggler is not None \
+                        and straggler.observe(time.perf_counter() - ts) \
+                        and self.metrics is not None:
+                    self.metrics.counter(
+                        "straggler_steps",
+                        "decode steps slower than the EWMA threshold").inc()
             elif pending:
                 # idle: nothing active, next request not yet arrived
                 time.sleep(min(0.001, pending[0].arrival_time - now))

@@ -68,14 +68,13 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.policy import get_precision_policy
-from repro.launch.engine import (ContinuousBatchingEngine, Request,
+from repro.launch.engine import (KV_CONTAINERS as _KV_CONTAINERS,
+                                 ContinuousBatchingEngine, Request,
                                  poisson_requests)
 from repro.launch.train import _parse_policy
 from repro.models.layers import policy_weight_bytes, quantize_params
 from repro.models.registry import build_model
 from repro.obs.metrics import percentile_ms
-
-_KV_CONTAINERS = ("kv", "shared_kv", "self", "cross")
 
 
 def cache_bytes(cache) -> int:
@@ -206,11 +205,32 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max,
         prefill_kwargs = lambda req: {"patch_embeds": patches}  # noqa: E731
 
     metrics, tracer, numerics = obs
+    # fault-tolerance plane (repro.ft.serving, DESIGN.md §13)
+    snapshotter = watchdog = preemption = straggler = None
+    if args.snapshot_every:
+        from repro.ft import EngineSnapshotter, PreemptionSignal
+        snapshotter = EngineSnapshotter(
+            args.snapshot_dir, every=args.snapshot_every, metrics=metrics)
+        # SIGTERM -> finish the in-flight step, drain, force-snapshot, exit
+        preemption = PreemptionSignal(install_sigterm=True)
+    if args.degrade:
+        from repro.ft import DegradationController
+
+        def _log_event(ev):
+            print(json.dumps({"kind": "serve/degrade", **ev}))
+        watchdog = DegradationController(numerics, metrics=metrics,
+                                         on_event=_log_event)
+    if metrics is not None:
+        from repro.ft import StragglerMonitor
+        straggler = StragglerMonitor()
+
     eng = ContinuousBatchingEngine(
         model, params, policy, max_slots=max_slots, S_max=S_max,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
         prefill_kwargs=prefill_kwargs,
-        metrics=metrics, tracer=tracer, numerics=numerics)
+        metrics=metrics, tracer=tracer, numerics=numerics,
+        snapshotter=snapshotter, watchdog=watchdog,
+        deadline_s=args.deadline_s)
 
     # warm the executables (prefill at the prompt length + the grid decode;
     # 2 steps so the numerics-probed twin AND the plain decode both compile)
@@ -225,17 +245,46 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max,
     if numerics is not None:
         numerics.rebase()   # drop the warmup probe from the drift window
     compile_s = time.perf_counter() - t0
+    if args.chaos_preempt_step is not None:
+        # attach AFTER warmup: the warmup steps run under the same step
+        # counter and must not consume the trigger
+        from repro.ft import FaultPlan
+        eng.faults = FaultPlan(preempt_at_step=args.chaos_preempt_step,
+                               use_sigterm=True)
 
-    reqs = poisson_requests(
-        n_req, arrival_rate=args.arrival_rate, prompt_lens=(args.prompt_len,),
-        max_new_tokens=args.gen, vocab=cfg.vocab, seed=args.seed)
+    # resume AFTER warmup/reset so the restored state lands in already-
+    # compiled executables and nothing of the dummy request survives
+    restored = False
+    if args.resume and snapshotter is not None:
+        restored = snapshotter.restore_into(eng, now=0.0)
+        if restored:
+            print(json.dumps({
+                "kind": "serve/resume", "steps": eng.steps,
+                "active_slots": int(eng.active.sum()),
+                "queued": len(eng.queue),
+                "done": len(eng.completions)}))
+
+    if restored:
+        # the snapshot carries the full remaining workload (a preempted run
+        # drains every unsubmitted request into the queue before saving)
+        reqs = []
+    else:
+        reqs = poisson_requests(
+            n_req, arrival_rate=args.arrival_rate,
+            prompt_lens=(args.prompt_len,),
+            max_new_tokens=args.gen, vocab=cfg.vocab, seed=args.seed)
     t0 = time.perf_counter()
-    completions = eng.run(reqs)
+    try:
+        completions = eng.run(reqs, preemption=preemption,
+                              straggler=straggler)
+    finally:
+        if snapshotter is not None:
+            snapshotter.close()    # surface any pending async save failure
     makespan = max(time.perf_counter() - t0, 1e-9)
 
     n_tokens = sum(len(c.tokens) for c in completions)
     per_tok = [t for c in completions for t in c.per_token_s()]
-    return {
+    report = {
         "mode": "continuous",
         "requests": len(completions),
         "max_slots": max_slots,
@@ -247,7 +296,15 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max,
         "p95_token_ms": percentile_ms(per_tok, 95),
         "p50_queue_ms": percentile_ms([c.queue_s for c in completions], 50),
         "sample_tokens": completions[0].tokens[:8] if completions else [],
-    }, eng.cache
+    }
+    if snapshotter is not None:
+        report["snapshots"] = snapshotter.saves
+        report["resumed"] = restored
+        report["preempted"] = bool(preemption and preemption.triggered)
+        report["in_flight_at_exit"] = int(eng.active.sum()) + len(eng.queue)
+    if watchdog is not None:
+        report["degradations"] = len(watchdog.events)
+    return report, eng.cache
 
 
 def _calibrate(args, cfg, model, params, policy):
@@ -333,6 +390,32 @@ def main(argv=None):
                          "underflow/NaR and calibration drift (requires "
                          "--continuous; baselines from @artifact or "
                          "--calibrate)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="crash-safe engine snapshot every N decode steps "
+                         "(repro.ft, DESIGN.md §13); installs a SIGTERM "
+                         "drain-then-snapshot handler (requires "
+                         "--continuous and --snapshot-dir)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="checkpoint directory for --snapshot-every/--resume")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest snapshot in --snapshot-dir and "
+                         "continue every in-flight request (bit-identical "
+                         "under the same policy/seed)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget from arrival; "
+                         "expired requests finish as partial completions "
+                         "with finish_reason=timeout")
+    ap.add_argument("--degrade", action="store_true",
+                    help="numerics-driven graceful degradation: on a fresh "
+                         "NaR/drift breach, widen that site one rung "
+                         "(packed-p8 -> p8 -> p16 -> float); requires "
+                         "--numerics-watch")
+    ap.add_argument("--chaos-preempt-step", type=int, default=None,
+                    metavar="N",
+                    help="fault injection: SIGTERM this process at decode "
+                         "step N (repro.ft.FaultPlan) — exercises the "
+                         "drain-then-snapshot path end to end; requires "
+                         "--snapshot-every")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if not args.calibrate and (args.policy_out or args.weight_byte_budget):
@@ -342,6 +425,23 @@ def main(argv=None):
     if not args.continuous and (args.trace_out or args.numerics_watch):
         ap.error("--trace-out / --numerics-watch instrument the continuous-"
                  "batching engine; add --continuous")
+    if (args.snapshot_every or args.resume) and not args.snapshot_dir:
+        ap.error("--snapshot-every / --resume need --snapshot-dir")
+    if args.resume and not args.snapshot_every:
+        ap.error("--resume needs --snapshot-every N (the resumed run keeps "
+                 "snapshotting)")
+    if args.snapshot_every and not args.continuous:
+        ap.error("--snapshot-every snapshots the continuous-batching "
+                 "engine; add --continuous")
+    if args.degrade and not args.numerics_watch:
+        ap.error("--degrade consumes the numerics watcher's health rows; "
+                 "add --numerics-watch N")
+    if args.chaos_preempt_step is not None and not args.snapshot_every:
+        ap.error("--chaos-preempt-step kills a snapshotting run; add "
+                 "--snapshot-every N (and --snapshot-dir)")
+    if args.deadline_s is not None and not args.continuous:
+        ap.error("--deadline-s is enforced by the continuous-batching "
+                 "engine; add --continuous")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -371,44 +471,49 @@ def main(argv=None):
 
     metrics, tracer, numerics = _build_observability(args, policy, drift_meta)
     rng = np.random.default_rng(args.seed)
-    if args.continuous:
-        report, cache = _serve_continuous(args, cfg, model, params, policy,
-                                          rng, S_max,
-                                          obs=(metrics, tracer, numerics))
-        n_rows = args.max_slots or args.batch
-    else:
-        report, cache = _serve_static(args, cfg, model, params, policy,
-                                      rng, S_max)
-        n_rows = args.batch
+    # telemetry flushes in finally: a crash (or an injected fault) mid-serve
+    # must still leave the metrics snapshot / trace on disk for post-mortem
+    try:
+        if args.continuous:
+            report, cache = _serve_continuous(args, cfg, model, params,
+                                              policy, rng, S_max,
+                                              obs=(metrics, tracer, numerics))
+            n_rows = args.max_slots or args.batch
+        else:
+            report, cache = _serve_static(args, cfg, model, params, policy,
+                                          rng, S_max)
+            n_rows = args.batch
 
-    if numerics is not None:
-        nrep = numerics.report()
-        print(json.dumps({"kind": "serve/numerics",
-                          "recalibrate": nrep["recalibrate"],
-                          "probes": nrep["probes"],
-                          "max_drift_score": nrep["max_drift_score"]}))
+        if numerics is not None:
+            nrep = numerics.report()
+            print(json.dumps({"kind": "serve/numerics",
+                              "recalibrate": nrep["recalibrate"],
+                              "probes": nrep["probes"],
+                              "max_drift_score": nrep["max_drift_score"]}))
+            if metrics is not None:
+                metrics.set_context(numerics=nrep)
         if metrics is not None:
-            metrics.set_context(numerics=nrep)
-    if metrics is not None:
-        metrics.set_context(arch=cfg.name, policy=policy.describe(),
-                            mode=report.get("mode") if args.continuous
-                            else "static")
-        metrics.save(args.metrics_out)
-        with open(args.metrics_out + ".prom", "w") as f:
-            f.write(metrics.prometheus())
-    if tracer is not None:
-        tracer.save(args.trace_out)
+            metrics.set_context(arch=cfg.name, policy=policy.describe(),
+                                mode=report.get("mode") if args.continuous
+                                else "static")
 
-    kv_b = kv_cache_bytes(cache)
-    print(json.dumps({
-        "kind": "serve/report",
-        "arch": cfg.name, "policy": policy.describe(),
-        **report,
-        "kv_cache_bytes": kv_b,
-        "cache_bytes_total": cache_bytes(cache),
-        "kv_bytes_per_token": kv_b // (n_rows * S_max),
-        **weight_report,
-    }))
+        kv_b = kv_cache_bytes(cache)
+        print(json.dumps({
+            "kind": "serve/report",
+            "arch": cfg.name, "policy": policy.describe(),
+            **report,
+            "kv_cache_bytes": kv_b,
+            "cache_bytes_total": cache_bytes(cache),
+            "kv_bytes_per_token": kv_b // (n_rows * S_max),
+            **weight_report,
+        }))
+    finally:
+        if metrics is not None:
+            metrics.save(args.metrics_out)
+            with open(args.metrics_out + ".prom", "w") as f:
+                f.write(metrics.prometheus())
+        if tracer is not None:
+            tracer.save(args.trace_out)
 
 
 if __name__ == "__main__":

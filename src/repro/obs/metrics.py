@@ -29,9 +29,11 @@ from __future__ import annotations
 
 import bisect
 import collections
+import contextlib
 import json
 import math
 import re
+from time import perf_counter as _perf_counter
 from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
@@ -175,6 +177,16 @@ class Histogram:
     @property
     def mean(self) -> float:
         return self.sum / self.n if self.n else 0.0
+
+    @contextlib.contextmanager
+    def time(self):
+        """Observe the wall time of a ``with`` block, in seconds (the ft
+        serving plane times snapshot save/restore through this)."""
+        t0 = _perf_counter()
+        try:
+            yield self
+        finally:
+            self.observe(_perf_counter() - t0)
 
     def to_dict(self) -> dict:
         d = {"count": self.n, "sum": self.sum, "mean": self.mean,

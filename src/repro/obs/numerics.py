@@ -169,10 +169,18 @@ class SiteHealth:
     drift_score: Optional[float]   # None: no baseline for this site
     drift_threshold: Optional[float]
     drifted: bool
+    check_id: int = 0              # watcher.checks when this row was scored
+
+    @property
+    def nar_rate(self) -> float:
+        """Nonfinite (posit NaR) fraction of the window's elements — the
+        per-site breach signal the degradation ladder steps on."""
+        return self.nonfinite / self.n if self.n > 0 else 0.0
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d.pop("path")
+        d["nar_rate"] = self.nar_rate
         return d
 
 
@@ -286,7 +294,8 @@ class NumericsWatcher:
             health[path] = SiteHealth(
                 path=path, n=cur.n, saturation_rate=sat, underflow_rate=uf,
                 nonfinite=cur.nonfinite, drift_score=score,
-                drift_threshold=thresh, drifted=drifted)
+                drift_threshold=thresh, drifted=drifted,
+                check_id=self.checks)
             st = self.observer.get(path, "act")
             self._mark[(path, "act")] = (st.n, st.hist.copy(), st.nonfinite)
         self.health.update(health)

@@ -1,0 +1,556 @@
+"""Fault-tolerant serving plane (repro.ft.serving, DESIGN.md §13).
+
+The load-bearing guarantees (ISSUE 7 acceptance):
+
+* kill mid-stream -> restore -> every in-flight request continues
+  **bit-identically** (same policy + same RNG + same executables), under
+  temperature sampling — the snapshot carries the PRNG key,
+* injected NaR trips the quarantine + precision-escalation ladder without
+  killing unaffected slots,
+* deadlines evict as partial completions; preemption drains-then-snapshots;
+  checkpoint IO failures surface promptly and retry with decorrelated
+  jitter.
+
+Bit-identity restores into the SAME engine (``reset()`` + ``restore()``):
+XLA:CPU compiles are not bit-stable across program instances, so cross-
+process resume is validated functionally by the serve.py integration test
+at the bottom (completion counts, not token bits).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_arch
+from repro.core.pcsr import TransPolicy
+from repro.core.policy import (LayerRule, PrecisionPolicy,
+                               get_precision_policy)
+from repro.core.types import PositFmt
+from repro.ft import (DegradationController, EngineSnapshotter, FaultPlan,
+                      PreemptionSignal, StragglerMonitor, next_rung,
+                      with_retries)
+from repro.launch.engine import (ContinuousBatchingEngine, Completion,
+                                 Request, poisson_requests, scrub_slot)
+from repro.models.registry import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.numerics import NumericsWatcher
+
+S_MAX = 64
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_arch("yi-34b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n, gen=10, seed=1):
+    return poisson_requests(n, arrival_rate=0.0, prompt_lens=(8,),
+                            max_new_tokens=gen, vocab=cfg.vocab, seed=seed)
+
+
+def _drain(eng, now=50.0):
+    while eng.active.any() or eng.queue:
+        if eng.queue and eng.free_slots():
+            eng.admit(now=now)
+        eng.step(now=now)
+    return {c.rid: list(c.tokens) for c in eng.completions}
+
+
+# ---------------------------------------------------------------- runtime ----
+
+def test_with_retries_allowlist():
+    """Only listed exception types are retried; bugs propagate first-throw."""
+    calls = []
+
+    def boom(exc):
+        calls.append(1)
+        raise exc
+
+    with pytest.raises(KeyboardInterrupt):
+        with_retries(lambda: boom(KeyboardInterrupt()), retries=5,
+                     base_delay=0.001)
+    assert len(calls) == 1
+    calls.clear()
+    with pytest.raises(AssertionError):
+        with_retries(lambda: boom(AssertionError("bug")), retries=5,
+                     base_delay=0.001)
+    assert len(calls) == 1
+    calls.clear()
+    with pytest.raises(ValueError):   # custom allowlist, exhausted
+        with_retries(lambda: boom(ValueError()), retries=2, base_delay=0.001,
+                     retryable=(ValueError,))
+    assert len(calls) == 3            # 1 + 2 retries
+
+
+def test_with_retries_decorrelated_jitter(monkeypatch):
+    """Jittered sleeps are drawn from [base, 3*prev], capped at max_delay."""
+    sleeps = []
+    monkeypatch.setattr(time, "sleep", lambda s: sleeps.append(s))
+    import random
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 6:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert with_retries(flaky, retries=8, base_delay=0.1, max_delay=1.0,
+                        rng=random.Random(0)) == "ok"
+    assert len(sleeps) == 5
+    prev = 0.1
+    for s in sleeps:
+        assert 0.1 <= s <= 1.0
+        assert s <= max(prev * 3.0, 0.1) + 1e-12
+        prev = s
+    assert len(set(sleeps)) > 1, "jitter must not be a fixed schedule"
+
+
+def test_with_retries_on_retry_and_deterministic():
+    seen = []
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("io")
+        return 7
+
+    assert with_retries(flaky, retries=4, base_delay=0.0, jitter=False,
+                        on_retry=lambda n, e: seen.append(n)) == 7
+    assert seen == [1, 2]
+
+
+def test_preemption_signal_real_sigterm():
+    """install_sigterm=True catches a real in-process SIGTERM."""
+    old = signal.getsignal(signal.SIGTERM)
+    try:
+        sig = PreemptionSignal(install_sigterm=True)
+        assert not sig.triggered
+        os.kill(os.getpid(), signal.SIGTERM)
+        deadline = time.time() + 5.0
+        while not sig.triggered and time.time() < deadline:
+            time.sleep(0.01)
+        assert sig.triggered
+    finally:
+        signal.signal(signal.SIGTERM, old)
+
+
+def test_straggler_monitor_threshold_edges():
+    m = StragglerMonitor(threshold=2.0, alpha=0.5)
+    assert not m.observe(1.0)            # first sample seeds the EWMA
+    assert not m.observe(1.9)            # under 2x: folded in
+    ewma = m._ewma
+    assert m.observe(ewma * 2.0 + 1e-6)  # just over: straggler
+    assert m._ewma == ewma, "outliers must not drag the baseline"
+    assert not m.observe(ewma * 2.0 - 1e-6)
+    assert m.events == 1
+
+
+# ------------------------------------------------------------- checkpoints ----
+
+def test_ckpt_manager_gc_tmp_on_init(tmp_path):
+    crash = tmp_path / "step_00000007.tmp"
+    crash.mkdir()
+    (crash / "junk").write_text("partial write")
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.gc_tmp_reaped == 1
+    assert not crash.exists()
+    mgr.close()
+
+
+def test_ckpt_manager_surfaces_failure_and_retries(tmp_path):
+    """Injected IO failures retry (counter moves); a terminal failure is
+    surfaced on metrics immediately and re-raised on the next wait()."""
+    metrics = MetricsRegistry()
+    plan = FaultPlan(ckpt_fail_times=2)   # fail twice, then succeed
+    mgr = CheckpointManager(str(tmp_path), metrics=metrics, retries=3,
+                            retry_base_delay=0.001,
+                            pre_save=plan.ckpt_pre_save)
+    mgr.save_async(1, {"x": np.arange(4)})
+    mgr.wait()                            # retried to success
+    assert metrics.counter("ckpt_save_retries").total == 2
+    assert metrics.counter("ckpt_saves").total == 1
+    assert metrics.counter("ckpt_save_errors").total == 0
+    assert metrics.gauges["ckpt_last_saved_step"].val == 1
+
+    plan.ckpt_fail_times = 10             # more failures than retries
+    mgr.save_async(2, {"x": np.arange(4)})
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        mgr.wait()
+    assert metrics.counter("ckpt_save_errors").total == 1
+    with pytest.raises(RuntimeError):
+        mgr.close()
+
+
+# ------------------------------------------------------------ policy ladder ----
+
+def test_layer_rule_bypass_resolution_and_json():
+    base = TransPolicy.from_names(weights="p8_0", kv_cache="p8_0",
+                                  pack_weights=True)
+    pol = PrecisionPolicy(base=base, rules=(
+        LayerRule("mlp/up", None, bypass=True),
+        LayerRule("*", PositFmt(8, 0), packed=True),
+    ))
+    assert pol.policy_for("blocks/mlp/up").weights is None
+    assert not pol.policy_for("blocks/mlp/up").pack_weights
+    assert pol.policy_for("blocks/mlp/gate").weights == PositFmt(8, 0)
+    assert "mlp/up->float" in pol.describe()
+    rt = PrecisionPolicy.from_json(pol.to_json())
+    assert rt.rules[0].bypass and rt.rules[0].weights is None
+    assert rt.policy_for("blocks/mlp/up").weights is None
+    with pytest.raises(ValueError):
+        LayerRule("x", PositFmt(8, 0), bypass=True)   # fmt + bypass conflict
+
+
+def test_precision_spec_float_bypass():
+    pol = get_precision_policy("attn*=p16_1,mlp/up=float,*=p8_0")
+    assert pol.rule_for("mlp/up").bypass
+    assert pol.policy_for("blocks/mlp/up").weights is None
+    with pytest.raises(ValueError):
+        get_precision_policy("mlp/up=float:packed")
+
+
+def test_next_rung_ladder():
+    p8 = PositFmt(8, 0)
+    assert next_rung(p8, True) == (p8, False, False)          # unpack
+    assert next_rung(p8, False) == (PositFmt(16, 1), False, False)
+    assert next_rung(PositFmt(16, 1), False) == (None, False, True)
+    assert next_rung(None, False) is None                     # already float
+
+
+# -------------------------------------------------------- snapshot/restore ----
+
+def test_snapshot_restore_bit_identical(dense_model):
+    """Mid-stream snapshot -> finish -> restore into the SAME engine ->
+    identical continuation tokens, under temperature sampling (the RNG key
+    rides in the snapshot)."""
+    cfg, model, params = dense_model
+    policy = TransPolicy.from_names(kv_cache="p8_0")
+    eng = ContinuousBatchingEngine(model, params, policy, max_slots=2,
+                                   S_max=S_MAX, temperature=0.7, top_k=8,
+                                   seed=3)
+    for r in _requests(cfg, 3):
+        eng.submit(r)
+    eng.admit()
+    for i in range(4):
+        eng.step(now=float(i))
+    mid = eng.snapshot()
+    truth = _drain(eng)
+    eng.reset(seed=3)
+    eng.restore(mid, now=0.0)
+    assert eng.steps == mid["meta"]["steps"]
+    replay = _drain(eng)
+    assert truth == replay
+
+
+def test_snapshot_restore_roundtrips_disk(dense_model, tmp_path):
+    """snapshotter save -> restore_into reproduces device state bit-for-bit
+    (raw npz storage: posit KV codes are never re-encoded)."""
+    cfg, model, params = dense_model
+    policy = TransPolicy.from_names(kv_cache="p8_0")
+    snap = EngineSnapshotter(str(tmp_path), every=10 ** 9)
+    eng = ContinuousBatchingEngine(model, params, policy, max_slots=2,
+                                   S_max=S_MAX, seed=0, snapshotter=snap)
+    for r in _requests(cfg, 2):
+        eng.submit(r)
+    eng.admit()
+    eng.step()
+    snap.force(eng)
+    before = eng.snapshot()
+    eng.reset(seed=0)
+    assert snap.restore_into(eng, now=0.0)
+    after = eng.snapshot()
+    assert before["meta"] == after["meta"]
+    b, a = jax.tree.leaves(before["arrays"]), jax.tree.leaves(after["arrays"])
+    assert all(np.array_equal(x, y) for x, y in zip(b, a))
+    snap.close()
+
+
+def test_restore_rejects_mismatched_config(dense_model):
+    cfg, model, params = dense_model
+    policy = TransPolicy.from_names(kv_cache="p8_0")
+    eng = ContinuousBatchingEngine(model, params, policy, max_slots=2,
+                                   S_max=S_MAX, seed=0)
+    snap = eng.snapshot()
+    wrong_grid = json.loads(json.dumps(snap["meta"]))
+    wrong_grid["max_slots"] = 5
+    with pytest.raises(ValueError, match="grid"):
+        eng.restore({"arrays": snap["arrays"], "meta": wrong_grid})
+    wrong_pol = json.loads(json.dumps(snap["meta"]))
+    wrong_pol["policy"] = "something else"
+    with pytest.raises(ValueError, match="policy"):
+        eng.restore({"arrays": snap["arrays"], "meta": wrong_pol})
+
+
+def test_request_completion_json_roundtrip():
+    req = Request(rid=4, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=7, arrival_time=1.5, deadline_s=2.0)
+    rt = Request.from_json(json.loads(json.dumps(req.to_json())))
+    assert rt.rid == 4 and rt.deadline_s == 2.0
+    assert np.array_equal(rt.prompt, req.prompt)
+    comp = Completion(rid=4, prompt_len=5, tokens=[1, 2], arrival_time=1.5,
+                      admitted_time=2.0, finished_time=3.0,
+                      token_times=[2.1, 2.2], finish_reason="timeout")
+    assert Completion.from_json(
+        json.loads(json.dumps(comp.to_json()))) == comp
+
+
+# --------------------------------------------------------------- chaos plan ----
+
+def test_nar_injection_quarantines_only_poisoned_slot(dense_model):
+    """Injected NaR: the poisoned slot quarantines (finish_reason=numerics,
+    KV rows scrubbed), unaffected slots finish their full budget, and the
+    controller steps the precision ladder."""
+    cfg, model, params = dense_model
+    base = TransPolicy.from_names(kv_cache="p8_0", compute_dtype="bf16")
+    pol = get_precision_policy("p8-packed", base=base)
+    watcher = NumericsWatcher(policy=pol, every=2)
+    metrics = MetricsRegistry()
+    dog = DegradationController(watcher, metrics=metrics)
+    plan = FaultPlan(nar_at_step=4, nar_slot=0, nar_count=4)
+    eng = ContinuousBatchingEngine(
+        model, params, pol, max_slots=3, S_max=S_MAX, seed=0,
+        numerics=watcher, faults=plan, watchdog=dog, check_every_probes=2)
+    for r in _requests(cfg, 3, gen=14):
+        eng.submit(r)
+    eng.admit()
+    comps = _drain(eng)
+    by_reason = {}
+    for c in eng.completions:
+        by_reason.setdefault(c.finish_reason, []).append(c)
+    assert len(by_reason.get("numerics", [])) == 1
+    poisoned = by_reason["numerics"][0]
+    assert 0 < len(poisoned.tokens) < 14, "partial completion expected"
+    healthy = by_reason.get("max_new", [])
+    assert len(healthy) == 2 and all(len(c.tokens) == 14 for c in healthy), \
+        "unaffected slots must serve their full budget"
+    assert plan.fired and plan.fired[0]["kind"] == "nar"
+    assert dog.events, "fresh NaR breach must step the ladder"
+    assert all(ev["kind"] == "nar" for ev in dog.events)
+    assert metrics.counter("degradations").value(label="nar") == \
+        len(dog.events)
+    # ladder rung 1: packed-p8 -> unpacked p8 on the breached sites
+    stepped_site = dog.events[0]["site"]
+    site_pol = eng.policy.policy_for(stepped_site)
+    assert site_pol.weights == PositFmt(8, 0) and not site_pol.pack_weights
+    assert comps  # silence unused warnings; everything completed
+
+
+def test_degradation_ladder_reaches_float(dense_model):
+    """Repeated fresh breaches walk one site packed-p8 -> p8 -> p16 ->
+    float bypass, then stop (nothing wider exists)."""
+    cfg, model, params = dense_model
+    base = TransPolicy.from_names(kv_cache="p8_0", compute_dtype="bf16")
+    pol = get_precision_policy("p8-packed", base=base)
+    watcher = NumericsWatcher(policy=pol, every=1)
+    dog = DegradationController(watcher)
+    eng = ContinuousBatchingEngine(
+        model, params, pol, max_slots=1, S_max=S_MAX, seed=0,
+        numerics=watcher, watchdog=dog, check_every_probes=1)
+    h_path = None
+    for rung in range(5):
+        eng.faults = FaultPlan(nar_at_step=eng.steps, nar_slot=0, nar_count=2)
+        if not eng.active.any():
+            for r in _requests(cfg, 1, gen=40):
+                eng.submit(r)
+            eng.admit()
+        eng.step()
+        if h_path is None and dog.events:
+            h_path = dog.events[0]["site"]
+    assert h_path is not None
+    transitions = [(e["from"], e["to"]) for e in dog.events
+                   if e["site"] == h_path]
+    assert ("p8_0(packed)", "p8_0") in transitions
+    assert ("p8_0", "p16_1") in transitions
+    assert ("p16_1", "float") in transitions
+    assert eng.policy.policy_for(h_path).weights is None  # bypass live
+
+
+def test_stale_health_rows_do_not_retrigger(dense_model):
+    """A breach row retained from an old check (the watcher keeps a site's
+    last readout when a window has no traffic for it) must not re-step the
+    ladder on later checks — ``check_id`` gating."""
+    from repro.obs.numerics import SiteHealth
+
+    cfg, model, params = dense_model
+    base = TransPolicy.from_names(kv_cache="p8_0", compute_dtype="bf16")
+    pol = get_precision_policy("p8-packed", base=base)
+    watcher = NumericsWatcher(policy=pol, every=1)
+    dog = DegradationController(watcher)
+    eng = ContinuousBatchingEngine(model, params, pol, max_slots=1,
+                                   S_max=S_MAX, seed=0, numerics=watcher,
+                                   watchdog=dog)
+    row = SiteHealth(path="attn/wq", n=100.0, saturation_rate=None,
+                     underflow_rate=None, nonfinite=7.0, drift_score=None,
+                     drift_threshold=None, drifted=False, check_id=1)
+    watcher.health["attn/wq"] = row
+    watcher.checks = 1
+    assert dog.maybe_degrade(eng) == 1    # fresh breach: ladder steps
+    # next check window has no traffic for the site: the row is retained
+    # with its old check_id — the controller must treat it as stale
+    watcher.checks = 2
+    assert dog.maybe_degrade(eng) == 0, \
+        "stale health row re-triggered the ladder"
+    assert len(dog.events) == 1
+
+
+def test_stall_fault_trips_straggler(dense_model):
+    cfg, model, params = dense_model
+    policy = TransPolicy.from_names(kv_cache="p8_0")
+    eng = ContinuousBatchingEngine(model, params, policy, max_slots=1,
+                                   S_max=S_MAX, seed=0)
+    mon = StragglerMonitor(threshold=3.0)
+    for r in _requests(cfg, 1, gen=12):
+        eng.submit(r)
+    eng.admit()
+    eng.step()     # compile outside the monitored window: the first step's
+    eng.step()     # jit cost would seed the EWMA and mask the stall
+    eng.faults = FaultPlan(stall_at_step=eng.steps + 2, stall_s=0.3)
+    straggled = 0
+    while eng.active.any():
+        t0 = time.perf_counter()
+        eng.step()
+        straggled += mon.observe(time.perf_counter() - t0)
+    assert [f["kind"] for f in eng.faults.fired] == ["stall"]
+    assert straggled >= 1, "the stalled step must register as a straggler"
+
+
+# ---------------------------------------------------------------- deadlines ----
+
+def test_deadline_evicts_active_and_queued(dense_model):
+    cfg, model, params = dense_model
+    policy = TransPolicy.from_names(kv_cache="p8_0")
+    eng = ContinuousBatchingEngine(model, params, policy, max_slots=1,
+                                   S_max=S_MAX, seed=0, deadline_s=5.0,
+                                   watchdog=None)
+    rng = np.random.default_rng(0)
+    mk = lambda rid, deadline=None: Request(  # noqa: E731
+        rid=rid, prompt=rng.integers(0, cfg.vocab, (6,)).astype(np.int32),
+        max_new_tokens=30, arrival_time=0.0, deadline_s=deadline)
+    eng.submit(mk(0))                 # active; engine default deadline 5s
+    eng.submit(mk(1, deadline=2.0))   # queued; per-request override 2s
+    eng.admit(now=0.0)
+    eng.step(now=1.0)
+    assert eng.active[0] and len(eng.queue) == 1
+    eng.step(now=3.0)                 # rid 1 expires in queue (2s < 3s)
+    reasons = {c.rid: c.finish_reason for c in eng.completions}
+    assert reasons.get(1) == "timeout"
+    assert [c for c in eng.completions if c.rid == 1][0].tokens == []
+    eng.step(now=6.0)                 # rid 0 expires mid-flight (5s < 6s)
+    reasons = {c.rid: c.finish_reason for c in eng.completions}
+    assert reasons.get(0) == "timeout"
+    partial = [c for c in eng.completions if c.rid == 0][0]
+    assert 0 < len(partial.tokens) < 30, "timeout keeps the partial stream"
+    assert not eng.active.any()
+
+
+# --------------------------------------------------------- preemption drain ----
+
+def test_run_preemption_drains_then_snapshots(dense_model, tmp_path):
+    """SIGTERM-style preemption mid-run: the loop exits with a forced durable
+    snapshot carrying every unfinished request; a restore + run([]) finishes
+    the workload with zero token loss vs the uninterrupted run."""
+    cfg, model, params = dense_model
+    policy = TransPolicy.from_names(kv_cache="p8_0")
+    snap = EngineSnapshotter(str(tmp_path), every=10 ** 9)
+    eng = ContinuousBatchingEngine(model, params, policy, max_slots=2,
+                                   S_max=S_MAX, temperature=0.6, top_k=8,
+                                   seed=0, snapshotter=snap)
+    reqs = lambda: _requests(cfg, 4, gen=10)  # noqa: E731
+    truth = {c.rid: list(c.tokens)
+             for c in eng.run(reqs(), clock=lambda: 0.0)}
+    eng.reset(seed=0)
+
+    sig = PreemptionSignal()
+    eng.faults = FaultPlan(preempt_at_step=3, preemption=sig)
+    done = eng.run(reqs(), clock=lambda: 0.0, preemption=sig)
+    assert sig.triggered
+    in_flight = int(eng.active.sum()) + len(eng.queue)
+    assert in_flight > 0, "preemption must land mid-workload"
+    assert len(done) < 4
+
+    eng.faults = None
+    eng.reset(seed=0)
+    assert snap.restore_into(eng, now=0.0)
+    resumed = {c.rid: list(c.tokens)
+               for c in eng.run([], clock=lambda: 0.0)}
+    assert resumed == truth, "kill/resume lost or diverged tokens"
+    snap.close()
+
+
+# ------------------------------------------------- serve.py integration ----
+
+@pytest.mark.slow
+def test_serve_kill_and_resume_integration(tmp_path):
+    """End-to-end: serve.py snapshotting run SIGTERMs itself mid-stream
+    (FaultPlan chaos flag), exits cleanly with in-flight work; a --resume
+    run restores the snapshot and finishes every request."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    snap_dir = str(tmp_path / "snaps")
+    base = [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-34b",
+            "--reduced", "--continuous", "--max-slots", "2",
+            "--requests", "4", "--prompt-len", "8", "--gen", "24",
+            "--policy", "p8-serve", "--snapshot-every", "2",
+            "--snapshot-dir", snap_dir]
+
+    def run(extra):
+        # generous timeout: two full jit compiles ride on each invocation
+        p = subprocess.run(base + extra, env=env, cwd=repo,
+                           capture_output=True, text=True, timeout=900)
+        assert p.returncode == 0, f"serve failed:\n{p.stderr[-3000:]}"
+        return [json.loads(ln) for ln in p.stdout.splitlines()
+                if ln.startswith("{")]
+
+    first = run(["--chaos-preempt-step", "6"])
+    rep1 = [d for d in first if d.get("kind") == "serve/report"][0]
+    assert rep1["preempted"] and rep1["in_flight_at_exit"] > 0
+    assert rep1["requests"] < 4
+
+    second = run(["--resume"])
+    resume = [d for d in second if d.get("kind") == "serve/resume"]
+    assert resume and resume[0]["active_slots"] + resume[0]["queued"] > 0
+    rep2 = [d for d in second if d.get("kind") == "serve/report"][0]
+    assert rep2["resumed"] and not rep2["preempted"]
+    assert rep2["requests"] == 4, "resume must finish every request"
+    assert rep2["in_flight_at_exit"] == 0
+
+
+# ----------------------------------------------------------------- helpers ----
+
+def test_scrub_slot_zeroes_only_that_slot(dense_model):
+    cfg, model, params = dense_model
+    policy = TransPolicy.from_names(kv_cache="p8_0")
+    eng = ContinuousBatchingEngine(model, params, policy, max_slots=2,
+                                   S_max=S_MAX, seed=0)
+    for r in _requests(cfg, 2, gen=6):
+        eng.submit(r)
+    eng.admit()
+    eng.step()
+    plan = FaultPlan(nar_count=3)
+    eng.cache = plan.inject_nar(eng.cache, 0, int(eng.lens[0]))
+    cache = scrub_slot(eng.cache, 0)
+
+    def rows(c, slot):
+        out = []
+        from repro.launch.engine import _slot_index, map_kv_rows
+        map_kv_rows(c, lambda keys, leaf:
+                    out.append(np.asarray(leaf[_slot_index(leaf, slot)]))
+                    or leaf)
+        return out
+    assert all((r == 0).all() for r in rows(cache, 0))
+    before1, after1 = rows(eng.cache, 1), rows(cache, 1)
+    assert all(np.array_equal(a, b) for a, b in zip(before1, after1)), \
+        "scrub must not touch other slots"
