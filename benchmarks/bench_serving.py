@@ -31,7 +31,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_arch
 from repro.core.pcsr import TransPolicy
-from repro.launch.engine import ContinuousBatchingEngine, poisson_requests
+from repro.launch.config import ServeConfig
+from repro.launch.engine import poisson_requests
 from repro.launch.serve import kv_cache_bytes
 from repro.obs.metrics import percentile_ms
 from repro.models.registry import build_model
@@ -140,8 +141,10 @@ def run(smoke: bool = False) -> None:
     n_req = 3 * slots
     gen = 8 if smoke else 16
     policy = dataclasses.replace(base, attn_impl="kernel")
-    eng = ContinuousBatchingEngine(model, params, policy, max_slots=slots,
-                                   S_max=S_max)
+    scfg = ServeConfig(arch="yi-34b", reduced=True, continuous=True,
+                       max_slots=slots, prompt_len=prompt_len,
+                       gen=S_max - prompt_len).validate()
+    eng = scfg.build_engine(model, params, policy)
     warm = poisson_requests(1, arrival_rate=0.0, prompt_lens=(prompt_len,),
                             max_new_tokens=2, vocab=cfg.vocab)
     eng.run(warm)

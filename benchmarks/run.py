@@ -42,6 +42,7 @@ BENCHES = {
     "calibration": "benchmarks.bench_calibration",     # dynamic-es calibration
     "obs_overhead": "benchmarks.bench_obs_overhead",   # §12 observability cost
     "recovery": "benchmarks.bench_recovery",           # §13 fault tolerance
+    "prefix_cache": "benchmarks.bench_prefix_cache",   # §14 paged prefix KV
 }
 
 

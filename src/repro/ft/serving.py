@@ -176,8 +176,7 @@ class FaultPlan:
             self.nar_at_step = None
             self.fired.append({"kind": "nar", "step": step,
                                "slot": self.nar_slot, "count": self.nar_count})
-            engine.cache = self.inject_nar(engine.cache, self.nar_slot,
-                                           int(engine.lens[self.nar_slot]))
+            engine.inject_nar_into(self.nar_slot, self.nar_count)
         if self.preempt_at_step is not None and step == self.preempt_at_step:
             self.preempt_at_step = None
             self.fired.append({"kind": "preempt", "step": step,
@@ -186,23 +185,6 @@ class FaultPlan:
                 os.kill(os.getpid(), signal.SIGTERM)
             elif self.preemption is not None:
                 self.preemption.preempt()
-
-    def inject_nar(self, cache, slot: int, row_len: int):
-        """Overwrite the first ``nar_count`` occupied KV positions of
-        ``slot`` with NaR codes, in every layer's K and V."""
-        from repro.launch.engine import _slot_index, map_kv_rows
-
-        n = max(1, min(self.nar_count, max(row_len, 1)))
-
-        def poison(keys, leaf):
-            idx = _slot_index(leaf, slot)
-            row = leaf[idx]                     # (..., H, S, hd) or (H, S, hd)
-            s_ax = row.ndim - 2                 # sequence axis of the row
-            sl = [slice(None)] * row.ndim
-            sl[s_ax] = slice(0, n)
-            row = row.at[tuple(sl)].set(_nar_code(leaf))
-            return leaf.at[idx].set(row)
-        return map_kv_rows(cache, poison)
 
     def ckpt_pre_save(self, step: int) -> None:
         """``CheckpointManager(pre_save=...)`` hook: fail the next

@@ -104,6 +104,56 @@ def posit_decode_attention_tiled(
     return out.reshape(B, Hq, d).astype(q.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("kv_bits", "scale"))
+def posit_decode_attention_paged(
+    q: jax.Array,            # (B, Hq, d) float
+    k_pool: jax.Array,       # (N_blocks, Hkv, bt, d) posit codes (one layer)
+    v_pool: jax.Array,       # (N_blocks, Hkv, bt, d)
+    block_table: jax.Array,  # (B, W) int32 block ids; >= N_blocks = empty
+    lengths: jax.Array,      # (B,) int32 — valid KV length per batch row
+    es,                      # int32 scalar — pcsr pes for the KV cache
+    *,
+    kv_bits: int,
+    scale: float | None = None,
+) -> jax.Array:
+    """The indirection-aware sibling of :func:`posit_decode_attention_tiled`.
+
+    Lowering: ONE batched gather de-pages each row's block-table window into
+    a contiguous ``(B, Hkv, W*bt, d)`` code view, which then runs the exact
+    tiled online-softmax above — the same compiled attention the slot grid
+    uses, at the same (wide) tile size.  The earlier lowering looped the
+    online softmax block-by-block (``bt``-sized tiles), which is the right
+    shape for a Pallas TPU kernel but ~2x slower in XLA:CPU, where 16-token
+    tiles are dispatch-dominated; hoisting the indirection into one gather
+    restores grid-path decode cost and makes warm-vs-cold bit-identity
+    structural rather than empirical.
+
+    Table entries past a row's length are sentinels (``>= N_blocks``); their
+    clamped gather reads whatever lives in an arbitrary real block, so
+    masking must silence *values*, not just scores — a recycled block can
+    hold NaR codes that decode to NaN, and ``0 * NaN`` would poison the
+    accumulator through the masked-out probability.  Zeroing the gathered
+    *codes* suffices: code 0 decodes to exact 0.0 in every posit config
+    (and is 0.0 already when ``kv_bits == 0``).
+    """
+    B = q.shape[0]
+    N, Hkv, bt, d = k_pool.shape
+    W = block_table.shape[1]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    table = jnp.minimum(jnp.asarray(block_table, jnp.int32), N - 1)
+
+    def depage(pool):
+        codes = pool[table]                        # (B, W, Hkv, bt, d)
+        codes = jnp.moveaxis(codes, 2, 1)          # (B, Hkv, W, bt, d)
+        return codes.reshape(B, Hkv, W * bt, d)
+
+    valid = (jnp.arange(W * bt)[None, :] < lengths[:, None])[:, None, :, None]
+    k_codes = jnp.where(valid, depage(k_pool), 0)
+    v_codes = jnp.where(valid, depage(v_pool), 0)
+    return posit_decode_attention_tiled(q, k_codes, v_codes, lengths, es,
+                                        kv_bits=kv_bits, scale=scale)
+
+
 def decode_attention(q, k_codes, v_codes, lengths, es, *, kv_bits,
                      scale=None, impl="auto", interpret=None, block_s=512,
                      rolling=False):

@@ -48,6 +48,21 @@ from repro.obs.trace import annotate
 #: ops per site on (NBINS,) vectors — cheap, but not per-step cheap).
 _CHECK_EVERY_PROBES = 16
 
+#: Wire-schema version of Request / Completion JSON.  Snapshots, the HTTP
+#: request plane (launch/server.py), and tests all speak this one schema;
+#: ``from_json`` rejects any other version loudly instead of best-effort
+#: parsing a shape this build never saw.  Dicts without a ``"v"`` key are
+#: read as v1 (pre-versioning snapshots).
+SCHEMA_VERSION = 1
+
+
+def _check_schema_version(d: dict, what: str) -> None:
+    v = int(d.get("v", 1))
+    if v != SCHEMA_VERSION:
+        raise ValueError(
+            f"{what} JSON declares schema v{v}; this build speaks only "
+            f"v{SCHEMA_VERSION} (refusing to guess at an unknown shape)")
+
 
 @dataclasses.dataclass
 class Request:
@@ -63,13 +78,15 @@ class Request:
         return int(self.prompt.shape[0])
 
     def to_json(self) -> dict:
-        return {"rid": self.rid, "prompt": np.asarray(self.prompt).tolist(),
+        return {"v": SCHEMA_VERSION,
+                "rid": self.rid, "prompt": np.asarray(self.prompt).tolist(),
                 "max_new_tokens": self.max_new_tokens,
                 "arrival_time": self.arrival_time,
                 "deadline_s": self.deadline_s}
 
     @classmethod
     def from_json(cls, d: dict) -> "Request":
+        _check_schema_version(d, "Request")
         return cls(rid=int(d["rid"]),
                    prompt=np.asarray(d["prompt"], np.int32),
                    max_new_tokens=int(d["max_new_tokens"]),
@@ -105,10 +122,12 @@ class Completion:
         return [t - s for s, t in zip(starts, self.token_times)]
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        return {"v": SCHEMA_VERSION, **dataclasses.asdict(self)}
 
     @classmethod
     def from_json(cls, d: dict) -> "Completion":
+        _check_schema_version(d, "Completion")
+        d = {k: v for k, v in d.items() if k != "v"}
         return cls(**d)
 
 
@@ -300,10 +319,14 @@ class ContinuousBatchingEngine:
         self.policy = policy
         self._build_executables(policy)
 
+    def _init_cache(self):
+        """Device-cache construction hook (the paged engine builds block
+        pools + a block table here instead of the dense slot grid)."""
+        return self.model.init_cache(self.max_slots, self.S_max, self.policy)
+
     def _init_state(self, seed: int) -> None:
         self._key = jax.random.key(seed)
-        self.cache = self.model.init_cache(self.max_slots, self.S_max,
-                                           self.policy)
+        self.cache = self._init_cache()
         self.lens = np.zeros((self.max_slots,), np.int32)
         self.last_token = jnp.zeros((self.max_slots,), jnp.int32)
         self.active = np.zeros((self.max_slots,), bool)
@@ -313,6 +336,9 @@ class ContinuousBatchingEngine:
         self.slot_admitted = np.zeros((self.max_slots,), np.float64)
         self.queue: list = []          # pending Requests (FIFO)
         self.completions: list = []
+        # rid -> [queue.Queue] of live stream subscribers (transient client
+        # state: never snapshotted, cleared by reset)
+        self._subs: dict = {}
         self.steps = 0                 # decode steps executed
         self.last_now = 0.0            # newest clock value seen (snapshots
         #                                rebase restored timestamps on it)
@@ -457,12 +483,125 @@ class ContinuousBatchingEngine:
             self.metrics.counter(
                 "engine_restores", "snapshots restored into the engine").inc()
 
-    # ------------------------------------------------------------- admission --
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    # ---------------------------------------------------------- client API ----
+    # The stable engine client surface (DESIGN.md §14): submit() -> rid,
+    # results()/result(rid) for finished work, subscribe()/stream(rid) for
+    # live token streams, cancel(rid).  The HTTP plane (launch/server.py),
+    # benchmarks, and tests all drive the engine through these five.
 
+    def submit(self, req: Request) -> int:
+        """Enqueue a request; returns its rid (the stream/cancel handle)."""
+        self.queue.append(req)
+        return req.rid
+
+    def results(self) -> list:
+        """All finished Completions, in finish order."""
+        return list(self.completions)
+
+    def result(self, rid: int):
+        """The Completion for ``rid``, or None while still in flight."""
+        for c in self.completions:
+            if c.rid == rid:
+                return c
+        return None
+
+    def subscribe(self, rid: int):
+        """A ``queue.Queue`` of stream events for ``rid``.
+
+        Events are dicts: ``{"event": "token", "rid", "token", "index",
+        "t"}`` per emitted token, then one ``{"event": "finish", "rid",
+        "finish_reason", "n_tokens"}``.  Anything already emitted (or a
+        finished request) is replayed first, so a subscriber attached late
+        sees the complete stream.  Queues are thread-safe: the serving
+        thread puts, a client thread gets.
+        """
+        import queue as queue_mod
+        q = queue_mod.Queue()
+        for slot in range(self.max_slots):
+            r = self.slot_req[slot]
+            if self.active[slot] and r is not None and r.rid == rid:
+                for i, (tok, t) in enumerate(zip(self.slot_tokens[slot],
+                                                 self.slot_token_times[slot])):
+                    q.put({"event": "token", "rid": rid, "token": tok,
+                           "index": i, "t": t})
+        for c in self.completions:
+            if c.rid == rid:
+                for i, (tok, t) in enumerate(zip(c.tokens, c.token_times)):
+                    q.put({"event": "token", "rid": rid, "token": tok,
+                           "index": i, "t": t})
+                q.put({"event": "finish", "rid": rid,
+                       "finish_reason": c.finish_reason,
+                       "n_tokens": len(c.tokens)})
+        self._subs.setdefault(rid, []).append(q)
+        return q
+
+    def unsubscribe(self, rid: int, q) -> None:
+        subs = self._subs.get(rid)
+        if subs and q in subs:
+            subs.remove(q)
+            if not subs:
+                del self._subs[rid]
+
+    def stream(self, rid: int, timeout: Optional[float] = None):
+        """Blocking generator over :meth:`subscribe` events; ends after the
+        finish event.  Drive the engine from another thread (or interleave
+        ``admit``/``step`` with consumption); the asyncio server bridges
+        this into ``async for`` via a worker thread."""
+        q = self.subscribe(rid)
+        try:
+            while True:
+                ev = q.get(timeout=timeout)
+                yield ev
+                if ev["event"] == "finish":
+                    return
+        finally:
+            self.unsubscribe(rid, q)
+
+    def _emit_token(self, slot: int, tok: int, t: float) -> None:
+        self.slot_tokens[slot].append(tok)
+        self.slot_token_times[slot].append(t)
+        rid = self.slot_req[slot].rid
+        for q in self._subs.get(rid, ()):
+            q.put({"event": "token", "rid": rid, "token": tok,
+                   "index": len(self.slot_tokens[slot]) - 1, "t": t})
+
+    def _finish(self, comp: Completion) -> None:
+        self.completions.append(comp)
+        for q in self._subs.get(comp.rid, ()):
+            q.put({"event": "finish", "rid": comp.rid,
+                   "finish_reason": comp.finish_reason,
+                   "n_tokens": len(comp.tokens)})
+
+    # ------------------------------------------------------------- admission --
     def free_slots(self) -> list:
         return [i for i in range(self.max_slots) if not self.active[i]]
+
+    def _can_admit(self, req: Request) -> bool:
+        """Beyond a free slot, can the cache take this request right now?
+        The slot grid always can (every slot owns S_max rows); the paged
+        engine gates on block availability (queueing is the backpressure)."""
+        return True
+
+    def _prefill_into_slot(self, req: Request, slot: int):
+        """Prefill ``req`` and install its KV into ``slot``; returns
+        ``(logits, row_len)``.  The paged engine overrides this with
+        prefix-matched block admission."""
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        with annotate("repro.prefill"):
+            logits, one_cache = self._prefill(
+                self.params, tokens, self._prefill_kwargs(req))
+        # true cache occupancy after prefill (vlm rows include the patch
+        # prefix; recurrent families report their prompt length)
+        row_len = int(one_cache["lens"][0])
+        if self.max_slots == 1:
+            # every leaf shape matches the B=1 prefill cache, so the
+            # structural scatter below would be a silent no-op — the
+            # single-request cache *is* the batch cache
+            self.cache = one_cache
+        else:
+            self.cache = self._write(self.cache, one_cache,
+                                     jnp.int32(slot))
+        return logits, row_len
 
     def admit(self, now: float = 0.0, clock: Optional[Callable] = None) -> int:
         """Prefill queued requests into free slots; returns #admitted.
@@ -477,41 +616,30 @@ class ContinuousBatchingEngine:
         for slot in self.free_slots():
             if not self.queue:
                 break
+            if not self._can_admit(self.queue[0]):
+                break       # FIFO: later requests must not starve the head
             req = self.queue.pop(0)
             t_admit = clock() if clock else now
             if req.prompt_len + req.max_new_tokens > self.S_max:
                 raise ValueError(
                     f"request {req.rid}: prompt {req.prompt_len} + "
                     f"max_new {req.max_new_tokens} exceeds S_max {self.S_max}")
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            with annotate("repro.prefill"):
-                logits, one_cache = self._prefill(
-                    self.params, tokens, self._prefill_kwargs(req))
-            # true cache occupancy after prefill (vlm rows include the patch
-            # prefix; recurrent families report their prompt length)
-            row_len = int(one_cache["lens"][0])
+            logits, row_len = self._prefill_into_slot(req, slot)
             if row_len + req.max_new_tokens > self.S_max:
                 raise ValueError(
                     f"request {req.rid}: prefill occupies {row_len} cache "
                     f"rows (incl. any prefix) + max_new "
                     f"{req.max_new_tokens} exceeds S_max {self.S_max}")
-            if self.max_slots == 1:
-                # every leaf shape matches the B=1 prefill cache, so the
-                # structural scatter below would be a silent no-op — the
-                # single-request cache *is* the batch cache
-                self.cache = one_cache
-            else:
-                self.cache = self._write(self.cache, one_cache,
-                                         jnp.int32(slot))
             tok = int(self._next_token(logits)[0])  # blocks on the prefill
             t_first = clock() if clock else now
             self.lens[slot] = row_len
             self.last_token = self.last_token.at[slot].set(tok)
             self.active[slot] = True
             self.slot_req[slot] = req
-            self.slot_tokens[slot] = [tok]
-            self.slot_token_times[slot] = [t_first]
+            self.slot_tokens[slot] = []
+            self.slot_token_times[slot] = []
             self.slot_admitted[slot] = t_admit
+            self._emit_token(slot, tok, t_first)
             self._sync_lens()
             admitted += 1
             if self.metrics is not None:
@@ -568,6 +696,9 @@ class ContinuousBatchingEngine:
         self._evict_expired(now)
         if not self.active.any():
             return 0
+        self._prepare_decode(now)
+        if not self.active.any():   # pool pressure may have evicted the rest
+            return 0
         t0 = time.perf_counter()
         probed = (self.numerics is not None
                   and self.numerics.should_probe(self.steps))
@@ -596,28 +727,56 @@ class ContinuousBatchingEngine:
         emitted = 0
         toks_np = np.asarray(toks)
         last_np = np.asarray(self.last_token).copy()
-        scrub = []
         for slot in range(self.max_slots):
             if not self.active[slot]:
                 continue
             if bad is not None and bad[slot]:
-                self._evict(slot, now, "numerics")
-                scrub.append(slot)
+                self._quarantine(slot, now)
+                last_np[slot] = 0
                 continue
             tok = int(toks_np[slot])
-            self.slot_tokens[slot].append(tok)
-            self.slot_token_times[slot].append(now)
+            self._emit_token(slot, tok, now)
             last_np[slot] = tok
             emitted += 1
             self._maybe_finish(slot, tok, now)
-        for slot in scrub:
-            self.cache = scrub_slot(self.cache, slot)
-            last_np[slot] = 0
         self.last_token = jnp.asarray(last_np)
         self._observe_step(now, t0, emitted, probed)
         if self.snapshotter is not None:
             self.snapshotter.on_step(self)
         return emitted
+
+    def _prepare_decode(self, now: float) -> None:
+        """Pre-step cache maintenance hook.  The slot grid needs none; the
+        paged engine allocates block-boundary pages, runs copy-on-write on
+        shared tails, and refreshes the device block table here."""
+
+    def _quarantine(self, slot: int, now: float) -> None:
+        """Evict a nonfinite-logit slot and neutralize its KV so the dead
+        rows cannot poison the shared grid or the numerics probes."""
+        self._evict(slot, now, "numerics")
+        self.cache = scrub_slot(self.cache, slot)
+
+    def _release_slot(self, slot: int) -> None:
+        """Per-eviction cache cleanup hook (the slot grid reuses rows as-is;
+        the paged engine drops the slot's block references)."""
+
+    def inject_nar_into(self, slot: int, count: int) -> None:
+        """Chaos hook: poison the first ``count`` occupied KV positions of
+        ``slot`` with NaR codes (``ft.FaultPlan`` dispatches here so the
+        cache layout stays with the engine that owns it)."""
+        from repro.ft.serving import _nar_code
+
+        n = max(1, min(count, max(int(self.lens[slot]), 1)))
+
+        def poison(keys, leaf):
+            idx = _slot_index(leaf, slot)
+            row = leaf[idx]                 # (..., H, S, hd) or (H, S, hd)
+            s_ax = row.ndim - 2             # sequence axis of the row
+            sl = [slice(None)] * row.ndim
+            sl[s_ax] = slice(0, n)
+            row = row.at[tuple(sl)].set(_nar_code(leaf))
+            return leaf.at[idx].set(row)
+        self.cache = map_kv_rows(self.cache, poison)
 
     def _deadline_of(self, req) -> Optional[float]:
         return req.deadline_s if req.deadline_s is not None else self.deadline_s
@@ -637,7 +796,7 @@ class ContinuousBatchingEngine:
         for req in self.queue:
             d = self._deadline_of(req)
             if d is not None and now - req.arrival_time > d:
-                self.completions.append(Completion(
+                self._finish(Completion(
                     rid=req.rid, prompt_len=req.prompt_len, tokens=[],
                     arrival_time=req.arrival_time, admitted_time=now,
                     finished_time=now, token_times=[],
@@ -707,9 +866,10 @@ class ContinuousBatchingEngine:
             finished_time=now,
             token_times=list(self.slot_token_times[slot]),
             finish_reason=reason)
-        self.completions.append(comp)
+        self._finish(comp)
         self.active[slot] = False
         self.slot_req[slot] = None
+        self._release_slot(slot)
         if self.metrics is not None:
             m = self.metrics
             m.counter("requests_finished",
@@ -743,6 +903,11 @@ class ContinuousBatchingEngine:
         for i, req in enumerate(self.queue):
             if req.rid == rid:
                 del self.queue[i]
+                # no Completion for a never-admitted request, but live
+                # streams must still terminate
+                for q in self._subs.get(rid, ()):
+                    q.put({"event": "finish", "rid": rid,
+                           "finish_reason": "cancel", "n_tokens": 0})
                 if self.metrics is not None:
                     self.metrics.counter("requests_cancelled_queued",
                                          "cancelled before admission").inc()

@@ -15,8 +15,9 @@ import json
 
 from repro.configs import get_arch, get_shape
 from repro.core.pcsr import TransPolicy
-from repro.core.policy import PRECISION_PRESETS, get_precision_policy
+from repro.core.policy import PRECISION_PRESETS
 from repro.launch import costprobe
+from repro.launch.config import ServeConfig
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops
 
 CELLS = {
@@ -104,8 +105,12 @@ def run_variant(cell: str, variant: str,
             policy = _calibrated_policy(cfg)
     if precision_policy:
         # overlay a per-layer weight schedule onto the variant's base policy
+        # (resolution shared with serve.py via ServeConfig.build_policy)
         base = policy.base if hasattr(policy, "base") else policy
-        policy = get_precision_policy(precision_policy, base=base)
+        policy, _ = ServeConfig(arch=arch, precision_policy=precision_policy,
+                                codec_impl=base.codec_impl,
+                                epilogue=base.epilogue,
+                                attn_impl=base.attn_impl).build_policy(base)
 
     # monkey-patch costprobe's binding so probe_cell sees the override
     orig = costprobe.get_arch

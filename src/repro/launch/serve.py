@@ -57,7 +57,6 @@ guessing by field names.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -66,12 +65,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch
-from repro.core.policy import get_precision_policy
-from repro.launch.engine import (KV_CONTAINERS as _KV_CONTAINERS,
-                                 ContinuousBatchingEngine, Request,
+from repro.launch.config import ServeConfig, add_cli_args, config_from_args
+from repro.launch.engine import (KV_CONTAINERS as _KV_CONTAINERS, Request,
                                  poisson_requests)
-from repro.launch.train import _parse_policy
 from repro.models.layers import policy_weight_bytes, quantize_params
 from repro.models.registry import build_model
 from repro.obs.metrics import percentile_ms
@@ -224,13 +220,10 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max,
         from repro.ft import StragglerMonitor
         straggler = StragglerMonitor()
 
-    eng = ContinuousBatchingEngine(
-        model, params, policy, max_slots=max_slots, S_max=S_max,
-        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
-        prefill_kwargs=prefill_kwargs,
+    eng = args.build_engine(
+        model, params, policy, prefill_kwargs=prefill_kwargs,
         metrics=metrics, tracer=tracer, numerics=numerics,
-        snapshotter=snapshotter, watchdog=watchdog,
-        deadline_s=args.deadline_s)
+        snapshotter=snapshotter, watchdog=watchdog)
 
     # warm the executables (prefill at the prompt length + the grid decode;
     # 2 steps so the numerics-probed twin AND the plain decode both compile)
@@ -304,6 +297,8 @@ def _serve_continuous(args, cfg, model, params, policy, rng, S_max,
         report["in_flight_at_exit"] = int(eng.active.sum()) + len(eng.queue)
     if watchdog is not None:
         report["degradations"] = len(watchdog.events)
+    if hasattr(eng, "prefix_stats"):
+        report["prefix_cache"] = eng.prefix_stats()
     return report, eng.cache
 
 
@@ -339,123 +334,28 @@ def _calibrate(args, cfg, model, params, policy):
 
 
 def main(argv=None):
+    # the CLI is generated from the ServeConfig schema (launch/config.py):
+    # one flag per field; --config loads a saved document and explicitly-
+    # passed flags override it
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--policy", default="none")
-    ap.add_argument("--continuous", action="store_true",
-                    help="continuous batching via launch/engine.py")
-    ap.add_argument("--arrival-rate", type=float, default=0.0,
-                    help="Poisson arrival rate in req/s (0 = all at t=0)")
-    ap.add_argument("--max-slots", type=int, default=None,
-                    help="decode slot grid size (default: --batch)")
-    ap.add_argument("--requests", type=int, default=None,
-                    help="number of requests to serve (default: 2*slots)")
-    ap.add_argument("--temperature", type=float, default=0.0,
-                    help="0 = greedy; >0 samples (with --top-k)")
-    ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--precision-policy", default=None,
-                    help="per-layer weight schedule: preset name, "
-                         "pattern=fmt[@es][:packed],... spec, or "
-                         "@artifact.json (core/policy.py)")
-    ap.add_argument("--calibrate", type=int, default=0, metavar="N",
-                    help="run N calibration forward passes and serve under "
-                         "the searched per-layer dynamic-es policy "
-                         "(repro.calib, DESIGN.md §11)")
-    ap.add_argument("--policy-out", default=None,
-                    help="write the calibration artifact JSON here "
-                         "(reload with --precision-policy @path)")
-    ap.add_argument("--weight-byte-budget", default=None,
-                    help="calibration search budget: absolute bytes or a "
-                         "'<mult>x' multiple of the 1-byte/weight p8 floor "
-                         "(default: the floor itself)")
-    ap.add_argument("--quantize-weights", action="store_true",
-                    help="store weights as posit codes (packed-p8 lanes "
-                         "where the policy says so) instead of fake-quant")
-    ap.add_argument("--codec-impl", default="auto", choices=("auto", "lut", "bits"))
-    ap.add_argument("--epilogue", default="fused", choices=("fused", "chained"))
-    ap.add_argument("--attn-impl", default="auto",
-                    choices=("auto", "kernel", "xla"))
-    ap.add_argument("--metrics-out", default=None,
-                    help="write the metrics snapshot JSON here (a Prometheus "
-                         "text exposition lands alongside as <path>.prom)")
-    ap.add_argument("--trace-out", default=None,
-                    help="write a Chrome-trace/Perfetto request timeline "
-                         "here (requires --continuous)")
-    ap.add_argument("--numerics-watch", type=int, default=0, metavar="N",
-                    help="probe every N-th decode step for posit saturation/"
-                         "underflow/NaR and calibration drift (requires "
-                         "--continuous; baselines from @artifact or "
-                         "--calibrate)")
-    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
-                    help="crash-safe engine snapshot every N decode steps "
-                         "(repro.ft, DESIGN.md §13); installs a SIGTERM "
-                         "drain-then-snapshot handler (requires "
-                         "--continuous and --snapshot-dir)")
-    ap.add_argument("--snapshot-dir", default=None,
-                    help="checkpoint directory for --snapshot-every/--resume")
-    ap.add_argument("--resume", action="store_true",
-                    help="restore the newest snapshot in --snapshot-dir and "
-                         "continue every in-flight request (bit-identical "
-                         "under the same policy/seed)")
-    ap.add_argument("--deadline-s", type=float, default=None,
-                    help="per-request wall-clock budget from arrival; "
-                         "expired requests finish as partial completions "
-                         "with finish_reason=timeout")
-    ap.add_argument("--degrade", action="store_true",
-                    help="numerics-driven graceful degradation: on a fresh "
-                         "NaR/drift breach, widen that site one rung "
-                         "(packed-p8 -> p8 -> p16 -> float); requires "
-                         "--numerics-watch")
-    ap.add_argument("--chaos-preempt-step", type=int, default=None,
-                    metavar="N",
-                    help="fault injection: SIGTERM this process at decode "
-                         "step N (repro.ft.FaultPlan) — exercises the "
-                         "drain-then-snapshot path end to end; requires "
-                         "--snapshot-every")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-    if not args.calibrate and (args.policy_out or args.weight_byte_budget):
-        ap.error("--policy-out / --weight-byte-budget require --calibrate N "
-                 "(they configure the calibration search; a loaded "
-                 "--precision-policy artifact is served as saved)")
-    if not args.continuous and (args.trace_out or args.numerics_watch):
-        ap.error("--trace-out / --numerics-watch instrument the continuous-"
-                 "batching engine; add --continuous")
-    if (args.snapshot_every or args.resume) and not args.snapshot_dir:
-        ap.error("--snapshot-every / --resume need --snapshot-dir")
-    if args.resume and not args.snapshot_every:
-        ap.error("--resume needs --snapshot-every N (the resumed run keeps "
-                 "snapshotting)")
-    if args.snapshot_every and not args.continuous:
-        ap.error("--snapshot-every snapshots the continuous-batching "
-                 "engine; add --continuous")
-    if args.degrade and not args.numerics_watch:
-        ap.error("--degrade consumes the numerics watcher's health rows; "
-                 "add --numerics-watch N")
-    if args.chaos_preempt_step is not None and not args.snapshot_every:
-        ap.error("--chaos-preempt-step kills a snapshotting run; add "
-                 "--snapshot-every N (and --snapshot-dir)")
-    if args.deadline_s is not None and not args.continuous:
-        ap.error("--deadline-s is enforced by the continuous-batching "
-                 "engine; add --continuous")
+    ap.add_argument("--config", default=None, metavar="CFG.json",
+                    help="ServeConfig JSON document (kind repro/serve-config"
+                         "); explicitly-passed flags override its fields")
+    add_cli_args(ap)
+    ns = ap.parse_args(argv)
+    try:
+        base = ServeConfig.load(ns.config) if ns.config else None
+        args = config_from_args(ns, base=base).validate()
+    except (ValueError, OSError) as e:
+        ap.error(str(e))
+    run(args)
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    policy = dataclasses.replace(
-        _parse_policy(args.policy),
-        codec_impl=args.codec_impl, epilogue=args.epilogue,
-        attn_impl=args.attn_impl)
-    drift_meta = None
-    if args.precision_policy:
-        policy = get_precision_policy(args.precision_policy, base=policy)
-        if args.precision_policy.startswith("@"):
-            with open(args.precision_policy[1:]) as f:
-                drift_meta = json.load(f)
+
+def run(args: ServeConfig):
+    """Serve under a validated :class:`ServeConfig` (the programmatic entry
+    point — hillclimb and tests call this with a constructed config)."""
+    cfg = args.arch_cfg()
+    policy, drift_meta = args.build_policy()
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
     if args.calibrate:
@@ -465,9 +365,7 @@ def main(argv=None):
     if args.quantize_weights:
         weight_report = policy_weight_bytes(params, policy)
         params = quantize_params(params, policy)
-    # vlm rows carry the patch prefix in the same cache — budget for it
-    S_max = args.prompt_len + args.gen + \
-        (cfg.n_patches if cfg.family == "vlm" else 0)
+    S_max = args.s_max(cfg)
 
     metrics, tracer, numerics = _build_observability(args, policy, drift_meta)
     rng = np.random.default_rng(args.seed)
@@ -506,6 +404,7 @@ def main(argv=None):
             "cache_bytes_total": cache_bytes(cache),
             "kv_bytes_per_token": kv_b // (n_rows * S_max),
             **weight_report,
+            "config": args.to_json(),
         }))
     finally:
         if metrics is not None:

@@ -26,6 +26,11 @@ class Model:
     init_cache: Callable      # serving
     prefill: Callable
     decode_step: Callable
+    # paged serving entry points (DESIGN.md §14) — None for families whose
+    # cache layout the block pool cannot express (window buffers, recurrent
+    # state, patch prefixes)
+    init_paged_cache: Callable = None
+    decode_step_paged: Callable = None
 
 
 def build_model(cfg: ModelCfg) -> Model:
@@ -61,4 +66,12 @@ def build_model(cfg: ModelCfg) -> Model:
             p, tokens, cfg, pol, **kw),
         decode_step=lambda p, tok, cache, pol: transformer.decode_step(
             p, tok, cache, cfg, pol),
+        init_paged_cache=(
+            lambda B, n_blocks, bt, width, pol: transformer.init_paged_cache(
+                cfg, B, n_blocks, bt, width, pol))
+        if cfg.family in ("dense", "moe") else None,
+        decode_step_paged=(
+            lambda p, tok, cache, pol: transformer.decode_step_paged(
+                p, tok, cache, cfg, pol))
+        if cfg.family in ("dense", "moe") else None,
     )

@@ -345,6 +345,73 @@ def init_cache(cfg: ModelCfg, B: int, S_max: int, policy: TransPolicy) -> dict:
     return cache
 
 
+def init_paged_cache(cfg: ModelCfg, B: int, n_blocks: int, block_tokens: int,
+                     table_width: int, policy: TransPolicy) -> dict:
+    """Paged serving cache (DESIGN.md §14): one block pool per layer stacked
+    on a leading L axis, a per-slot block table shared by every layer, and
+    the same ragged ``lens`` bookkeeping as the slot grid.
+
+    Only the uniform stacked-cache families page their KV: gemma3's
+    window-sized local buffers, zamba/xlstm recurrent state, and the vlm
+    patch prefix (not addressable by token ids, so block hashes cannot
+    cover it) all keep the slot grid.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"paged KV serves the uniform stacked-cache families "
+            f"(dense/moe); {cfg.family!r} keeps the slot grid")
+    acfg = attn_cfg(cfg)
+    return {
+        "kv": jax.vmap(lambda _: attn.init_paged_kv_pool(
+            n_blocks, block_tokens, acfg, policy))(jnp.arange(cfg.n_layers)),
+        # sentinel-filled: every entry out of bounds until the engine
+        # installs real tables (writes drop, reads are masked)
+        "table": jnp.full((B, table_width), n_blocks, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+        "lens": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def decode_step_paged(params: dict, token_t: jax.Array, cache: dict,
+                      cfg: ModelCfg, policy: TransPolicy) -> tuple:
+    """One token for the whole slot grid over the paged KV pool.
+
+    The same layer scan as :func:`decode_step`'s dense/moe body, with the
+    per-layer cache slice swapped for (pool slice, shared block table):
+    each row writes at ``table[b, lens[b] // bt]`` offset ``lens[b] % bt``
+    and attention gathers its tiles through the table.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"decode_step_paged: unsupported family {cfg.family!r}")
+    lens, table = cache["lens"], cache["table"]
+    x = apply_embedding(params["embed"], token_t[:, None])
+    acfg = attn_cfg(cfg)
+
+    def body(x_carry, layer):
+        p, pool = layer
+        h = apply_rmsnorm(p["ln1"], x_carry, cfg.norm_eps)
+        a, pool2 = attn.decode_attention_step_paged(
+            p["attn"], acfg, h, pool, table, lens, policy)
+        x2 = x_carry + a
+        h = apply_rmsnorm(p["ln2"], x2, cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_mod.apply_moe(
+                p["moe"], h, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, policy=policy)
+        else:
+            y = apply_swiglu(p["mlp"], h, policy)
+        return x2 + y, pool2
+
+    x, new_kv = scan_or_unroll(body, x, (params["blocks"], cache["kv"]))
+    new_cache = dict(cache)
+    new_cache["kv"] = new_kv
+    h = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, h, cfg, policy)[:, 0]
+    new_cache["pos"] = cache["pos"] + 1
+    new_cache["lens"] = lens + 1
+    return logits, new_cache
+
+
 def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                 policy: TransPolicy) -> tuple[jax.Array, dict]:
     """One token for the whole batch. token_t: (B,) int32 -> logits (B, V).

@@ -539,8 +539,7 @@ def test_scrub_slot_zeroes_only_that_slot(dense_model):
         eng.submit(r)
     eng.admit()
     eng.step()
-    plan = FaultPlan(nar_count=3)
-    eng.cache = plan.inject_nar(eng.cache, 0, int(eng.lens[0]))
+    eng.inject_nar_into(0, 3)
     cache = scrub_slot(eng.cache, 0)
 
     def rows(c, slot):

@@ -1,0 +1,66 @@
+"""The stdout protocol is versioned documentation, not an accident.
+
+Every JSON line the serving CLIs print is tagged with a ``"kind"`` key and
+documented in the DESIGN.md §14 protocol table.  These tests extract the
+kind literals from the *source* of serve.py and server.py, so adding a new
+stdout line without documenting it fails CI — the table and the code
+cannot drift apart silently.
+"""
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+EMITTERS = ["src/repro/launch/serve.py", "src/repro/launch/server.py"]
+
+_KIND = re.compile(r'"kind":\s*"([a-z0-9_/-]+)"')
+
+
+def _emitted_kinds():
+    kinds = {}
+    for rel in EMITTERS:
+        for k in _KIND.findall((ROOT / rel).read_text()):
+            kinds.setdefault(k, rel)
+    return kinds
+
+
+def test_emitters_actually_emit_kinds():
+    """Guard the guard: if the regex ever stops matching the source, the
+    documentation test below would pass vacuously."""
+    kinds = _emitted_kinds()
+    assert "serve/report" in kinds and "server/start" in kinds
+    assert len(kinds) >= 9, sorted(kinds)
+
+
+def test_every_emitted_kind_is_documented():
+    design = (ROOT / "DESIGN.md").read_text()
+    missing = {k: src for k, src in _emitted_kinds().items()
+               if f"`{k}`" not in design}
+    assert not missing, (
+        f"stdout kinds emitted but absent from the DESIGN.md §14 protocol "
+        f"table: {missing}")
+
+
+def test_documented_kinds_are_emitted():
+    """The table must not advertise lines nothing prints (stale docs are
+    worse than none).  Only rows of the protocol table are checked — the
+    fault-event kinds (`nar`, `stall`, ...) live inside serve/report's
+    payload, not on stdout lines of their own."""
+    design = (ROOT / "DESIGN.md").read_text()
+    table = re.findall(r"^\| `((?:serve|server)/[a-z0-9_-]+)` \|", design,
+                       re.MULTILINE)
+    assert table, "DESIGN.md protocol table not found"
+    emitted = set(_emitted_kinds())
+    stale = [k for k in table if k not in emitted]
+    assert not stale, f"documented but never emitted: {stale}"
+
+
+@pytest.mark.parametrize("rel", EMITTERS)
+def test_kind_lines_are_json_objects(rel):
+    """Every print() in the emitters that contains a kind tag goes through
+    json.dumps — the protocol promises parseable lines, not repr soup."""
+    src = (ROOT / rel).read_text()
+    for line_no, line in enumerate(src.splitlines(), 1):
+        if '"kind"' in line and "print(" in line:
+            assert "json.dumps" in line, (rel, line_no, line.strip())
