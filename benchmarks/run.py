@@ -27,6 +27,18 @@ import jax
 
 from benchmarks.common import drain_rows
 
+# Precision schedules each bench's run() exercises end to end, as
+# (arch, policy-spec) pairs.  Under --smoke these are pre-audited with the
+# repro.analysis jaxpr auditor before the bench is timed: a schedule that no
+# longer lowers cleanly (float dot_general at a quire-declared site, raw
+# code-tensor arithmetic, an all-dead rule list) fails the bench up front
+# instead of spending its timing budget measuring broken numerics.
+POLICY_AUDIT = {
+    "calibration": (("phi3-mini-3.8b", "p8-weights"),
+                    ("phi3-mini-3.8b", "p8-packed")),
+    "recovery": (("yi-34b", "p8-packed"),),
+}
+
 BENCHES = {
     "fig1d": "benchmarks.bench_fig1d_accuracy",        # Fig. 1(d) accuracy
     "table3": "benchmarks.bench_table3_fpu_variants",  # Table III / Fig. 4
@@ -44,6 +56,18 @@ BENCHES = {
     "recovery": "benchmarks.bench_recovery",           # §13 fault tolerance
     "prefix_cache": "benchmarks.bench_prefix_cache",   # §14 paged prefix KV
 }
+
+
+def _preaudit(name: str) -> list:
+    """Audit the bench's declared (arch, policy) pairs; return error findings."""
+    from repro.analysis.jaxpr_audit import audit_model
+    from repro.core.policy import get_precision_policy
+
+    errors = []
+    for arch, spec in POLICY_AUDIT.get(name, ()):
+        findings = audit_model(arch, get_precision_policy(spec))
+        errors += [f for f in findings if f.severity == "error"]
+    return errors
 
 
 def _call_run(mod, smoke: bool):
@@ -68,13 +92,24 @@ def main(argv=None) -> None:
     failures = []
     for name in names:
         mod_name = BENCHES[name]
-        t0 = time.time()
+        t0 = time.perf_counter()
         drain_rows()  # isolate each benchmark's rows
         ok = True
         try:
+            if args.smoke and name in POLICY_AUDIT:
+                bad = _preaudit(name)
+                if bad:
+                    for f in bad:
+                        print(f"# {name} policy audit: {f.format()}",
+                              file=sys.stderr)
+                    raise RuntimeError(
+                        f"{name}: {len(bad)} numerics-audit error(s) in its "
+                        "precision schedule — not timing a broken lowering")
+                print(f"# {name} policy audit clean "
+                      f"({time.perf_counter() - t0:.1f}s)", file=sys.stderr)
             mod = __import__(mod_name, fromlist=["run"])
             _call_run(mod, args.smoke)
-            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s", file=sys.stderr)
         except Exception:
             ok = False
             failures.append(name)
@@ -93,7 +128,7 @@ def main(argv=None) -> None:
                     # XLA fusion changes shift accuracy metrics
                     # deterministically across versions (DESIGN.md §8 note)
                     "jax": jax.__version__,
-                    "elapsed_s": round(time.time() - t0, 2),
+                    "elapsed_s": round(time.perf_counter() - t0, 2),
                     "rows": drain_rows(),
                 }, f, indent=1)
             print(f"# wrote {path}", file=sys.stderr)

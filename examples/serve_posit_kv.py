@@ -49,7 +49,7 @@ def main():
         decode = jax.jit(lambda p, t, c: model.decode_step(p, t, c, policy))
         tok = jnp.argmax(logits, -1)
         outs = [tok]
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(GEN - 1):
             logits, cache = decode(params, tok, cache)
             tok = jnp.argmax(logits, -1)
@@ -58,7 +58,7 @@ def main():
         results[name] = {
             "tokens": np.stack([np.asarray(t) for t in outs], 1).tolist(),
             "kv_bytes": cache_nbytes(cache),
-            "tok_per_s": round(B * (GEN - 1) / (time.time() - t0), 1),
+            "tok_per_s": round(B * (GEN - 1) / (time.perf_counter() - t0), 1),
         }
 
     f32 = results["f32-kv"]

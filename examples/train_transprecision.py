@@ -48,7 +48,7 @@ def train_one(policy_name: str, steps: int, batch: int, seq: int, seed: int = 0)
                                       warmup=steps // 10, total_steps=steps),
                       donate_argnums=(0, 1))
     curve = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(steps):
         params, opt, metrics = step_fn(params, opt, pipe.batch_at(step),
                                        jnp.asarray(step))
@@ -56,7 +56,7 @@ def train_one(policy_name: str, steps: int, batch: int, seq: int, seed: int = 0)
             curve.append((step, float(metrics["ce"])))
             print(f"[{policy_name}] step {step:4d} ce={curve[-1][1]:.4f}",
                   flush=True)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     return {"policy": policy_name, "n_params": int(n_params), "curve": curve,
             "final_ce": curve[-1][1], "wall_s": round(wall, 1)}
 

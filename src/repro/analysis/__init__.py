@@ -1,0 +1,28 @@
+"""repro.analysis — mechanical precision-contract checking (DESIGN.md §15).
+
+Two passes over two representations of the same program:
+
+* ``repro.analysis.lint`` — AST repo-invariant linter (rules RA001-RA006,
+  ruff-style registry, per-line ``# repro: noqa=RULE`` suppression).  The
+  invariants are the ones nearly every PR's review round has fixed by hand:
+  linear call sites missing ``path=``, ``time.time()`` on perf paths,
+  untagged stdout in ``launch/``, ``np.savez`` GIL stalls, engine mutation
+  off the drive thread, ``jnp.asarray`` aliasing of mutated host buffers.
+* ``repro.analysis.jaxpr_audit`` — numerics auditor over traced jaxprs
+  (hazards JP001-JP006): raw posit-code tensors reaching float arithmetic,
+  float ``dot_general`` at quire-declared sites, encode->decode round-trip
+  churn, f32->bf16 narrowing upstream of a reduction, ``debug_callback``
+  baked into the non-probed decode executable, and dead precision-policy
+  rules that match no layer.
+
+CLI: ``python -m repro.analysis [--json out.json] [--policy P] [--baseline
+b.json]`` — exits nonzero on new unsuppressed findings.
+"""
+from repro.analysis.base import (Finding, load_baseline, new_findings,
+                                 save_baseline)
+from repro.analysis.lint import RULES, lint_repo, lint_source, stdout_kinds
+
+__all__ = [
+    "Finding", "RULES", "lint_repo", "lint_source", "stdout_kinds",
+    "load_baseline", "save_baseline", "new_findings",
+]

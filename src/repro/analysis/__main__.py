@@ -1,0 +1,89 @@
+"""CLI: ``python -m repro.analysis`` — lint + (optionally) jaxpr audit.
+
+    python -m repro.analysis                      # lint the repo, exit != 0
+                                                  # on unsuppressed findings
+    python -m repro.analysis --policy uniform-p16 # + jaxpr-audit the default
+                                                  # arch set under a policy
+    python -m repro.analysis --policy @cal.json --arch all
+    python -m repro.analysis --root tests/fixtures/analysis   # CI fixtures
+    python -m repro.analysis --write-baseline analysis-baseline.json
+    python -m repro.analysis --baseline analysis-baseline.json
+
+Exit status is 0 iff no *new* findings: unsuppressed errors not in the
+baseline.  ``--json`` writes the full findings report for CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.base import (load_baseline, new_findings, save_baseline)
+from repro.analysis.jaxpr_audit import DEFAULT_AUDIT_ARCHS, audit_archs
+from repro.analysis.lint import lint_repo
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro numerics auditor + repo-invariant linter")
+    ap.add_argument("files", nargs="*",
+                    help="repo-relative files to lint (default: scan the repo)")
+    ap.add_argument("--root", default=".",
+                    help="repo root to lint (fixture trees mirror the repo "
+                         "layout so path-scoped rules still apply)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the findings report to this path")
+    ap.add_argument("--baseline", default=None,
+                    help="accepted-debt baseline to diff against")
+    ap.add_argument("--write-baseline", default=None,
+                    help="write current findings as the new baseline and exit 0")
+    ap.add_argument("--policy", default=None,
+                    help="run the jaxpr audit under this precision policy "
+                         "(preset name, @artifact.json, or pattern=fmt spec)")
+    ap.add_argument("--arch", default=None,
+                    help="comma list of registry archs to audit, or 'all' "
+                         f"(default: one per family: "
+                         f"{','.join(DEFAULT_AUDIT_ARCHS)})")
+    args = ap.parse_args(argv)
+
+    findings = lint_repo(args.root, files=args.files or None)
+
+    if args.policy is not None:
+        from repro.core.policy import get_precision_policy
+        policy = get_precision_policy(args.policy)
+        archs = (list(DEFAULT_AUDIT_ARCHS) if args.arch is None
+                 else ["all"] if args.arch == "all"
+                 else [a.strip() for a in args.arch.split(",") if a.strip()])
+        findings.extend(audit_archs(archs, policy))
+
+    if args.write_baseline:
+        save_baseline(args.write_baseline, findings)
+        print(f"wrote baseline ({args.write_baseline}): "
+              f"{len([f for f in findings if not f.suppressed and f.severity == 'error'])} "
+              f"fingerprints", file=sys.stderr)
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else None
+    new = new_findings(findings, baseline)
+
+    for f in findings:
+        print(f.format(), file=sys.stderr)
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump({
+                "kind": "repro/analysis-report",
+                "version": 1,
+                "n_findings": len(findings),
+                "n_new": len(new),
+                "findings": [f.to_json() for f in findings],
+            }, fh, indent=1)
+    n_warn = len([f for f in findings if f.severity == "warn"])
+    n_sup = len([f for f in findings if f.suppressed])
+    print(f"repro.analysis: {len(findings)} finding(s) "
+          f"({len(new)} new, {n_warn} warn, {n_sup} noqa)", file=sys.stderr)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

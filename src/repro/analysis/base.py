@@ -1,0 +1,73 @@
+"""Shared finding model for the linter and the jaxpr auditor.
+
+A ``Finding`` is one violation of one rule, carrying enough location to act
+on (file:line for lint, arch + layer path for jaxpr hazards) and a stable
+``fingerprint`` for the baseline mechanism: fingerprints hash the rule, the
+location *identity* (file / layer path, never the line number) and the
+offending snippet, so reordering unrelated code does not churn the baseline.
+
+Severity: ``error`` findings gate CI (CLI exits nonzero on new ones);
+``warn`` findings are reported but never fail a run — used for advisory
+hazards like single dead policy rules, where presets legitimately carry
+rules that only some model families match.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Iterable, List, Optional, Set
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str               # "RA003" | "JP001" | ...
+    path: str               # repo-relative file, or "arch:trace/layer-path"
+    message: str
+    line: int = 0           # 1-based source line; 0 = not line-anchored
+    snippet: str = ""       # offending source line / eqn text
+    severity: str = "error"  # "error" | "warn"
+    suppressed: bool = False  # silenced by `# repro: noqa=RULE`
+
+    def fingerprint(self) -> str:
+        key = f"{self.rule}|{self.path}|{self.snippet.strip() or self.message}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint()
+        return d
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        tag = {"error": "", "warn": " (warn)"}[self.severity]
+        sup = " [noqa]" if self.suppressed else ""
+        return f"{loc}: {self.rule}{tag}{sup}: {self.message}"
+
+
+def load_baseline(path: str) -> Set[str]:
+    """A baseline file is ``{"kind": "repro/analysis-baseline",
+    "fingerprints": [...]}`` — the accepted-debt list the CLI diffs against."""
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("kind") != "repro/analysis-baseline":
+        raise ValueError(f"not an analysis baseline: {d.get('kind')!r}")
+    return set(d["fingerprints"])
+
+
+def save_baseline(path: str, findings: Iterable[Finding]) -> None:
+    fps = sorted({f.fingerprint() for f in findings
+                  if not f.suppressed and f.severity == "error"})
+    with open(path, "w") as f:
+        json.dump({"kind": "repro/analysis-baseline", "version": 1,
+                   "fingerprints": fps}, f, indent=1)
+
+
+def new_findings(findings: Iterable[Finding],
+                 baseline: Optional[Set[str]] = None) -> List[Finding]:
+    """The findings that should fail a run: unsuppressed errors whose
+    fingerprint is not in the baseline."""
+    base = baseline or set()
+    return [f for f in findings
+            if not f.suppressed and f.severity == "error"
+            and f.fingerprint() not in base]

@@ -1,0 +1,382 @@
+"""AST repo-invariant linter: rules RA001-RA006 (DESIGN.md §15).
+
+Each rule encodes an invariant a past PR's review round fixed by hand; the
+registry is ruff-style (id -> checker over a parsed module), scoped by path
+globs so a rule only runs where its invariant applies.  Per-line suppression:
+
+    eng.lens += 1  # repro: noqa=RA006  <- rationale goes in a comment
+
+Suppressed findings are still collected (``suppressed=True``) so the CLI can
+report how much is being waived, but they never fail a run.
+
+``stdout_kinds`` is the single enforcement point for the DESIGN.md §14
+stdout protocol: it extracts every ``"kind"`` literal a module prints via
+``json.dumps`` — tests/test_protocol.py consumes it instead of scraping
+source with regexes (ISSUE-9 satellite).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import pathlib
+import re
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
+
+from repro.analysis.base import Finding
+
+# Directories lint_repo scans, relative to the repo root.  tests/ is
+# deliberately absent: fixtures there *seed* violations, and RA002 exempts
+# test timing by construction.
+SCAN_DIRS = ("src/repro", "benchmarks", "examples")
+
+_NOQA = re.compile(r"#\s*repro:\s*noqa=([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    check: Callable[["LintModule"], Iterator[Finding]]
+    paths: tuple  # fnmatch globs over the repo-relative posix path
+    excludes: tuple = ()
+
+    def applies(self, rel: str) -> bool:
+        if any(fnmatch.fnmatch(rel, pat) for pat in self.excludes):
+            return False
+        return any(fnmatch.fnmatch(rel, pat) for pat in self.paths)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def _rule(id: str, summary: str, paths: tuple, excludes: tuple = ()):
+    def deco(fn):
+        RULES[id] = Rule(id, summary, fn, paths, excludes)
+        return fn
+    return deco
+
+
+class LintModule:
+    """One parsed source file plus its per-line noqa map."""
+
+    def __init__(self, rel: str, source: str):
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source)
+        self.lines = source.splitlines()
+        self.noqa: Dict[int, set] = {}
+        for i, line in enumerate(self.lines, 1):
+            m = _NOQA.search(line)
+            if m:
+                self.noqa[i] = {t.strip() for t in m.group(1).split(",")}
+
+    def finding(self, rule: str, node: ast.AST, message: str,
+                severity: str = "error") -> Finding:
+        line = getattr(node, "lineno", 0)
+        snippet = self.lines[line - 1].strip() if 0 < line <= len(self.lines) \
+            else ""
+        return Finding(
+            rule=rule, path=self.rel, line=line, message=message,
+            snippet=snippet, severity=severity,
+            suppressed=rule in self.noqa.get(line, ()))
+
+
+def _call_name(node: ast.Call) -> str:
+    """Trailing name of the called function: f(...) -> "f", a.b.f(...) -> "f"."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _dotted(node: ast.expr) -> str:
+    """Best-effort dotted spelling of a Name/Attribute chain ("self.d.engine")."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# ---------------------------------------------------------------- RA001 ----
+
+# Entry points of models.layers / models.attention whose ``path=`` keyword
+# keys per-layer policy resolution AND calibration observation: a missing
+# path silently resolves the default rule and mis-keys the calib artifact.
+_PATH_ENTRY_POINTS = frozenset({
+    "apply_linear", "apply_swiglu", "apply_gelu_mlp",
+    "apply_attention", "apply_attention_dynwin", "prefill_attention",
+    "decode_attention_step", "decode_attention_step_paged",
+})
+
+
+@_rule("RA001",
+       "apply_linear / attention entry call sites must pass path=",
+       paths=("src/repro/*",))
+def _check_ra001(mod: LintModule) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name not in _PATH_ENTRY_POINTS:
+            continue
+        if any(kw.arg == "path" for kw in node.keywords):
+            continue
+        yield mod.finding(
+            "RA001", node,
+            f"{name}() without path=: per-layer policy resolution and "
+            f"calibration keying silently fall back to the default path")
+
+
+# ---------------------------------------------------------------- RA002 ----
+
+@_rule("RA002",
+       "no time.time() outside tests (perf paths use perf_counter)",
+       paths=("src/repro/*", "benchmarks/*", "examples/*"))
+def _check_ra002(mod: LintModule) -> Iterator[Finding]:
+    bare_time = any(
+        isinstance(n, ast.ImportFrom) and n.module == "time"
+        and any(a.name == "time" for a in n.names)
+        for n in ast.walk(mod.tree))
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        hit = (isinstance(f, ast.Attribute) and f.attr == "time"
+               and isinstance(f.value, ast.Name) and f.value.id == "time") \
+            or (bare_time and isinstance(f, ast.Name) and f.id == "time")
+        if hit:
+            yield mod.finding(
+                "RA002", node,
+                "time.time() is wall-clock (NTP steps backwards); timing "
+                "code uses time.perf_counter()")
+
+
+# ---------------------------------------------------------------- RA003 ----
+
+def _dict_has_kind(d: ast.expr) -> bool:
+    return (isinstance(d, ast.Dict)
+            and any(isinstance(k, ast.Constant) and k.value == "kind"
+                    for k in d.keys))
+
+
+@_rule("RA003",
+       'launch/ stdout prints are single json.dumps objects with a "kind"',
+       paths=("src/repro/launch/*",))
+def _check_ra003(mod: LintModule) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            continue
+        if any(kw.arg == "file" for kw in node.keywords):
+            continue  # stderr (or a file object) is human diagnostics
+        args = node.args
+        ok = (len(args) == 1 and isinstance(args[0], ast.Call)
+              and _call_name(args[0]) == "dumps"
+              and args[0].args and _dict_has_kind(args[0].args[0]))
+        if not ok:
+            yield mod.finding(
+                "RA003", node,
+                'stdout is the §14 protocol: print exactly one '
+                'json.dumps({...}) whose dict literal carries a "kind" key '
+                '(or route diagnostics to file=sys.stderr)')
+
+
+def stdout_kinds(paths: Iterable[str],
+                 root: Optional[str] = None) -> Dict[str, str]:
+    """Every ``"kind"`` literal printed via ``json.dumps`` in ``paths``.
+
+    Returns {kind: repo-relative file that first emits it}.  This is the
+    §14-protocol extraction tests/test_protocol.py keys on — the same AST
+    walk RA003 enforces, so the protocol has exactly one enforcement point.
+    """
+    base = pathlib.Path(root) if root else None
+    kinds: Dict[str, str] = {}
+    for rel in paths:
+        p = (base / rel) if base else pathlib.Path(rel)
+        tree = ast.parse(p.read_text())
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"
+                    and not any(kw.arg == "file" for kw in node.keywords)
+                    and node.args and isinstance(node.args[0], ast.Call)
+                    and _call_name(node.args[0]) == "dumps"
+                    and node.args[0].args):
+                continue
+            d = node.args[0].args[0]
+            if not isinstance(d, ast.Dict):
+                continue
+            for k, v in zip(d.keys, d.values):
+                if (isinstance(k, ast.Constant) and k.value == "kind"
+                        and isinstance(v, ast.Constant)
+                        and isinstance(v.value, str)):
+                    kinds.setdefault(v.value, str(rel))
+    return kinds
+
+
+# ---------------------------------------------------------------- RA004 ----
+
+@_rule("RA004",
+       "no np.savez under checkpoint/ (PR-7 GIL-stall class)",
+       paths=("src/repro/checkpoint/*",))
+def _check_ra004(mod: LintModule) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if (isinstance(f, ast.Attribute)
+                and f.attr in ("savez", "savez_compressed")
+                and isinstance(f.value, ast.Name)
+                and f.value.id in ("np", "numpy")):
+            yield mod.finding(
+                "RA004", node,
+                f"np.{f.attr} zips under the GIL and stalls the drive "
+                f"thread; checkpoints stream raw .npy members (PR-7)")
+
+
+# ---------------------------------------------------------------- RA005 ----
+
+# Engine methods that mutate serving state: calling one off the drive
+# thread races the in-flight step (DESIGN.md §14 drive-thread contract).
+_ENGINE_MUTATORS = frozenset({
+    "submit", "admit", "step", "run", "reset", "restore", "cancel",
+    "evict", "scrub_slot", "apply_policy",
+})
+
+
+def _engine_expr(node: ast.expr) -> bool:
+    """True for an Attribute chain that reaches through ``.engine``."""
+    while isinstance(node, ast.Attribute):
+        if node.attr == "engine":
+            return True
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == "engine"
+
+
+@_rule("RA005",
+       "engine mutation in server.py only inside the EngineDriver surface",
+       paths=("src/repro/launch/server.py",))
+def _check_ra005(mod: LintModule) -> Iterator[Finding]:
+    driver_spans = [
+        (n.lineno, n.end_lineno) for n in ast.walk(mod.tree)
+        if isinstance(n, ast.ClassDef) and n.name == "EngineDriver"]
+
+    def inside_driver(node) -> bool:
+        ln = getattr(node, "lineno", 0)
+        return any(lo <= ln <= hi for lo, hi in driver_spans)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                base = t.value if isinstance(t, (ast.Attribute, ast.Subscript)) \
+                    else None
+                if base is not None and _engine_expr(base) \
+                        and not inside_driver(node):
+                    yield mod.finding(
+                        "RA005", node,
+                        f"engine state written outside EngineDriver "
+                        f"({_dotted(base) or 'engine'}): route mutations "
+                        f"through the drive-thread op() queue")
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr in _ENGINE_MUTATORS
+                    and _engine_expr(f.value) and not inside_driver(node)):
+                yield mod.finding(
+                    "RA005", node,
+                    f"engine.{f.attr}() called outside EngineDriver: "
+                    f"mutating calls race the in-flight decode step — "
+                    f"enqueue through the driver instead")
+
+
+# ---------------------------------------------------------------- RA006 ----
+
+def _inplace_mutated_attrs(tree: ast.AST) -> set:
+    """Attribute names the module mutates in place: ``X.attr[...] = v`` /
+    ``X.attr[...] += v`` / ``X.attr += v``."""
+    out = set()
+    for node in ast.walk(tree):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Subscript) and isinstance(t.value, ast.Attribute):
+                out.add(t.value.attr)
+            elif isinstance(node, ast.AugAssign) and isinstance(t, ast.Attribute):
+                out.add(t.attr)
+    return out
+
+
+@_rule("RA006",
+       "no jnp.asarray aliasing of host buffers mutated in place (launch/)",
+       paths=("src/repro/launch/*",))
+def _check_ra006(mod: LintModule) -> Iterator[Finding]:
+    mutated = _inplace_mutated_attrs(mod.tree)
+    if not mutated:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "asarray"
+                and isinstance(f.value, ast.Name) and f.value.id == "jnp"):
+            continue
+        if not node.args:
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Attribute) and arg.attr in mutated:
+            yield mod.finding(
+                "RA006", node,
+                f"jnp.asarray({_dotted(arg)}) may alias the host buffer "
+                f"(zero-copy) while .{arg.attr} is mutated in place "
+                f"elsewhere — snapshot with .copy() first (PR-4 lens race)")
+
+
+# ---------------------------------------------------------------- driver ----
+
+def lint_source(source: str, rel: str,
+                rules: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint one source string as repo-relative file ``rel``.
+
+    ``rules=None`` applies every rule whose path scope matches ``rel``;
+    an explicit rule list forces those rules regardless of scope (fixture
+    tests use this).
+    """
+    mod = LintModule(rel, source)
+    out: List[Finding] = []
+    if rules is None:
+        active = [r for r in RULES.values() if r.applies(rel)]
+    else:
+        active = [RULES[rid] for rid in rules]
+    for r in active:
+        out.extend(r.check(mod))
+    return out
+
+
+def lint_repo(root: str, files: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint the repo at ``root`` (or just ``files``, repo-relative)."""
+    rootp = pathlib.Path(root)
+    if files is None:
+        files = []
+        for d in SCAN_DIRS:
+            base = rootp / d
+            if base.is_dir():
+                files.extend(
+                    str(p.relative_to(rootp)) for p in sorted(base.rglob("*.py"))
+                    if "__pycache__" not in p.parts)
+    out: List[Finding] = []
+    for rel in files:
+        rel = str(pathlib.PurePosixPath(rel))
+        out.extend(lint_source((rootp / rel).read_text(), rel))
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out

@@ -31,9 +31,12 @@ __all__ = [
 
 def __getattr__(name):
     # search imports models.layers (which imports calib.observe): load on
-    # first use instead of at package import to keep the cycle one-way
+    # first use instead of at package import to keep the cycle one-way.
+    # importlib, not ``from repro.calib import search`` — the from-import
+    # re-enters this __getattr__ before the submodule binds and recurses.
     if name in ("calibrate_model", "save_artifact", "search"):
-        from repro.calib import search
+        import importlib
 
+        search = importlib.import_module("repro.calib.search")
         return getattr(search, name) if name != "search" else search
     raise AttributeError(name)

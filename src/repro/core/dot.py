@@ -145,10 +145,16 @@ def _encode_result(y: jax.Array, fmt: Fmt, es: Optional[EsLike],
 def _quire_dot(a, b, slots, *, es_a=None, es_b=None, es_out=None,
                dimension_numbers=None, bias=None, activation="none",
                residual=None, chained=False):
-    """dataflow="quire": exact accumulation through repro.core.quire."""
+    """dataflow="quire": exact accumulation through repro.core.quire.
+
+    rs1/rs2 must be posit (float inputs have no exact quire representation);
+    rd may be a *float* format — the readout is then ``quire_read_f32``, a
+    single RNE of the exact sum straight into the FPU domain (the layer-level
+    dataflow="quire" contract: no accumulation rounding, no float matmul).
+    """
     from repro.core.quire import quire_matmul  # core->quire, no cycle w/ dot
 
-    for name, f in (("rs1", slots.rs1), ("rs2", slots.rs2), ("rd", slots.rd)):
+    for name, f in (("rs1", slots.rs1), ("rs2", slots.rs2)):
         if not isinstance(f, PositFmt):
             raise ValueError(
                 f"quire dataflow requires posit {name}, got {f}: float slots "
@@ -169,7 +175,8 @@ def _quire_dot(a, b, slots, *, es_a=None, es_b=None, es_out=None,
         es_b=slots.rs2.es if es_b is None else es_b,
         nbits_a=slots.rs1.nbits, nbits_b=slots.rs2.nbits,
     )
-    if bias is None and activation == "none" and residual is None:
+    posit_out = isinstance(slots.rd, PositFmt)
+    if posit_out and bias is None and activation == "none" and residual is None:
         # no epilogue: keep the exact quire->posit readout (single rounding
         # straight into the output format)
         return quire_matmul(

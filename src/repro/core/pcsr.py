@@ -52,6 +52,14 @@ EPILOGUES = ("fused", "chained")
 # covers the layer (everything except non-rolling sliding-window caches).
 ATTN_IMPLS = ("auto", "kernel", "xla")
 
+# Accumulation dataflows a whole-run policy can declare for its linear
+# layers (models.layers.apply_linear).  A subset of DATAFLOWS: "unfused" is
+# a benchmark baseline, not a policy anyone serves under.  "quire" routes
+# every posit-coded linear through the exact Kulisch accumulator — no float
+# dot_general at declared sites, one terminal rounding into the FPU domain —
+# and is what repro.analysis's jaxpr auditor verifies mechanically.
+POLICY_DATAFLOWS = ("fused", "quire")
+
 
 @dataclasses.dataclass(frozen=True)
 class OperandSlots:
@@ -171,8 +179,18 @@ class TransPolicy:
     # decode), "xla" keeps the full-cache-decode einsum path, "auto" picks
     # kernel wherever its contract covers the layer.
     attn_impl: str = "auto"
+    # Linear-layer accumulation dataflow (repro.core.dot): "fused" decodes
+    # into the f32/bf16 FPU matmul (the paper), "quire" accumulates every
+    # posit product exactly with one terminal rounding (PERCIVAL; DESIGN.md
+    # §7).  Applies to posit-coded plain linears; MoE expert-stack einsums
+    # and the float-master training path stay on the fused FPU datapath.
+    dataflow: str = "fused"
 
     def __post_init__(self):
+        if self.dataflow not in POLICY_DATAFLOWS:
+            raise ValueError(
+                f"policy dataflow must be one of {POLICY_DATAFLOWS}, "
+                f"got {self.dataflow!r}")
         if self.pack_weights and not (
                 self.weights is not None and self.weights.nbits == 8):
             raise ValueError(
@@ -198,10 +216,12 @@ class TransPolicy:
                    exact_collectives: bool = False,
                    codec_impl: str = "auto", epilogue: str = "fused",
                    pack_weights: bool = False, attn_impl: str = "auto",
+                   dataflow: str = "fused",
                    **roles: Optional[str]) -> "TransPolicy":
         kw = {"exact_collectives": exact_collectives,
               "codec_impl": codec_impl, "epilogue": epilogue,
-              "pack_weights": pack_weights, "attn_impl": attn_impl}
+              "pack_weights": pack_weights, "attn_impl": attn_impl,
+              "dataflow": dataflow}
         for role, name in roles.items():
             if name is None or name == "none":
                 kw[role] = None
@@ -223,7 +243,8 @@ class TransPolicy:
         d.update(compute_dtype=self.compute_dtype,
                  exact_collectives=self.exact_collectives,
                  codec_impl=self.codec_impl, epilogue=self.epilogue,
-                 pack_weights=self.pack_weights, attn_impl=self.attn_impl)
+                 pack_weights=self.pack_weights, attn_impl=self.attn_impl,
+                 dataflow=self.dataflow)
         return d
 
     @classmethod
@@ -231,7 +252,7 @@ class TransPolicy:
         """Inverse of ``to_json``; unknown keys are rejected loudly."""
         known = set(ROLES) | {"compute_dtype", "exact_collectives",
                               "codec_impl", "epilogue", "pack_weights",
-                              "attn_impl"}
+                              "attn_impl", "dataflow"}
         bad = set(d) - known
         if bad:
             raise ValueError(f"unknown TransPolicy fields {sorted(bad)}")
@@ -260,6 +281,8 @@ class TransPolicy:
             parts.append("packed_weights")
         if self.attn_impl != "auto":
             parts.append(f"attn={self.attn_impl}")
+        if self.dataflow != "fused":
+            parts.append(f"dataflow={self.dataflow}")
         return " ".join(parts)
 
 

@@ -115,7 +115,7 @@ def main(argv=None):
             res = {"arch": arch, "shape": shape,
                    "error": f"{type(e).__name__}: {str(e)[:200]}"}
             print(f"[FAIL] {arch}|{shape}: {res['error']}", file=sys.stderr)
-        print(json.dumps(res))
+        print(json.dumps({"kind": "costprobe/cell", **res}))
         if args.out_dir:
             os.makedirs(args.out_dir, exist_ok=True)
             mode = "multi" if args.multi_pod else "single"

@@ -208,10 +208,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    print(mem)
+    print(mem, file=sys.stderr)
     cost = cost_analysis_dict(compiled)
     print({k: v for k, v in cost.items()
-           if k in ("flops", "bytes accessed") and isinstance(v, (int, float))})
+           if k in ("flops", "bytes accessed") and isinstance(v, (int, float))},
+          file=sys.stderr)
 
     coll = {}
     if collect_hlo:
@@ -275,7 +276,9 @@ def main(argv=None):
             res = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
                    "error": f"{type(e).__name__}: {e}"}
             print(f"[FAIL] {tag}: {res['error']}", file=sys.stderr)
-        print(json.dumps({k: v for k, v in res.items() if k != "collectives"}))
+        print(json.dumps({"kind": "dryrun/cell",
+                          **{k: v for k, v in res.items()
+                             if k != "collectives"}}))
         if args.out_dir:
             os.makedirs(args.out_dir, exist_ok=True)
             mode = "multi" if args.multi_pod else "single"

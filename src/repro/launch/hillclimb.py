@@ -154,8 +154,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     res = run_variant(args.cell, args.variant,
                       precision_policy=args.precision_policy)
-    print(json.dumps({k: v for k, v in res.items()
-                      if not isinstance(v, (list, dict))}, indent=1))
+    print(json.dumps({"kind": "hillclimb/result",
+                      **{k: v for k, v in res.items()
+                         if not isinstance(v, (list, dict))}}))
     os.makedirs(args.out_dir, exist_ok=True)
     tag = f"{args.cell}__{args.variant}"
     if args.precision_policy:

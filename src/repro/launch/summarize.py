@@ -8,6 +8,7 @@ import argparse
 import glob
 import json
 import os
+import sys
 
 V5E_HBM_GB = 16.0
 
@@ -66,7 +67,7 @@ def main(argv=None):
         path = os.path.join(args.in_dir, f"SUMMARY_{mode}.md")
         with open(path, "w") as f:
             f.write(fmt(rows, mode))
-        print(f"wrote {path} ({len(rows)} cells)")
+        print(f"wrote {path} ({len(rows)} cells)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -85,7 +86,7 @@ def main(argv=None):
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
             history.append(m)
-            print(json.dumps(m), flush=True)
+            print(json.dumps({"kind": "train/step", **m}), flush=True)
         return {"params": p, "opt": o}
 
     state = {"params": params, "opt": opt_state}
@@ -96,19 +97,20 @@ def main(argv=None):
                                  preemption=PreemptionSignal(install_sigterm=True))
         state, start = loop.resume(state)
         if start:
-            print(f"[resume] from step {start}")
+            print(f"[resume] from step {start}", file=sys.stderr)
         t0 = time.perf_counter()
         state, nxt = loop.run(state, step_fn, start_step=start,
                               num_steps=args.steps - start)
         mgr.wait()
         mgr.close()
-        print(json.dumps({"done": nxt, "wall_s": round(time.perf_counter() - t0, 1),
+        print(json.dumps({"kind": "train/done", "done": nxt,
+                          "wall_s": round(time.perf_counter() - t0, 1),
                           **loop.stats}))
     else:
         t0 = time.perf_counter()
         for step in range(args.steps):
             state = step_fn(state, step)
-        print(json.dumps({"done": args.steps,
+        print(json.dumps({"kind": "train/done", "done": args.steps,
                           "wall_s": round(time.perf_counter() - t0, 1)}))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:

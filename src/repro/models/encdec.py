@@ -88,9 +88,10 @@ def encode(params: dict, frames: jax.Array, cfg: ModelCfg,
     def body(x, p):
         x = maybe_shard(x, "residual")
         h = apply_layernorm(p["ln1"], x)
-        x = x + attn.apply_attention(p["attn"], ecfg, h, policy)
+        x = x + attn.apply_attention(p["attn"], ecfg, h, policy, path="attn")
         h = apply_layernorm(p["ln2"], x)
-        return apply_gelu_mlp(p["mlp"], h, policy, residual=x), None
+        return apply_gelu_mlp(p["mlp"], h, policy, residual=x,
+                              path="mlp"), None
 
     fn = jax.checkpoint(body) if remat else body
     x, _ = scan_or_unroll(fn, x, params["enc_blocks"])
@@ -115,7 +116,8 @@ def decode_train(params: dict, tokens: jax.Array, enc_out: jax.Array,
         x = x + attn.apply_attention(p["cross"], ccfg, h, policy, path="cross",
                                      xattn_kv=enc_out)
         h = apply_layernorm(p["ln3"], x)
-        return apply_gelu_mlp(p["mlp"], h, policy, residual=x), None
+        return apply_gelu_mlp(p["mlp"], h, policy, residual=x,
+                              path="mlp"), None
 
     fn = jax.checkpoint(body) if remat else body
     x, _ = scan_or_unroll(fn, x, params["dec_blocks"])
@@ -188,7 +190,7 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                                             path="cross")
         x2 = x2 + a2
         h = apply_layernorm(p["ln3"], x2)
-        return apply_gelu_mlp(p["mlp"], h, policy, residual=x2), c2
+        return apply_gelu_mlp(p["mlp"], h, policy, residual=x2, path="mlp"), c2
 
     x, new_self = scan_or_unroll(
         body, x, (params["dec_blocks"], cache["self"], cache["cross"]))

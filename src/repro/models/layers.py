@@ -14,11 +14,11 @@ import jax.numpy as jnp
 
 from repro.calib import observe
 from repro.core.codec import posit_encode
-from repro.core.dot import apply_epilogue, posit_matmul_wx
-from repro.core.lut import decode_with_impl
+from repro.core.dot import apply_epilogue, posit_dot, posit_matmul_wx
+from repro.core.lut import decode_with_impl, encode_with_impl
 from repro.core.pack import pack_p8, packed_decode_p8
-from repro.core.pcsr import TransPolicy
-from repro.core.types import PositFmt
+from repro.core.pcsr import OperandSlots, TransPolicy
+from repro.core.types import F32, PositFmt
 
 
 def _compute_dtype(policy: TransPolicy):
@@ -125,6 +125,9 @@ def apply_linear(p: dict, x: jax.Array, policy: TransPolicy, es=None, *,
     if packed or "w_codes" in p:
         fmt = policy.weights
         assert fmt is not None, "posit-coded params need policy.weights"
+        if policy.dataflow == "quire":
+            return _quire_linear(p, x, policy, fmt, es, activation=activation,
+                                 residual=residual, packed=packed)
         return posit_matmul_wx(
             x.astype(cd), p["w_packed"] if packed else p["w_codes"], fmt,
             es=es, compute_dtype=cd,
@@ -137,6 +140,34 @@ def apply_linear(p: dict, x: jax.Array, policy: TransPolicy, es=None, *,
         y = apply_epilogue(y, p.get("b"), activation, residual,
                            chained=policy.epilogue == "chained")
     return y.astype(x.dtype)
+
+
+def _quire_linear(p: dict, x: jax.Array, policy: TransPolicy, fmt: PositFmt,
+                  es, *, activation: str, residual: Optional[jax.Array],
+                  packed: bool) -> jax.Array:
+    """dataflow="quire" lowering of a posit-coded linear (DESIGN.md §7/§9).
+
+    Activations encode once into ``policy.activations`` (the weight format
+    when unset), every product lands exactly in a Kulisch quire, and the
+    single terminal rounding reads out straight into f32 for the epilogue —
+    no float dot_general anywhere, which is the contract the jaxpr auditor
+    (repro.analysis) asserts mechanically at quire-declared sites.
+    """
+    afmt = policy.activations if policy.activations is not None else fmt
+    slots = OperandSlots(rs1=afmt, rs2=fmt, rd=F32, dataflow="quire",
+                         codec_impl=policy.codec_impl, rs2_packed=packed)
+    K = x.shape[-1]
+    N = (p["w_packed"] if packed else p["w_codes"]).shape[-1]
+    x2 = x.reshape(-1, K)
+    res2 = None
+    if residual is not None:
+        res2 = jnp.broadcast_to(residual, x.shape[:-1] + (N,)).reshape(-1, N)
+    a_codes = encode_with_impl(x2.astype(jnp.float32), afmt.nbits, afmt.es,
+                               policy.codec_impl)
+    y = posit_dot(a_codes, p["w_packed"] if packed else p["w_codes"], slots,
+                  es_b=es, bias=p.get("b"), activation=activation,
+                  residual=res2, epilogue=policy.epilogue)
+    return y.reshape(x.shape[:-1] + (N,)).astype(x.dtype)
 
 
 # linear-shaped param-dict keys quantize_params recognizes: the {"w": ...}

@@ -181,7 +181,8 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelCfg,
             p, win, rope = layer
             h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
             a = attn.apply_attention_dynwin(p["attn"], acfg, h, policy,
-                                            window=win, rope_base=rope)
+                                            window=win, rope_base=rope,
+                                            path="attn")
             x = x + a
             h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
             if "moe" in p:
@@ -191,7 +192,8 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelCfg,
                 y = x + y
             else:
                 # block residual fuses into the down-projection epilogue
-                y, aux_l = apply_swiglu(p["mlp"], h, policy, residual=x), 0.0
+                y, aux_l = apply_swiglu(p["mlp"], h, policy, residual=x,
+                                        path="mlp"), 0.0
             return (y, aux + aux_l), None
 
         fn = jax.checkpoint(body) if remat else body
@@ -212,9 +214,9 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelCfg,
 
         def shared_body(x, sp):
             h = apply_rmsnorm(sp["ln1"], x, cfg.norm_eps)
-            x = x + attn.apply_attention(sp["attn"], acfg, h, policy)
+            x = x + attn.apply_attention(sp["attn"], acfg, h, policy, path="attn")
             h = apply_rmsnorm(sp["ln2"], x, cfg.norm_eps)
-            return apply_swiglu(sp["mlp"], h, policy, residual=x)
+            return apply_swiglu(sp["mlp"], h, policy, residual=x, path="mlp")
 
         if remat:
             shared_body = jax.checkpoint(shared_body)
@@ -391,7 +393,7 @@ def decode_step_paged(params: dict, token_t: jax.Array, cache: dict,
         p, pool = layer
         h = apply_rmsnorm(p["ln1"], x_carry, cfg.norm_eps)
         a, pool2 = attn.decode_attention_step_paged(
-            p["attn"], acfg, h, pool, table, lens, policy)
+            p["attn"], acfg, h, pool, table, lens, policy, path="attn")
         x2 = x_carry + a
         h = apply_rmsnorm(p["ln2"], x2, cfg.norm_eps)
         if "moe" in p:
@@ -399,7 +401,7 @@ def decode_step_paged(params: dict, token_t: jax.Array, cache: dict,
                 p["moe"], h, top_k=cfg.top_k,
                 capacity_factor=cfg.capacity_factor, policy=policy)
         else:
-            y = apply_swiglu(p["mlp"], h, policy)
+            y = apply_swiglu(p["mlp"], h, policy, path="mlp")
         return x2 + y, pool2
 
     x, new_kv = scan_or_unroll(body, x, (params["blocks"], cache["kv"]))
@@ -447,18 +449,18 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                 p_eff = lens if is_global else lens % c["k"].shape[2]
                 a, c2 = attn.decode_attention_step(
                     p["attn"], a_i, h, c, p_eff, policy,
-                    rolling=not is_global, abs_pos=lens)
+                    rolling=not is_global, abs_pos=lens, path="attn")
                 kvs.append(c2)
                 x = x + a
                 h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
-                x = x + apply_swiglu(p["mlp"], h, policy)
+                x = x + apply_swiglu(p["mlp"], h, policy, path="mlp")
             new_cache["kv"] = kvs
         else:
             def body(x_carry, layer):
                 p, c = layer
                 h = apply_rmsnorm(p["ln1"], x_carry, cfg.norm_eps)
                 a, c2 = attn.decode_attention_step(p["attn"], acfg, h, c, lens,
-                                                   policy)
+                                                   policy, path="attn")
                 x2 = x_carry + a
                 h = apply_rmsnorm(p["ln2"], x2, cfg.norm_eps)
                 if "moe" in p:
@@ -466,7 +468,7 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
                         p["moe"], h, top_k=cfg.top_k,
                         capacity_factor=cfg.capacity_factor, policy=policy)
                 else:
-                    y = apply_swiglu(p["mlp"], h, policy)
+                    y = apply_swiglu(p["mlp"], h, policy, path="mlp")
                 return x2 + y, c2
             x, new_kv = scan_or_unroll(body, x, (params["blocks"], cache["kv"]))
             new_cache["kv"] = new_kv
@@ -494,11 +496,12 @@ def decode_step(params: dict, token_t: jax.Array, cache: dict, cfg: ModelCfg,
             if use_shared:
                 h = apply_rmsnorm(sp["ln1"], x, cfg.norm_eps)
                 a, c2 = attn.decode_attention_step(
-                    sp["attn"], acfg, h, cache["shared_kv"][shared_i], lens, policy)
+                    sp["attn"], acfg, h, cache["shared_kv"][shared_i], lens,
+                    policy, path="attn")
                 shared_kvs.append(c2)
                 x = x + a
                 h = apply_rmsnorm(sp["ln2"], x, cfg.norm_eps)
-                x = x + apply_swiglu(sp["mlp"], h, policy)
+                x = x + apply_swiglu(sp["mlp"], h, policy, path="mlp")
                 shared_i += 1
         new_cache["ssm"] = jax.tree.map(
             lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
@@ -563,18 +566,20 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelCfg,
                                rope_base=float(rope_arr[i]))
                 h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
                 a, c2 = attn.prefill_attention(p["attn"], a_i, h,
-                                               cache["kv"][i], policy)
+                                               cache["kv"][i], policy,
+                                               path="attn")
                 kvs.append(c2)
                 x = x + a
                 h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
-                x = x + apply_swiglu(p["mlp"], h, policy)
+                x = x + apply_swiglu(p["mlp"], h, policy, path="mlp")
             cache["kv"] = kvs
         else:
             def body(x_carry, layer):
                 p, c = layer
                 x_carry = maybe_shard(x_carry, "residual")
                 h = apply_rmsnorm(p["ln1"], x_carry, cfg.norm_eps)
-                a, c2 = attn.prefill_attention(p["attn"], acfg, h, c, policy)
+                a, c2 = attn.prefill_attention(p["attn"], acfg, h, c, policy,
+                                               path="attn")
                 x2 = x_carry + a
                 h = apply_rmsnorm(p["ln2"], x2, cfg.norm_eps)
                 if "moe" in p:
@@ -582,7 +587,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelCfg,
                         p["moe"], h, top_k=cfg.top_k,
                         capacity_factor=cfg.capacity_factor, policy=policy)
                 else:
-                    y = apply_swiglu(p["mlp"], h, policy)
+                    y = apply_swiglu(p["mlp"], h, policy, path="mlp")
                 return x2 + y, c2
             x, new_kv = scan_or_unroll(
                 jax.checkpoint(body), x, (params["blocks"], cache["kv"]))

@@ -1,0 +1,7 @@
+"""RA004 fixture: zip-under-the-GIL checkpoint writes."""
+import numpy as np
+
+
+def save(path, params):
+    np.savez(path, **params)
+    np.savez_compressed(path + ".z", **params)  # repro: noqa=RA004

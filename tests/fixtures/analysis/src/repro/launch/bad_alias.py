@@ -1,0 +1,17 @@
+"""RA006 fixture: zero-copy asarray aliasing of a mutated host buffer."""
+import jax.numpy as jnp
+import numpy as np
+
+
+class Grid:
+    def __init__(self, n):
+        self.lens = np.zeros((n,), np.int32)
+
+    def bump(self, i):
+        self.lens[i] += 1
+
+    def device_lens(self):
+        return jnp.asarray(self.lens)
+
+    def device_lens_safe(self):
+        return jnp.asarray(self.lens.copy())

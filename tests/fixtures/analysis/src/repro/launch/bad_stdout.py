@@ -1,0 +1,14 @@
+"""RA002/RA003 fixture: wall-clock timing and untagged stdout prints."""
+import json
+import sys
+import time
+
+
+def report(stats):
+    t0 = time.time()
+    print("starting run")
+    print(json.dumps(stats))
+    print(json.dumps({"elapsed": time.time() - t0}))
+    print("suppressed human diagnostics")  # repro: noqa=RA003
+    print("real diagnostics", file=sys.stderr)
+    print(json.dumps({"kind": "fixture/ok", "n": len(stats)}))

@@ -1,0 +1,14 @@
+"""RA005 fixture: engine mutation outside the EngineDriver surface."""
+
+
+class EngineDriver:
+    def __init__(self, engine):
+        self.engine = engine
+
+    def drive(self):
+        self.engine.step()  # inside the driver surface: allowed
+
+
+def hot_patch(driver, policy):
+    driver.engine.apply_policy(policy)
+    driver.engine.paused = True

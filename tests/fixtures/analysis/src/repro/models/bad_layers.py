@@ -1,0 +1,8 @@
+"""RA001 fixture: linear entry call sites missing ``path=``."""
+from repro.models.layers import apply_linear
+
+
+def forward(p, x, policy):
+    y = apply_linear(p["up"], x, policy)
+    y = apply_linear(p["down"], y, policy)  # repro: noqa=RA001
+    return apply_linear(p["out"], y, policy, path="out")

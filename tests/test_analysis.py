@@ -1,0 +1,260 @@
+"""repro.analysis: lint rules, baselines, jaxpr hazards, quire contract.
+
+Three layers of coverage:
+
+* fixtures — every RA rule fires on the seeded-violation tree under
+  ``tests/fixtures/analysis`` and is silenced by ``# repro: noqa``,
+* the merged tree itself lints clean (the CI gate, asserted in-suite so a
+  regression fails the fast tests too),
+* jaxpr hazards — synthetic positives/negatives per hazard class, plus the
+  ISSUE-9 acceptance sweep: every registry family audits clean under
+  uniform-p16, and under a quire-dataflow base every quire-declared site
+  lowers to quire dataflow (no float dot_general) with the seeded
+  unquantized violation firing.
+"""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (RULES, lint_repo, lint_source, load_baseline,
+                            new_findings, save_baseline, stdout_kinds)
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.jaxpr_audit import (DEFAULT_AUDIT_ARCHS,
+                                        audit_closed_jaxpr, audit_model,
+                                        audit_quire_sites, dead_rules)
+from repro.configs import ARCH_IDS, get_arch
+from repro.core.codec import posit_decode, posit_encode
+from repro.core.policy import (LayerRule, PRECISION_PRESETS, PrecisionPolicy,
+                               get_precision_policy)
+from repro.models.layers import apply_linear, init_linear, quantize_linear
+from repro.models.registry import build_model
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXROOT = ROOT / "tests" / "fixtures" / "analysis"
+
+UNIFORM = PRECISION_PRESETS["uniform-p16"]
+QUIRE_UNIFORM = dataclasses.replace(
+    UNIFORM, base=dataclasses.replace(UNIFORM.base, dataflow="quire"))
+
+
+# ------------------------------------------------------------- lint rules ----
+
+def _fixture_findings():
+    return lint_repo(str(FIXROOT))
+
+
+def test_every_rule_fires_on_fixtures():
+    fired = {f.rule for f in _fixture_findings() if not f.suppressed}
+    assert fired == set(RULES), (
+        f"rules registered but not proven by a fixture: {set(RULES) - fired}")
+
+
+def test_noqa_suppresses_per_line():
+    by_rule = {}
+    for f in _fixture_findings():
+        by_rule.setdefault(f.rule, []).append(f)
+    # each of these rules has one deliberate noqa line in the fixtures
+    for rule in ("RA001", "RA003", "RA004"):
+        sup = [f for f in by_rule[rule] if f.suppressed]
+        assert len(sup) == 1, (rule, [f.format() for f in by_rule[rule]])
+    # suppressed findings never count as new
+    assert all(f not in new_findings(by_rule[rule])
+               for rule in ("RA001", "RA003", "RA004")
+               for f in by_rule[rule] if f.suppressed)
+
+
+def test_rule_path_scoping():
+    # an RA004 pattern outside checkpoint/ does not fire
+    src = "import numpy as np\n\ndef f(p):\n    np.savez(p)\n"
+    assert lint_source(src, "src/repro/launch/other.py") == [] or all(
+        f.rule != "RA004" for f in lint_source(src, "src/repro/launch/other.py"))
+    assert any(f.rule == "RA004"
+               for f in lint_source(src, "src/repro/checkpoint/other.py"))
+
+
+def test_repo_tree_lints_clean():
+    """The merged tree is the zero-finding state CI gates on."""
+    assert new_findings(lint_repo(str(ROOT))) == []
+
+
+def test_stdout_kinds_extraction():
+    kinds = stdout_kinds(["src/repro/launch/bad_stdout.py"], root=str(FIXROOT))
+    assert kinds == {"fixture/ok": "src/repro/launch/bad_stdout.py"}
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings = [f for f in _fixture_findings() if not f.suppressed]
+    assert findings
+    bl = tmp_path / "baseline.json"
+    save_baseline(str(bl), findings)
+    fps = load_baseline(str(bl))
+    assert fps == {f.fingerprint() for f in findings if f.severity == "error"}
+    assert new_findings(findings, fps) == []
+    with pytest.raises(ValueError):
+        other = tmp_path / "not_baseline.json"
+        other.write_text(json.dumps({"kind": "something/else"}))
+        load_baseline(str(other))
+
+
+def test_cli_fixture_gate_and_baseline(tmp_path):
+    """The CI recipe end to end: fixtures fail, a written baseline passes."""
+    assert analysis_main(["--root", str(FIXROOT)]) == 1
+    bl = tmp_path / "bl.json"
+    assert analysis_main(["--root", str(FIXROOT),
+                          "--write-baseline", str(bl)]) == 0
+    assert analysis_main(["--root", str(FIXROOT), "--baseline", str(bl)]) == 0
+    report = tmp_path / "report.json"
+    assert analysis_main(["--root", str(FIXROOT), "--json", str(report)]) == 1
+    doc = json.loads(report.read_text())
+    assert doc["kind"] == "repro/analysis-report" and doc["n_new"] > 0
+
+
+# ------------------------------------------------------------ jaxpr audit ----
+
+def test_jp001_raw_code_arithmetic():
+    c = jax.make_jaxpr(lambda a, b: a + b)(
+        jnp.zeros((4,), jnp.uint8), jnp.ones((4,), jnp.uint8))
+    assert [f.rule for f in audit_closed_jaxpr(c)] == ["JP001"]
+
+    # decode-style bitwise field extraction kills taint: no finding
+    def dec(codes):
+        return (codes.astype(jnp.uint32) & 0x7F).astype(jnp.float32) * 2.0
+    c = jax.make_jaxpr(dec)(jnp.zeros((4,), jnp.uint8))
+    assert audit_closed_jaxpr(c) == []
+
+    # LUT-style gather indexed by codes produces clean values
+    def lut(codes, table):
+        return jnp.take(table, codes.astype(jnp.int32)) * 2.0
+    c = jax.make_jaxpr(lut)(jnp.zeros((4,), jnp.uint8), jnp.ones((256,)))
+    assert audit_closed_jaxpr(c) == []
+
+
+def test_jp003_encode_decode_churn():
+    pos = jax.make_jaxpr(
+        lambda x: posit_decode(posit_encode(x, 16, 1), 16, 1))(
+        jnp.ones((8,), jnp.float32))
+    assert "JP003" in {f.rule for f in audit_closed_jaxpr(pos)}
+
+    # the training-path STE is the deliberate exception
+    def ste(w):
+        wf = w.astype(jnp.float32)
+        qw = posit_decode(posit_encode(wf, 16, 1), 16, 1)
+        return w + jax.lax.stop_gradient(qw - wf)
+    neg = jax.make_jaxpr(ste)(jnp.ones((8,), jnp.float32))
+    assert audit_closed_jaxpr(neg) == []
+
+
+def test_jp004_narrow_accumulator():
+    pos = jax.make_jaxpr(
+        lambda a, b: jnp.matmul(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16))
+    )(jnp.ones((4, 4)), jnp.ones((4, 4)))
+    assert "JP004" in {f.rule for f in audit_closed_jaxpr(pos)}
+
+    neg = jax.make_jaxpr(
+        lambda a, b: jnp.matmul(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+    )(jnp.ones((4, 4)), jnp.ones((4, 4)))
+    assert audit_closed_jaxpr(neg) == []
+
+
+def test_jp005_callback_in_serving_executable():
+    def probed(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2
+    c = jax.make_jaxpr(probed)(jnp.ones((2,)))
+    assert [f.rule for f in audit_closed_jaxpr(c, probed=False)] == ["JP005"]
+    assert audit_closed_jaxpr(c, probed=True) == []
+
+
+def test_jp006_dead_rules():
+    cfg = get_arch("xlstm-125m").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    # one dead rule among live non-catchall ones: a warning, never a gate
+    mixed = PRECISION_PRESETS["attn-p16-mlp-p8"]
+    pol = dataclasses.replace(
+        mixed, rules=(LayerRule("*no_such_block*", mixed.base.weights),)
+        + mixed.rules)
+    fs = dead_rules(pol, params)
+    assert fs and all(f.severity == "warn" for f in fs)
+    assert any("no_such_block" in f.message for f in fs)
+    # every non-catchall rule dead: the schedule is a no-op — an error
+    pol = dataclasses.replace(
+        UNIFORM, rules=(LayerRule("*typo_a*", UNIFORM.base.weights),
+                        LayerRule("*typo_b*", UNIFORM.base.weights),
+                        LayerRule("*", UNIFORM.base.weights)))
+    fs = dead_rules(pol, params)
+    assert len(fs) == 1 and fs[0].severity == "error"
+    # presets over a real model carry no dead rules
+    assert dead_rules(UNIFORM, params) == []
+
+
+# ---------------------------------------------------------- quire contract ----
+
+def test_quire_sites_clean_and_seeded_violation_fires():
+    qf, n = audit_quire_sites("xlstm-125m", QUIRE_UNIFORM)
+    assert n > 0 and qf == []
+    # seeded violation: unquantized params at quire-declared sites degrade
+    # to a float dot_general and must fire at every site
+    qf, n = audit_quire_sites("xlstm-125m", QUIRE_UNIFORM, quantize=False)
+    assert len(qf) == n > 0
+    assert all(f.rule == "JP002" for f in qf)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_quire_contract_all_families(arch):
+    """ISSUE-9 acceptance: under uniform-p16 with dataflow="quire", every
+    registry family's quire-declared sites lower to quire dataflow — no
+    float dot_general anywhere in the traced linear."""
+    qf, n = audit_quire_sites(arch, QUIRE_UNIFORM)
+    assert n > 0, f"{arch}: no quire-declared linear sites found"
+    assert qf == [], [f.format() for f in qf]
+
+
+def test_quire_linear_numerics():
+    """The quire lowering computes the same linear (exactly-accumulated, so
+    at least as close to the float reference as the fused path)."""
+    key = jax.random.PRNGKey(3)
+    p = init_linear(key, 32, 16)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 32), jnp.float32) * 0.5
+    fmt = UNIFORM.base.weights
+    q = quantize_linear(p, fmt)
+    y_ref = x @ p["w"]
+    y_fused = apply_linear(q, x, UNIFORM.base, path="t")
+    y_quire = apply_linear(q, x, QUIRE_UNIFORM.base, path="t")
+    err_fused = float(jnp.max(jnp.abs(y_fused - y_ref)))
+    err_quire = float(jnp.max(jnp.abs(y_quire - y_ref)))
+    # both paths see the same quantized operands; quire's exact accumulation
+    # keeps it within the fused path's error envelope
+    assert err_quire <= err_fused * 1.5 + 1e-3, (err_quire, err_fused)
+    assert err_quire < 0.1
+
+
+# ------------------------------------------------------ model-level audits ----
+
+@pytest.mark.parametrize("arch", ["xlstm-125m"])
+def test_model_audit_clean_fast(arch):
+    assert audit_model(arch, UNIFORM) == []
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", DEFAULT_AUDIT_ARCHS)
+def test_model_audit_clean_per_family(arch):
+    """One arch per registry family audits clean under uniform-p16, under
+    p8-packed (dense rep only — packed lanes everywhere), and under a
+    calibrated-artifact-style mixed policy."""
+    assert audit_model(arch, UNIFORM) == []
+
+
+@pytest.mark.slow
+def test_model_audit_clean_p8_packed_and_mixed():
+    assert audit_model("phi3-mini-3.8b", PRECISION_PRESETS["p8-packed"]) == []
+    mixed = get_precision_policy("*attn*=p16_1,*mlp*=p8_0:packed,*=p16_1")
+    errors = [f for f in audit_model("phi3-mini-3.8b", mixed)
+              if f.severity == "error"]
+    assert errors == []

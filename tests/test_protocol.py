@@ -1,36 +1,41 @@
 """The stdout protocol is versioned documentation, not an accident.
 
-Every JSON line the serving CLIs print is tagged with a ``"kind"`` key and
-documented in the DESIGN.md §14 protocol table.  These tests extract the
-kind literals from the *source* of serve.py and server.py, so adding a new
-stdout line without documenting it fails CI — the table and the code
-cannot drift apart silently.
+Every JSON line the launch CLIs print is tagged with a ``"kind"`` key and
+documented in the DESIGN.md §14 protocol table.  Extraction and enforcement
+share one implementation: ``repro.analysis.lint.stdout_kinds`` walks the
+emitters' ASTs (the same walk rule RA003 lints), so adding a new stdout
+line without documenting it fails CI — the table and the code cannot drift
+apart silently — and a print that RA003 would reject never even reaches
+the kind table.
 """
 import pathlib
 import re
 
-import pytest
+from repro.analysis import lint_source, stdout_kinds
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-EMITTERS = ["src/repro/launch/serve.py", "src/repro/launch/server.py"]
-
-_KIND = re.compile(r'"kind":\s*"([a-z0-9_/-]+)"')
+EMITTERS = [
+    "src/repro/launch/serve.py",
+    "src/repro/launch/server.py",
+    "src/repro/launch/train.py",
+    "src/repro/launch/costprobe.py",
+    "src/repro/launch/dryrun.py",
+    "src/repro/launch/hillclimb.py",
+]
+_PREFIXES = "serve|server|train|costprobe|dryrun|hillclimb"
 
 
 def _emitted_kinds():
-    kinds = {}
-    for rel in EMITTERS:
-        for k in _KIND.findall((ROOT / rel).read_text()):
-            kinds.setdefault(k, rel)
-    return kinds
+    return stdout_kinds(EMITTERS, root=str(ROOT))
 
 
 def test_emitters_actually_emit_kinds():
-    """Guard the guard: if the regex ever stops matching the source, the
+    """Guard the guard: if the AST walk ever stops matching the source, the
     documentation test below would pass vacuously."""
     kinds = _emitted_kinds()
     assert "serve/report" in kinds and "server/start" in kinds
-    assert len(kinds) >= 9, sorted(kinds)
+    assert "train/step" in kinds and "dryrun/cell" in kinds
+    assert len(kinds) >= 14, sorted(kinds)
 
 
 def test_every_emitted_kind_is_documented():
@@ -48,19 +53,21 @@ def test_documented_kinds_are_emitted():
     fault-event kinds (`nar`, `stall`, ...) live inside serve/report's
     payload, not on stdout lines of their own."""
     design = (ROOT / "DESIGN.md").read_text()
-    table = re.findall(r"^\| `((?:serve|server)/[a-z0-9_-]+)` \|", design,
-                       re.MULTILINE)
+    table = re.findall(
+        rf"^\| `((?:{_PREFIXES})/[a-z0-9_-]+)` \|", design, re.MULTILINE)
     assert table, "DESIGN.md protocol table not found"
     emitted = set(_emitted_kinds())
     stale = [k for k in table if k not in emitted]
     assert not stale, f"documented but never emitted: {stale}"
 
 
-@pytest.mark.parametrize("rel", EMITTERS)
-def test_kind_lines_are_json_objects(rel):
-    """Every print() in the emitters that contains a kind tag goes through
-    json.dumps — the protocol promises parseable lines, not repr soup."""
-    src = (ROOT / rel).read_text()
-    for line_no, line in enumerate(src.splitlines(), 1):
-        if '"kind"' in line and "print(" in line:
-            assert "json.dumps" in line, (rel, line_no, line.strip())
+def test_emitter_stdout_is_protocol_clean():
+    """Every stdout print in the emitters passes RA003: exactly one
+    json.dumps of a dict literal carrying "kind" (stderr exempt).  This is
+    the same rule the repo-wide ``python -m repro.analysis`` gate runs —
+    asserted here so a protocol regression fails the fast unit suite too."""
+    for rel in EMITTERS:
+        findings = [f for f in lint_source((ROOT / rel).read_text(), rel,
+                                           rules=["RA003"])
+                    if not f.suppressed]
+        assert not findings, [f.format() for f in findings]
