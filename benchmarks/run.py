@@ -53,6 +53,7 @@ BENCHES = {
     "serving": "benchmarks.bench_serving",             # engine + attn dispatch
     "calibration": "benchmarks.bench_calibration",     # dynamic-es calibration
     "obs_overhead": "benchmarks.bench_obs_overhead",   # §12 observability cost
+    "train_obs": "benchmarks.bench_train_obs_overhead",  # §16 telemetry cost
     "recovery": "benchmarks.bench_recovery",           # §13 fault tolerance
     "prefix_cache": "benchmarks.bench_prefix_cache",   # §14 paged prefix KV
 }

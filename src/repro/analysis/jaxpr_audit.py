@@ -146,7 +146,7 @@ def _find_key(obj, depth: int) -> Optional[Tuple[str, str]]:
         for a in obj.args:
             if (isinstance(a, tuple) and len(a) == 2
                     and all(isinstance(s, str) for s in a)
-                    and a[1] in ("weight", "act")):
+                    and a[1] in ("weight", "act", "grad")):
                 return a
         for sub in (obj.func, *obj.args, *obj.keywords.values()):
             k = _find_key(sub, depth + 1)
@@ -198,10 +198,11 @@ class _Audit:
                 if not self.probed:
                     self.add(
                         "JP005",
-                        "debug_callback baked into a non-probed serving "
-                        "executable: every decode step pays a host sync "
-                        "(observers belong on the cadenced probe executable, "
-                        "DESIGN.md §12)",
+                        "debug_callback baked into a non-probed steady-state "
+                        "executable (serving decode or plain train step): "
+                        "every step pays a host sync (observers belong on "
+                        "the cadenced probe/telemetry-twin executables, "
+                        "DESIGN.md §12/§16)",
                         snippet="debug_callback")
                 continue
             for sub in _sub_jaxprs(eqn):
@@ -520,18 +521,77 @@ def dead_rules(policy, params, *, arch: str = "model") -> List[Finding]:
         snippet=f"dead:{r.pattern}", severity="warn") for r in dead]
 
 
+# ------------------------------------------------------ training executables --
+
+def trace_train_step(arch_or_cfg, policy, *, seq: int = 16,
+                     telemetry: bool = False, observed: bool = False):
+    """Trace one training executable (``make_train_step``) to a ClosedJaxpr.
+
+    ``telemetry`` selects the probed-twin builder (extra params-sized metric
+    reductions); ``observed`` traces under a three-channel observer
+    (weight/act/grad) so the §11/§16 callbacks — including the ``grad_tap``
+    cotangent hooks — bake into the executable.  The four combinations are
+    the JP005 truth table for the training plane (see ``audit_train``).
+    """
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = get_arch(arch_or_cfg).reduced() if isinstance(arch_or_cfg, str) \
+        else arch_or_cfg
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3,
+                          moment_fmt=getattr(policy, "optimizer", None))
+    opt = adamw_init(params, opt_cfg)
+    batch = calibration_batches(
+        cfg, np.random.default_rng(0), 1, batch=2, seq=seq)[0]
+    step = make_train_step(model, policy, opt_cfg, warmup=1, total_steps=4,
+                           telemetry=telemetry)
+
+    def tr(p, o, b):
+        return step(p, o, b, jnp.int32(0))
+
+    if observed:
+        obs = Observer(kinds=("weight", "act", "grad"))
+        with observing(obs):
+            return jax.make_jaxpr(tr)(params, opt, batch)
+    return jax.make_jaxpr(tr)(params, opt, batch)
+
+
+def audit_train(arch: str, policy, *, seq: int = 16) -> List[Finding]:
+    """JP005 for the training plane (plus JP001/3/4 over both executables).
+
+    The §16 probed-twin contract: the *plain* train step — the executable
+    every non-probed step runs — must carry zero ``debug_callback`` host
+    syncs, while the telemetry twin (traced under the observer, grad taps
+    live) is exempt exactly like the §12 probe trace.  A leaked observer
+    context around the plain step's trace is the seeded positive — it bakes
+    the callbacks in and fires.
+    """
+    findings = audit_closed_jaxpr(
+        trace_train_step(arch, policy, seq=seq),
+        trace=f"{arch}:train", probed=False)
+    findings += audit_closed_jaxpr(
+        trace_train_step(arch, policy, seq=seq, telemetry=True,
+                         observed=True),
+        trace=f"{arch}:train-probed", probed=True)
+    return findings
+
+
 # -------------------------------------------------------------- audit_model ---
 
 def audit_model(arch: str, policy, *, seq: int = 16,
                 s_max: int = 32) -> List[Finding]:
     """Trace + audit one registry family under ``policy``.
 
-    Two traces: ``loss`` (float params, observer markers installed — the
-    training/calibration executable, JP005-exempt) and ``decode`` (posit-
-    quantized params, the steady-state serving executable, where a
-    debug_callback is a real JP005 hazard).  Adds the JP002 quire-contract
-    sweep when any site resolves to quire dataflow, and the JP006 dead-rule
-    scan for PrecisionPolicy schedules.
+    Three trace groups: ``loss`` (float params, observer markers installed —
+    the calibration executable, JP005-exempt), ``decode`` (posit-quantized
+    params, the steady-state serving executable, where a debug_callback is a
+    real JP005 hazard), and the training pair from :func:`audit_train` (the
+    plain train step is JP005-gated like decode; the telemetry twin is
+    exempt).  Adds the JP002 quire-contract sweep when any site resolves to
+    quire dataflow, and the JP006 dead-rule scan for PrecisionPolicy
+    schedules.
     """
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
@@ -561,6 +621,8 @@ def audit_model(arch: str, policy, *, seq: int = 16,
         lambda p, t, c: model.decode_step(p, t, c, policy))(qshapes, tok, cache)
     findings += audit_closed_jaxpr(
         closed_dec, trace=f"{arch}:decode", probed=False)
+
+    findings += audit_train(arch, policy, seq=seq)
 
     if any(resolve_policy(policy, p).dataflow == "quire"
            for p, _, k in _walk_linears(params, "") if k == "w"):

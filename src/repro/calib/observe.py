@@ -32,10 +32,17 @@ numerical-health probes (``repro.obs.numerics``), which install the same
 ``Observer`` under a cadenced decode executable and read saturation /
 underflow / drift off the same histograms (DESIGN.md §12).
 
-Stats are keyed by ``(path, kind)`` with ``kind in ("weight", "act")``.  All
-depth-layers of a scanned stack share one call-site path, so their statistics
-merge into one histogram — exactly the granularity at which
+Stats are keyed by ``(path, kind)`` with ``kind in ("weight", "act",
+"grad")``.  All depth-layers of a scanned stack share one call-site path, so
+their statistics merge into one histogram — exactly the granularity at which
 ``PrecisionPolicy`` rules resolve (DESIGN.md §9/§11).
+
+The ``"grad"`` kind is the training-plane channel (DESIGN.md §16): under
+``jax.value_and_grad``, :func:`grad_tap` — a ``custom_vjp`` identity whose
+backward rule records its cotangent — streams the gradient arriving at each
+linear site's input through the same reduction.  The tap only enters the
+trace when the active observer asks for gradients, so forward-only consumers
+(calibration, serving probes) and un-observed training steps never carry it.
 """
 from __future__ import annotations
 
@@ -59,7 +66,7 @@ BIN_LO = -80
 NBINS = 130
 BIN_HI = BIN_LO + NBINS - 1
 
-KINDS = ("weight", "act")
+KINDS = ("weight", "act", "grad")
 
 
 @dataclasses.dataclass
@@ -162,14 +169,17 @@ def _stat_vec(arr: jax.Array) -> Tuple[jax.Array, jax.Array]:
 class Observer:
     """Accumulates ``TensorStats`` per ``(path, kind)`` key on the host.
 
-    ``kinds`` restricts which tensor kinds stream: calibration wants both
-    (``KINDS``, the default); the serving numerics probes pass
-    ``("act",)`` — weights are static during serving, and because the filter
-    applies at *trace* time, the skipped kinds' reductions and callbacks
-    never enter the probed executable (halving its per-step cost).
+    ``kinds`` restricts which tensor kinds stream: calibration wants weights
+    and activations (the default); the serving numerics probes pass
+    ``("act",)`` — weights are static during serving — and the training
+    telemetry probes pass ``("act", "grad")``.  Because the filter applies at
+    *trace* time, the skipped kinds' reductions and callbacks never enter the
+    probed executable.  ``"grad"`` is deliberately not in the default: it
+    inserts :func:`grad_tap` wrappers into observed forwards, which
+    forward-only consumers have no use for.
     """
 
-    def __init__(self, kinds: Tuple[str, ...] = KINDS):
+    def __init__(self, kinds: Tuple[str, ...] = ("weight", "act")):
         assert all(k in KINDS for k in kinds), kinds
         self.kinds = tuple(kinds)
         self.stats: Dict[Tuple[str, str], TensorStats] = {}
@@ -233,6 +243,41 @@ def record(path: str, kind: str, arr: jax.Array) -> None:
     """
     if _ACTIVE is not None:
         _ACTIVE.record(path, kind, arr)
+
+
+# ------------------------------------------------------------ gradient tap ----
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grad_tap(path: str, x):
+    return x
+
+
+def _grad_tap_fwd(path: str, x):
+    return x, None
+
+
+def _grad_tap_bwd(path: str, _res, g):
+    # Runs once per backward trace (custom_vjp bwd is not replayed by
+    # jax.checkpoint the way forward residual recomputation is), so the grad
+    # histogram counts every cotangent element exactly once per step.
+    record(path, "grad", g)
+    return (g,)
+
+
+_grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
+
+
+def grad_tap(path: str, x: jax.Array) -> jax.Array:
+    """Identity whose cotangent streams to the active observer's ``"grad"``
+    channel, keyed by the same ``path`` the act/weight records use.
+
+    Trace-time gated exactly like :func:`record`: when no observer wants
+    gradients the function returns ``x`` untouched and the executable carries
+    neither the custom_vjp wrapper nor the backward callback.
+    """
+    if _ACTIVE is not None and "grad" in _ACTIVE.kinds:
+        return _grad_tap(path, x)
+    return x
 
 
 def collect_stats(forward_fn, batches) -> Observer:

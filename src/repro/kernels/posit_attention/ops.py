@@ -161,8 +161,11 @@ def decode_attention(q, k_codes, v_codes, lengths, es, *, kv_bits,
 
     The ``obs.trace.named_scope`` tag makes every decode-attention dispatch
     show up under one name in ``jax.profiler`` device traces, lined up with
-    the engine's host-side request spans (DESIGN.md §12).
+    the engine's host-side request spans (DESIGN.md §12); an active
+    ``obs.prof`` profiler additionally receives one cost record per dispatch
+    (analytic bytes over the allocated S — DESIGN.md §16).
     """
+    from repro.obs import prof
     from repro.obs.trace import named_scope
 
     if rolling:
@@ -171,16 +174,23 @@ def decode_attention(q, k_codes, v_codes, lengths, es, *, kv_bits,
                               k_codes.shape[2])
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "tiled"
-    with named_scope(f"repro.decode_attention.{impl}"):
-        if impl == "pallas":
-            if interpret is None:
-                interpret = not _on_tpu()
-            return posit_decode_attention(
-                q, k_codes, v_codes, lengths, es, kv_bits=kv_bits,
-                scale=scale, block_s=block_s, interpret=interpret)
-        if impl == "tiled":
-            return posit_decode_attention_tiled(
-                q, k_codes, v_codes, lengths, es, kv_bits=kv_bits,
-                scale=scale, block_s=min(block_s, 256))
-        return posit_decode_attention_ref(
-            q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale)
+
+    def _run():
+        with named_scope(f"repro.decode_attention.{impl}"):
+            if impl == "pallas":
+                interp = interpret if interpret is not None else not _on_tpu()
+                return posit_decode_attention(
+                    q, k_codes, v_codes, lengths, es, kv_bits=kv_bits,
+                    scale=scale, block_s=block_s, interpret=interp)
+            if impl == "tiled":
+                return posit_decode_attention_tiled(
+                    q, k_codes, v_codes, lengths, es, kv_bits=kv_bits,
+                    scale=scale, block_s=min(block_s, 256))
+            return posit_decode_attention_ref(
+                q, k_codes, v_codes, lengths, es, kv_bits=kv_bits, scale=scale)
+
+    if not prof.is_active():
+        return _run()
+    return prof.dispatch(
+        "attention", impl, prof.attention_cost(q, k_codes, kv_bits=kv_bits),
+        _run, primary=q)

@@ -13,21 +13,44 @@ def _on_tpu() -> bool:
 
 def decode(codes, es, *, nbits: int, out_dtype_name="float32", impl="auto",
            interpret=None):
+    from repro.obs import prof
+
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla"
-    if impl == "pallas":
-        if interpret is None:
-            interpret = not _on_tpu()
-        return decode_kernel(codes, es, nbits=nbits, out_dtype_name=out_dtype_name,
-                             interpret=interpret)
-    return ref.decode_ref(codes, es, nbits=nbits, out_dtype_name=out_dtype_name)
+
+    def _run():
+        if impl == "pallas":
+            interp = interpret if interpret is not None else not _on_tpu()
+            return decode_kernel(codes, es, nbits=nbits,
+                                 out_dtype_name=out_dtype_name,
+                                 interpret=interp)
+        return ref.decode_ref(codes, es, nbits=nbits,
+                              out_dtype_name=out_dtype_name)
+
+    if not prof.is_active():
+        return _run()
+    vb = 2.0 if out_dtype_name == "bfloat16" else 4.0
+    return prof.dispatch(
+        "codec", f"decode/{impl}",
+        prof.codec_cost(codes, nbits=nbits, value_bytes=vb), _run,
+        primary=codes)
 
 
 def encode(x, es, *, nbits: int, impl="auto", interpret=None):
+    from repro.obs import prof
+
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla"
-    if impl == "pallas":
-        if interpret is None:
-            interpret = not _on_tpu()
-        return encode_kernel(x, es, nbits=nbits, interpret=interpret)
-    return ref.encode_ref(x, es, nbits=nbits)
+
+    def _run():
+        if impl == "pallas":
+            interp = interpret if interpret is not None else not _on_tpu()
+            return encode_kernel(x, es, nbits=nbits, interpret=interp)
+        return ref.encode_ref(x, es, nbits=nbits)
+
+    if not prof.is_active():
+        return _run()
+    return prof.dispatch(
+        "codec", f"encode/{impl}",
+        prof.codec_cost(x, nbits=nbits, value_bytes=float(x.dtype.itemsize)),
+        _run, primary=x)

@@ -58,34 +58,44 @@ def gemm(
         return fmt.es if hasattr(fmt, "es") else 0
     # profile tag: every posit-GEMM dispatch carries one scope name so
     # jax.profiler device traces line up with the serving spans (obs/trace)
+    from repro.obs import prof
     from repro.obs.trace import named_scope
 
-    with named_scope(f"repro.posit_gemm.{impl}"):
-        if impl == "pallas":
-            if interpret is None:
-                interpret = not _on_tpu()
-            es = jnp.asarray(
-                [_es(es_a, slots.rs1), _es(es_b, slots.rs2),
-                 _es(es_out, slots.rd)],
-                dtype=jnp.int32,
-            )
-            # in-kernel lane decode: the LUT gather off-TPU (interpret), the
-            # bit pipeline on Mosaic (gathers are hostile in-kernel, §8)
-            codec_impl = ("bits" if _on_tpu()
-                          else resolve_codec_impl(slots.codec_impl, 8, "decode"))
-            return posit_gemm(
-                a, b, es,
-                a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
-                bias=bias, activation=activation, residual=residual,
-                interpret=interpret, b_packed=slots.rs2_packed,
-                codec_impl=codec_impl, **block_kw,
-            )
-        if impl == "xla":
-            return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
-                             bias=bias, activation=activation,
-                             residual=residual, impl="fused")
-        if impl == "unfused":
-            return posit_dot(a, b, slots, es_a=es_a, es_b=es_b, es_out=es_out,
-                             bias=bias, activation=activation,
-                             residual=residual, impl="unfused")
-    raise ValueError(f"unknown impl {impl!r}")
+    def _run():
+        with named_scope(f"repro.posit_gemm.{impl}"):
+            if impl == "pallas":
+                interp = interpret if interpret is not None else not _on_tpu()
+                es = jnp.asarray(
+                    [_es(es_a, slots.rs1), _es(es_b, slots.rs2),
+                     _es(es_out, slots.rd)],
+                    dtype=jnp.int32,
+                )
+                # in-kernel lane decode: the LUT gather off-TPU (interpret),
+                # the bit pipeline on Mosaic (gathers are hostile in-kernel)
+                codec_impl = ("bits" if _on_tpu() else
+                              resolve_codec_impl(slots.codec_impl, 8, "decode"))
+                return posit_gemm(
+                    a, b, es,
+                    a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+                    bias=bias, activation=activation, residual=residual,
+                    interpret=interp, b_packed=slots.rs2_packed,
+                    codec_impl=codec_impl, **block_kw,
+                )
+            if impl == "xla":
+                return posit_dot(a, b, slots, es_a=es_a, es_b=es_b,
+                                 es_out=es_out, bias=bias,
+                                 activation=activation,
+                                 residual=residual, impl="fused")
+            if impl == "unfused":
+                return posit_dot(a, b, slots, es_a=es_a, es_b=es_b,
+                                 es_out=es_out, bias=bias,
+                                 activation=activation,
+                                 residual=residual, impl="unfused")
+        raise ValueError(f"unknown impl {impl!r}")
+
+    if not prof.is_active():
+        return _run()
+    return prof.dispatch(
+        "gemm", impl, prof.gemm_cost(a, b, slots, bias=bias,
+                                     residual=residual),
+        _run, primary=a)

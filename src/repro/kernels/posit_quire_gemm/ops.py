@@ -53,17 +53,29 @@ def quire_gemm(
         [_es(es_a, slots.rs1), _es(es_b, slots.rs2), _es(es_out, slots.rd)],
         dtype=jnp.int32,
     )
-    if impl == "pallas":
-        if interpret is None:
-            interpret = not _on_tpu()
-        return posit_quire_gemm(
-            a, b, es,
-            a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
-            bias=bias, activation=activation, residual=residual,
-            interpret=interpret, **block_kw,
-        )
-    if impl == "xla":
-        return posit_quire_gemm_ref(
-            a, b, es, a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
-            bias=bias, activation=activation, residual=residual)
-    raise ValueError(f"unknown impl {impl!r}")
+
+    def _run():
+        if impl == "pallas":
+            interp = interpret if interpret is not None else not _on_tpu()
+            return posit_quire_gemm(
+                a, b, es,
+                a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+                bias=bias, activation=activation, residual=residual,
+                interpret=interp, **block_kw,
+            )
+        if impl == "xla":
+            return posit_quire_gemm_ref(
+                a, b, es, a_fmt=slots.rs1, b_fmt=slots.rs2, out_fmt=slots.rd,
+                bias=bias, activation=activation, residual=residual)
+        raise ValueError(f"unknown impl {impl!r}")
+
+    from repro.obs import prof
+
+    if not prof.is_active():
+        return _run()
+    # same (M,K)x(K,N) byte/FLOP contract as the rounding GEMM: the quire
+    # changes the accumulator, not the mandatory operand traffic
+    return prof.dispatch(
+        "quire_gemm", impl, prof.gemm_cost(a, b, slots, bias=bias,
+                                           residual=residual),
+        _run, primary=a)

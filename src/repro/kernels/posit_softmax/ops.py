@@ -8,10 +8,21 @@ from repro.kernels.posit_softmax.ref import posit_softmax_ref
 
 
 def softmax(codes, es, *, nbits, impl="auto", interpret=None):
+    from repro.obs import prof
+
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl == "pallas":
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        return posit_softmax_kernel(codes, es, nbits=nbits, interpret=interpret)
-    return posit_softmax_ref(codes, es, nbits=nbits)
+
+    def _run():
+        if impl == "pallas":
+            interp = (interpret if interpret is not None
+                      else jax.default_backend() != "tpu")
+            return posit_softmax_kernel(codes, es, nbits=nbits,
+                                        interpret=interp)
+        return posit_softmax_ref(codes, es, nbits=nbits)
+
+    if not prof.is_active():
+        return _run()
+    return prof.dispatch(
+        "softmax", impl, prof.softmax_cost(codes, nbits=nbits), _run,
+        primary=codes)

@@ -90,6 +90,8 @@ class ServeConfig:
     metrics_out: Optional[str] = _f(None, "metrics snapshot JSON path "
                                           "(+ <path>.prom exposition)")
     trace_out: Optional[str] = _f(None, "Chrome-trace/Perfetto timeline path")
+    profile_out: Optional[str] = _f(None, "per-kernel roofline-attribution "
+                                          "report path (JSON + .md)")
     numerics_watch: int = _f(0, "probe every N-th decode step for posit "
                                 "saturation/underflow/NaR and drift")
     # ----- fault tolerance -----

@@ -26,6 +26,65 @@ HBM_BW = 819e9          # B/s per chip
 ICI_BW = 50e9           # B/s per link (conservative single-link)
 
 
+# ------------------------------------------------- per-kernel cost model ----
+# Analytic FLOPs / bytes-moved per kernel-family dispatch, shared between the
+# whole-step analysis below and the per-dispatch profiler (repro.obs.prof),
+# so "profiler bytes" and "roofline bytes" cannot drift apart — one formula,
+# two consumers.  Bytes are the *mandatory* HBM traffic of the fused op:
+# each operand read once at its storage width, the output written once.
+# Pure functions of shapes + per-element byte widths: callers (obs.prof)
+# extract those from the live arrays / pcsr operand slots.
+
+def gemm_cost(m: float, k: float, n: float, *, a_bytes: float, b_bytes: float,
+              out_bytes: float, bias: bool = False,
+              residual: bool = False) -> dict:
+    """(M,K) x (K,N) fused posit GEMM: decode + dot + epilogue, one launch."""
+    byts = m * k * a_bytes + k * n * b_bytes + m * n * out_bytes
+    if bias:
+        byts += 4.0 * n              # f32 bias vector read
+    if residual:
+        byts += 4.0 * m * n          # f32 residual read fused into epilogue
+    return {"flops": 2.0 * m * k * n, "bytes": float(byts)}
+
+
+def attention_decode_cost(b: float, hq: float, hkv: float, s: float,
+                          d: float, *, kv_bytes: float, q_bytes: float = 4.0,
+                          out_bytes: float = 4.0) -> dict:
+    """One flash-decode step over a (B,Hkv,S,d) posit-coded KV cache.
+
+    ``s`` is the *allocated* cache length: the analytic bound charges the
+    full slot grid (the ragged early-exit only helps past the longest live
+    row, which the profiler cannot see from shapes alone)."""
+    flops = 4.0 * b * hq * s * d     # q@k^T and p@v, 2 FLOPs/MAC each
+    byts = (b * hq * d * (q_bytes + out_bytes)    # q read + out write
+            + 2.0 * b * hkv * s * d * kv_bytes)   # K and V code streams
+    return {"flops": float(flops), "bytes": float(byts)}
+
+
+def codec_cost(n: float, *, code_bytes: float, value_bytes: float = 4.0) -> dict:
+    """Streaming encode/decode of ``n`` elements (LUT gather / bit pipeline):
+    pure memory movement — codes on one side, float values on the other."""
+    return {"flops": float(n), "bytes": float(n * (code_bytes + value_bytes))}
+
+
+def softmax_cost(rows: float, cols: float, *, code_bytes: float) -> dict:
+    """Posit-domain softmax over (rows, cols) codes: codes in, codes out;
+    ~5 vector ops per element (max, sub, exp, sum, div)."""
+    n = rows * cols
+    return {"flops": 5.0 * n, "bytes": 2.0 * n * code_bytes}
+
+
+def bound_times(flops: float, byts: float, coll_bytes: float = 0.0) -> dict:
+    """Roofline time terms for one dispatch (or one whole step) on the
+    TPU-v5e targets above, plus which term binds."""
+    terms = {"compute": flops / PEAK_FLOPS, "memory": byts / HBM_BW,
+             "collective": coll_bytes / ICI_BW}
+    dominant = max(terms, key=terms.get)
+    return {"t_compute_s": terms["compute"], "t_memory_s": terms["memory"],
+            "t_collective_s": terms["collective"], "dominant": dominant,
+            "bound_s": terms[dominant]}
+
+
 def param_count(cfg) -> tuple[float, float]:
     """(total, active) parameter counts, embedding included once."""
     d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
@@ -95,11 +154,11 @@ def analyse(rec: dict, probe: dict | None = None) -> dict:
         by = rec["bytes_per_device"]
         coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
 
-    t_compute = fl / PEAK_FLOPS
-    t_memory = by / HBM_BW
-    t_coll = coll / ICI_BW
+    bt = bound_times(fl, by, coll)
+    t_compute, t_memory, t_coll = (bt["t_compute_s"], bt["t_memory_s"],
+                                   bt["t_collective_s"])
     terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
-    dominant = max(terms, key=terms.get)
+    dominant = bt["dominant"]
     mf = model_flops(cfg, shape)
     hlo_global = fl * chips
     out = dict(rec)

@@ -57,6 +57,7 @@ guessing by field names.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 import time
@@ -368,19 +369,38 @@ def run(args: ServeConfig):
     S_max = args.s_max(cfg)
 
     metrics, tracer, numerics = _build_observability(args, policy, drift_meta)
+    profiler = None
+    if args.profile_out:
+        from repro.obs import prof
+        profiler = prof.KernelProfiler()
     rng = np.random.default_rng(args.seed)
     # telemetry flushes in finally: a crash (or an injected fault) mid-serve
     # must still leave the metrics snapshot / trace on disk for post-mortem
     try:
-        if args.continuous:
-            report, cache = _serve_continuous(args, cfg, model, params,
-                                              policy, rng, S_max,
-                                              obs=(metrics, tracer, numerics))
-            n_rows = args.max_slots or args.batch
-        else:
-            report, cache = _serve_static(args, cfg, model, params, policy,
-                                          rng, S_max)
-            n_rows = args.batch
+        with contextlib.ExitStack() as stack:
+            if profiler is not None:
+                stack.enter_context(prof.profiling(profiler))
+            t_serve0 = time.perf_counter()
+            if args.continuous:
+                report, cache = _serve_continuous(
+                    args, cfg, model, params, policy, rng, S_max,
+                    obs=(metrics, tracer, numerics))
+                n_rows = args.max_slots or args.batch
+            else:
+                report, cache = _serve_static(args, cfg, model, params,
+                                              policy, rng, S_max)
+                n_rows = args.batch
+            serve_s = time.perf_counter() - t_serve0
+
+        if profiler is not None:
+            prep = profiler.save(args.profile_out, measured_total_s=serve_s)
+            print(json.dumps({"kind": "serve/profile",
+                              "profile_out": args.profile_out,
+                              "rows": len(prep["rows"]),
+                              "dispatches": prep["totals"]["dispatches"],
+                              "bytes": prep["totals"]["bytes"],
+                              "bound_s": prep["totals"]["bound_s"],
+                              "measured_s": round(serve_s, 4)}))
 
         if numerics is not None:
             nrep = numerics.report()

@@ -58,16 +58,42 @@ def abstract_cache(model: Model, cfg: ModelCfg, shape: ShapeCfg,
 
 # -------------------------------------------------------------- train step ----
 
+def _nonfinite_count(tree) -> jax.Array:
+    """Elements that are NaN/inf (float leaves) or posit NaR (uintN code
+    leaves — the encoded-moment case) across a pytree, as one int32."""
+    tot = jnp.int32(0)
+    for x in jax.tree.leaves(tree):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            tot += jnp.sum(~jnp.isfinite(x), dtype=jnp.int32)
+        elif x.dtype in (jnp.uint8, jnp.uint16):
+            tot += jnp.sum(x == (1 << (x.dtype.itemsize * 8 - 1)),
+                           dtype=jnp.int32)
+    return tot
+
+
+def _sq_norm(tree) -> jax.Array:
+    return sum(jnp.sum(x.astype(jnp.float32) ** 2)
+               for x in jax.tree.leaves(tree))
+
+
 def make_train_step(model: Model, policy: TransPolicy, opt_cfg: AdamWConfig,
                     *, warmup: int = 100, total_steps: int = 10_000,
                     grad_sync: str = "gspmd",
                     grad_fmt: Optional[PositFmt] = None,
-                    mesh=None, microbatches: int = 1):
+                    mesh=None, microbatches: int = 1,
+                    telemetry: bool = False):
     """Returns train_step(params, opt_state, batch, step) -> (p, o, metrics).
 
     microbatches > 1: gradient accumulation over sequential microbatches
     (peak activation memory scales ~1/microbatches; grads accumulate in one
     extra params-sized f32 buffer).
+
+    telemetry=True adds params-sized reductions to the metrics dict —
+    ``update_ratio`` (||delta p|| / ||p||), ``param_norm``, and nonfinite
+    counts over the raw gradients and the new optimizer moments (posit NaR
+    codes counted for encoded moments).  Only the *probed twin* executable
+    (DESIGN.md §16) is built with this on: the plain step's metrics stay
+    byte-identical to the un-instrumented builder.
     """
 
     def loss_and_grads(params, batch):
@@ -104,12 +130,24 @@ def make_train_step(model: Model, policy: TransPolicy, opt_cfg: AdamWConfig,
                 jax.tree.map(lambda g: g * inv, grads))
 
     def apply_update(params, opt_state, grads, step, loss, metrics):
+        grad_nonfinite = _nonfinite_count(grads) if telemetry else None
         grads, gnorm = clip_by_global_norm(grads, 1.0)
         lr = cosine_warmup(step, warmup=warmup, total=total_steps)
-        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg,
-                                         lr_scale=lr)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt_cfg,
+                                           lr_scale=lr)
         out = {"loss": loss, "gnorm": gnorm, **metrics}
-        return params, opt_state, out
+        if telemetry:
+            # old and new params coexist here; XLA's donation aliasing only
+            # reuses the old buffers once these reductions are consumed
+            p_norm = jnp.sqrt(_sq_norm(params))
+            upd = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                new_params, params)
+            out["param_norm"] = p_norm
+            out["update_ratio"] = jnp.sqrt(_sq_norm(upd)) / (p_norm + 1e-12)
+            out["grad_nonfinite"] = grad_nonfinite
+            out["opt_nonfinite"] = _nonfinite_count(new_opt["mu"])
+        return new_params, new_opt, out
 
     if grad_sync == "gspmd":
         def train_step(params, opt_state, batch, step):

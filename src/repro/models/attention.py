@@ -18,6 +18,7 @@ from repro.core.codec import posit_decode, posit_encode
 from repro.core.pcsr import TransPolicy
 from repro.kernels.posit_attention import ops as attn_ops
 from repro.models.layers import apply_linear, apply_rope, init_linear
+from repro.obs import prof
 from repro.models.unroll import scan_or_unroll, unrolled
 
 NEG_INF = -1e30
@@ -336,10 +337,11 @@ def decode_attention_step_paged(params: dict, cfg: AttnCfg, x_t: jax.Array,
     new_pool["v"] = _store_paged(pool["v"], vn.transpose(0, 2, 1, 3),
                                  bids, offs, policy)
     fmt = policy.kv_cache
-    out = attn_ops.posit_decode_attention_paged(
-        q.reshape(B, H, hd), new_pool["k"], new_pool["v"], block_table,
-        lens + 1, fmt.es if fmt is not None else 0,
-        kv_bits=fmt.nbits if fmt is not None else 0)
+    with prof.site(path):
+        out = attn_ops.posit_decode_attention_paged(
+            q.reshape(B, H, hd), new_pool["k"], new_pool["v"], block_table,
+            lens + 1, fmt.es if fmt is not None else 0,
+            kv_bits=fmt.nbits if fmt is not None else 0)
     y = apply_linear(params["wo"], out.reshape(B, 1, H * hd).astype(x_t.dtype),
                      policy, path=f"{path}/wo")
     return y, new_pool
@@ -417,12 +419,13 @@ def decode_attention_step(params: dict, cfg: AttnCfg, x_t: jax.Array,
     impl = resolve_attn_impl(policy, cfg, rolling=rolling)
     if impl == "kernel":
         fmt = policy.kv_cache
-        out = attn_ops.decode_attention(
-            q.reshape(B, H, hd),
-            new_cache["k"], new_cache["v"], lens,
-            fmt.es if fmt is not None else 0,
-            kv_bits=fmt.nbits if fmt is not None else 0,
-            rolling=rolling)
+        with prof.site(path):
+            out = attn_ops.decode_attention(
+                q.reshape(B, H, hd),
+                new_cache["k"], new_cache["v"], lens,
+                fmt.es if fmt is not None else 0,
+                kv_bits=fmt.nbits if fmt is not None else 0,
+                rolling=rolling)
         out = out.reshape(B, 1, H * hd)
     else:
         k = _load(new_cache["k"], policy)   # (B,Hkv,T,hd)

@@ -120,6 +120,38 @@ def apply_linear(p: dict, x: jax.Array, policy: TransPolicy, es=None, *,
     policy = resolve_policy(policy, path)
     if observe.is_active():
         observe.record(path, "act", x)
+        # training-plane channel (DESIGN.md §16): the cotangent dL/dx
+        # arriving at this site streams to the "grad" histogram under
+        # value_and_grad — a no-op unless the observer asked for gradients
+        x = observe.grad_tap(path, x)
+    from repro.obs import prof
+    if not prof.is_active():
+        return _linear_resolved(p, x, policy, es, activation=activation,
+                                residual=residual, path=path)
+    # per-layer roofline attribution (DESIGN.md §16): the XLA-fused linear
+    # is the same GEMM contract the pallas kernel implements, so it records
+    # under the "gemm" family with this site's path; quire-dataflow linears
+    # additionally hit the codec/quire entry-point hooks downstream
+    packed = "w_packed" in p
+    coded = packed or "w_codes" in p
+    fmt = policy.weights
+    w_bytes = float(fmt.storage_bytes) if coded and fmt is not None else 4.0
+    wkey = "w_packed" if packed else ("w_codes" if "w_codes" in p else "w")
+    impl = ("quire" if coded and policy.dataflow == "quire"
+            else "xla" if not coded else "fused")
+    return prof.dispatch(
+        "gemm", impl,
+        prof.linear_cost(x, float(p[wkey].shape[-1]), w_bytes=w_bytes,
+                         bias="b" in p, residual=residual is not None),
+        lambda: _linear_resolved(p, x, policy, es, activation=activation,
+                                 residual=residual, path=path),
+        primary=x, path=path)
+
+
+def _linear_resolved(p: dict, x: jax.Array, policy: TransPolicy, es, *,
+                     activation: str, residual: Optional[jax.Array],
+                     path: str) -> jax.Array:
+    """apply_linear past policy resolution + observability hooks."""
     cd = _compute_dtype(policy)
     packed = "w_packed" in p
     if packed or "w_codes" in p:

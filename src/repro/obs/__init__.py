@@ -1,6 +1,6 @@
-"""Serving-plane observability (DESIGN.md §12).
+"""Serving- and training-plane observability (DESIGN.md §12/§16).
 
-Three layers, wired through ``launch/engine.py`` and ``launch/serve.py``:
+Wired through ``launch/engine.py``, ``launch/serve.py``, ``launch/train.py``:
 
 * :mod:`repro.obs.metrics`  — zero-dependency counters / gauges / histograms
   with exact percentile readout, JSON snapshot + Prometheus exposition.
@@ -9,10 +9,18 @@ Three layers, wired through ``launch/engine.py`` and ``launch/serve.py``:
 * :mod:`repro.obs.numerics` — posit numerical-health probes (saturation /
   underflow / NaR rates) and calibration-drift detection against the
   histograms stored in a ``@cal.json`` artifact.
+* :mod:`repro.obs.train`    — training-plane telemetry: gradient/activation
+  histograms from the probed-twin train step, step-health JSONL log,
+  drift-latched ``recalibrate`` flag.
+* :mod:`repro.obs.prof`     — per-kernel cost profiler: call counts,
+  analytic bytes/FLOPs from the roofline cost model, measured dispatch wall
+  time, per-layer-path attribution report.
 """
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                MetricsRegistry, RollingRate, percentile,
                                percentile_ms)
 from repro.obs.numerics import (NumericsWatcher, drift_score,  # noqa: F401
                                 drift_threshold, load_baselines)
+from repro.obs.prof import KernelProfiler, profiling  # noqa: F401
 from repro.obs.trace import TraceRecorder, annotate, named_scope  # noqa: F401
+from repro.obs.train import JsonlStepLog, TrainingTelemetry  # noqa: F401

@@ -170,6 +170,10 @@ class SiteHealth:
     drift_threshold: Optional[float]
     drifted: bool
     check_id: int = 0              # watcher.checks when this row was scored
+    # training-plane fields (populated when the watcher observes "grad";
+    # None on act-only serving probes — to_dict keeps them out of snapshots)
+    grad_rms: Optional[float] = None       # RMS cotangent magnitude at site
+    grad_nonfinite: Optional[float] = None  # nonfinite cotangent elements
 
     @property
     def nar_rate(self) -> float:
@@ -181,6 +185,9 @@ class SiteHealth:
         d = dataclasses.asdict(self)
         d.pop("path")
         d["nar_rate"] = self.nar_rate
+        if self.grad_rms is None and self.grad_nonfinite is None:
+            d.pop("grad_rms")
+            d.pop("grad_nonfinite")
         return d
 
 
@@ -199,18 +206,26 @@ class NumericsWatcher:
 
     def __init__(self, policy=None, baselines: Optional[Dict[str, TensorStats]]
                  = None, *, every: int = 1024, confidence: float = 0.999,
-                 min_score: float = 0.1, window: bool = True):
+                 min_score: float = 0.1, window: bool = True,
+                 kinds: Tuple[str, ...] = ("act",),
+                 self_baseline: bool = False):
         if every < 1:
             raise ValueError(f"probe cadence must be >= 1, got {every}")
-        # act only: weights are static during serving, and filtering at trace
-        # time keeps their reductions+callbacks out of the probed executable
-        self.observer = Observer(kinds=("act",))
+        # serving default is act only: weights are static during serving, and
+        # filtering at trace time keeps their reductions+callbacks out of the
+        # probed executable.  The training telemetry passes ("act", "grad") —
+        # grad windows feed the grad_rms/grad_nonfinite health fields.
+        self.observer = Observer(kinds=kinds)
         self.policy = policy
         self.baselines = dict(baselines or {})
         self.every = every
         self.confidence = confidence
         self.min_score = min_score
         self.window = window       # False: every check scores the full run
+        # self_baseline: a site with no artifact baseline adopts its first
+        # scored window as the baseline (training runs without a calibration
+        # artifact still get drift detection against their own warm start)
+        self.self_baseline = self_baseline
         self.probes = 0            # probed steps executed
         self.checks = 0
         self.recalibrate = False
@@ -233,10 +248,10 @@ class NumericsWatcher:
     def rebase(self) -> None:
         """Advance the window marks past everything observed so far without
         scoring it — drivers call this after engine warmup so compile-time
-        probe traffic (dummy prompts) doesn't pollute the first real window."""
-        for path in self.observer.paths():
-            st = self.observer.get(path, "act")
-            self._mark[(path, "act")] = (st.n, st.hist.copy(), st.nonfinite)
+        probe traffic (dummy prompts/batches) doesn't pollute the first real
+        window."""
+        for key, st in self.observer.stats.items():
+            self._mark[key] = (st.n, st.hist.copy(), st.nonfinite, st.sum_sq)
 
     # -- readout --------------------------------------------------------------
     def _site_fmt(self, path: str):
@@ -247,18 +262,26 @@ class NumericsWatcher:
         pol = resolve(path) if resolve is not None else pol
         return pol.weights
 
-    def _window_stats(self, path: str) -> TensorStats:
+    def _window_stats(self, path: str, kind: str = "act") -> TensorStats:
         """Stats accumulated since the previous check (or run start)."""
-        st = self.observer.get(path, "act")
+        st = self.observer.get(path, kind)
         cur = TensorStats()
         if st is None:
             return cur
-        prev = self._mark.get((path, "act")) if self.window else None
+        prev = self._mark.get((path, kind)) if self.window else None
         cur.n = st.n - (prev[0] if prev else 0.0)
         cur.hist = st.hist - (prev[1] if prev else 0.0)
         cur.nonfinite = st.nonfinite - (prev[2] if prev else 0.0)
+        cur.sum_sq = st.sum_sq - (prev[3] if prev else 0.0)
         cur.zeros = cur.n - float(cur.hist.sum()) - cur.nonfinite
         return cur
+
+    def _advance_mark(self, path: str) -> None:
+        for kind in self.observer.kinds:
+            st = self.observer.get(path, kind)
+            if st is not None:
+                self._mark[(path, kind)] = (st.n, st.hist.copy(),
+                                            st.nonfinite, st.sum_sq)
 
     def check(self) -> Dict[str, SiteHealth]:
         """Score the window since the last check; advances the window mark.
@@ -284,20 +307,31 @@ class NumericsWatcher:
             score = thresh = None
             drifted = False
             base = self.baselines.get(path)
-            if base is not None:
+            if base is None and self.self_baseline and nz > 0:
+                # first scored window becomes this site's baseline: training
+                # runs without a calibration artifact still get drift
+                # detection anchored at their own warm start (the driver
+                # rebase()s past compile/warmup traffic first)
+                self.baselines[path] = cur
+            elif base is not None:
                 score, k = drift_score(cur, base)
                 thresh = drift_threshold(
                     nz, float(base.hist.sum()), k,
                     confidence=self.confidence, min_score=self.min_score)
                 drifted = bool(score > thresh)
             self.recalibrate |= drifted
+            g_rms = g_nf = None
+            if "grad" in self.observer.kinds:
+                g = self._window_stats(path, "grad")
+                if g.n > 0:
+                    g_rms = float(np.sqrt(max(g.sum_sq, 0.0) / g.n))
+                    g_nf = g.nonfinite
             health[path] = SiteHealth(
                 path=path, n=cur.n, saturation_rate=sat, underflow_rate=uf,
                 nonfinite=cur.nonfinite, drift_score=score,
                 drift_threshold=thresh, drifted=drifted,
-                check_id=self.checks)
-            st = self.observer.get(path, "act")
-            self._mark[(path, "act")] = (st.n, st.hist.copy(), st.nonfinite)
+                check_id=self.checks, grad_rms=g_rms, grad_nonfinite=g_nf)
+            self._advance_mark(path)
         self.health.update(health)
         return health
 

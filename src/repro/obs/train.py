@@ -1,0 +1,278 @@
+"""Training-plane telemetry: gradient/activation numerics + step health.
+
+DESIGN.md §16.  The serving plane watches a frozen model's activations drift
+away from calibration (§12); during training *everything* moves — the
+activations because the data does, the gradients because the loss landscape
+does, the optimizer state because both do.  :class:`TrainingTelemetry`
+composes the existing observability substrate into the training loop's
+probed-twin pattern:
+
+* the driver compiles its train step twice — once plain, once traced under
+  ``telemetry.observing()`` with ``make_train_step(..., telemetry=True)`` —
+  and routes every ``every``-th step through the probed twin.  The twin's
+  executable carries the §11 ``Observer`` callbacks for *both* channels:
+  activation histograms at every linear site, plus gradient histograms from
+  the ``grad_tap`` cotangent hooks (``calib.observe``), and the extra
+  params-sized step metrics (update/param ratio, nonfinite counts).  The
+  plain step stays byte-identical to an unobserved build — the same
+  trace-time gating §12 relies on, now audited for training executables by
+  JP005.
+* drift is scored by the same G-test machinery (``obs.numerics``) against
+  the calibration artifact's per-site histograms when one is given, or
+  against the run's own first probed window (``self_baseline``) when not;
+  one drifted site latches ``recalibrate`` — the signal the ROADMAP's
+  calibration-in-the-loop item consumes.
+* per-step records (loss, grad-norm, update ratio, nonfinite counts) buffer
+  as *device* scalars on the step path and are converted + written to a
+  bounded JSONL log only at probe boundaries — the host sync and file I/O
+  happen off the step path, which is what keeps
+  ``benchmarks/bench_train_obs_overhead.py`` under its 5% gate.
+* everything surfaces through the ``obs.metrics`` registry: Prometheus
+  exposition + the JSON snapshot ``launch/train.py --metrics-out`` writes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.numerics import NumericsWatcher, load_baselines
+
+__all__ = ["TrainingTelemetry", "JsonlStepLog"]
+
+
+class JsonlStepLog:
+    """Bounded, buffered JSONL sink for per-step records.
+
+    ``append`` only queues (no I/O); ``flush`` serializes and writes.  After
+    ``max_records`` written records the log stops growing and counts drops
+    instead — a runaway training job must not fill the disk with telemetry.
+    """
+
+    def __init__(self, path: str, *, max_records: int = 65536):
+        self.path = path
+        self.max_records = max_records
+        self.written = 0
+        self.dropped = 0
+        self._buf: list = []
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "w")
+
+    def append(self, rec: dict) -> None:
+        if self.written + len(self._buf) >= self.max_records:
+            self.dropped += 1
+            return
+        self._buf.append(rec)
+
+    def flush(self) -> None:
+        if self._buf:
+            self._f.write("".join(json.dumps(r) + "\n" for r in self._buf))
+            self._f.flush()
+            self.written += len(self._buf)
+            self._buf = []
+
+    def close(self) -> None:
+        self.flush()
+        self._f.close()
+
+    def stats(self) -> dict:
+        return {"path": self.path, "records": self.written,
+                "dropped": self.dropped, "max_records": self.max_records}
+
+
+def _scalar(v):
+    """Device scalar -> python float (deferred host sync happens here)."""
+    try:
+        return float(np.asarray(v))
+    except (TypeError, ValueError):
+        return None
+
+
+class TrainingTelemetry:
+    """Probed-twin training telemetry: numerics, step health, drift latch.
+
+    Parameters mirror :class:`~repro.obs.numerics.NumericsWatcher` where they
+    overlap.  ``baselines`` may be a path to a ``@cal.json`` calibration
+    artifact, a parsed dict of per-site ``TensorStats``, or ``None`` —
+    without an artifact every site self-baselines on its first probed window
+    (after :meth:`rebase`, so warmup/compile traffic is excluded).
+    """
+
+    def __init__(self, policy=None, *, baselines=None, every: int = 64,
+                 check_every: int = 4, metrics: Optional[MetricsRegistry]
+                 = None, log_path: Optional[str] = None,
+                 max_log_records: int = 65536, confidence: float = 0.999,
+                 min_score: float = 0.1):
+        if isinstance(baselines, str):
+            baselines = load_baselines(baselines)
+        self.watcher = NumericsWatcher(
+            policy, baselines, every=every, confidence=confidence,
+            min_score=min_score, kinds=("act", "grad"), self_baseline=True)
+        self.policy = policy
+        self.every = every
+        self.check_every = max(int(check_every), 1)
+        self.steps = 0
+        self.log = (JsonlStepLog(log_path, max_records=max_log_records)
+                    if log_path else None)
+        self._pending: list = []       # device-scalar records awaiting drain
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_steps = m.counter("train_steps_total", "train steps executed")
+        self._m_probes = m.counter("train_probes_total",
+                                   "steps routed through the probed twin")
+        self._m_checks = m.counter("train_drift_checks_total",
+                                   "drift checks scored")
+        self._m_nonfinite = m.counter(
+            "train_nonfinite_total",
+            "nonfinite elements seen (labels: grad, opt)")
+        self._m_loss = m.gauge("train_loss", "last drained training loss")
+        self._m_gnorm = m.gauge("train_grad_norm", "last global grad norm")
+        self._m_ratio = m.gauge("train_update_ratio",
+                                "last ||delta p|| / ||p||")
+        self._m_recal = m.gauge("train_recalibrate",
+                                "1 once any site drifts (latched)")
+        self._m_drift = m.gauge("train_max_drift_score",
+                                "max per-site KL vs baseline")
+        self._m_quire_sat = m.gauge(
+            "train_quire_saturation",
+            "max saturation rate across quire-dataflow sites")
+        self._m_step_s = m.histogram("train_step_seconds",
+                                     "wall time per train step")
+
+    # -- driver hooks (mirror the engine's NumericsWatcher surface) -----------
+    def should_probe(self, step: int) -> bool:
+        return self.watcher.should_probe(step)
+
+    def observing(self):
+        """Trace the probed-twin executable under this context."""
+        return self.watcher.observing()
+
+    def rebase(self) -> None:
+        self.watcher.rebase()
+
+    # -- per-step path ---------------------------------------------------------
+    def on_step(self, step: int, metrics: dict, *,
+                step_s: Optional[float] = None,
+                probed: bool = False) -> Optional[dict]:
+        """Record one executed step; returns a drift event dict when this
+        step's check latched new drift (the driver emits ``train/drift``).
+
+        ``metrics`` is the step function's output dict — device scalars are
+        kept un-synced until the next probe-boundary drain.
+        """
+        self.steps += 1
+        self._m_steps.inc()
+        if step_s is not None:
+            self._m_step_s.observe(step_s)
+        rec = {"step": int(step), "probed": bool(probed)}
+        if step_s is not None:
+            rec["step_s"] = round(step_s, 6)
+        rec.update(metrics)
+        self._pending.append(rec)
+        if not probed:
+            return None
+        self.watcher.note_probe()
+        self._m_probes.inc()
+        event = None
+        if self.watcher.probes % self.check_every == 0:
+            event = self._check()
+        self._drain()
+        return event
+
+    def _check(self) -> Optional[dict]:
+        already = {p for p, h in self.watcher.health.items() if h.drifted}
+        health = self.watcher.check()
+        self._m_checks.inc()
+        self._update_gauges()
+        fresh = sorted(p for p, h in health.items()
+                       if h.drifted and p not in already)
+        if not fresh:
+            return None
+        return {
+            "drifted": fresh,
+            "recalibrate": True,
+            "check": self.watcher.checks,
+            "scores": {p: {"score": health[p].drift_score,
+                           "threshold": health[p].drift_threshold}
+                       for p in fresh},
+        }
+
+    def _update_gauges(self) -> None:
+        w = self.watcher
+        self._m_recal.set(1.0 if w.recalibrate else 0.0)
+        scores = [h.drift_score for h in w.health.values()
+                  if h.drift_score is not None]
+        if scores:
+            self._m_drift.set(max(scores))
+        sat = self.quire_saturation()
+        if sat is not None:
+            self._m_quire_sat.set(sat)
+
+    def _drain(self) -> None:
+        """Convert pending device scalars and ship them (off the step path:
+        called at probe boundaries and from report/close)."""
+        for rec in self._pending:
+            out = {}
+            for k, v in rec.items():
+                out[k] = v if isinstance(v, (int, bool, str)) else _scalar(v)
+            if self.log is not None:
+                self.log.append(out)
+            if out.get("loss") is not None:
+                self._m_loss.set(out["loss"])
+            if out.get("gnorm") is not None:
+                self._m_gnorm.set(out["gnorm"])
+            if out.get("update_ratio") is not None:
+                self._m_ratio.set(out["update_ratio"])
+            for key, label in (("grad_nonfinite", "grad"),
+                               ("opt_nonfinite", "opt")):
+                if out.get(key):
+                    self._m_nonfinite.inc(out[key], label=label)
+        self._pending = []
+        if self.log is not None:
+            self.log.flush()
+
+    # -- readout ---------------------------------------------------------------
+    def quire_saturation(self) -> Optional[float]:
+        """Max activation saturation rate across quire-dataflow sites (the
+        values that clamp to maxpos *before* entering the exact accumulator
+        — the quire cannot recover what the encode already lost)."""
+        pol = self.policy
+        if pol is None:
+            return None
+        resolve = getattr(pol, "policy_for", None)
+        rates = []
+        for path, h in self.watcher.health.items():
+            site_pol = resolve(path) if resolve is not None else pol
+            if getattr(site_pol, "dataflow", None) == "quire" \
+                    and h.saturation_rate is not None:
+                rates.append(h.saturation_rate)
+        return max(rates) if rates else None
+
+    @property
+    def recalibrate(self) -> bool:
+        return self.watcher.recalibrate
+
+    def report(self) -> dict:
+        """JSON block merged into the metrics snapshot (drains first so the
+        report covers every executed step)."""
+        self._drain()
+        numerics = self.watcher.report()
+        self._update_gauges()
+        return {
+            "steps": self.steps,
+            "telemetry_every": self.every,
+            "check_every_probes": self.check_every,
+            "quire_saturation": self.quire_saturation(),
+            "numerics": numerics,
+            "log": self.log.stats() if self.log is not None else None,
+        }
+
+    def close(self) -> None:
+        self._drain()
+        if self.log is not None:
+            self.log.close()

@@ -171,6 +171,25 @@ def test_jp005_callback_in_serving_executable():
     assert audit_closed_jaxpr(c, probed=True) == []
 
 
+def test_jp005_training_executables():
+    """§16 probed-twin contract: the plain train step audits callback-free,
+    the telemetry twin (grad taps live) is exempt, and a leaked observer
+    context around the plain step's trace is the seeded positive."""
+    from repro.analysis.jaxpr_audit import audit_train, trace_train_step
+
+    # negative: plain step clean, probed twin exempt — one call covers both
+    assert audit_train("xlstm-125m", UNIFORM) == []
+
+    # positive: tracing the plain step inside observing() bakes the §11
+    # callbacks (including grad_tap cotangent hooks) into the steady-state
+    # executable — JP005, attributed to a layer path via the marker keys
+    fs = audit_closed_jaxpr(
+        trace_train_step("xlstm-125m", UNIFORM, observed=True),
+        trace="xlstm-125m:train", probed=False)
+    assert fs and {f.rule for f in fs} == {"JP005"}
+    assert any("/" in f.path for f in fs), [f.path for f in fs]
+
+
 def test_jp006_dead_rules():
     cfg = get_arch("xlstm-125m").reduced()
     params = build_model(cfg).init(jax.random.PRNGKey(0))
